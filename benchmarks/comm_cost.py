@@ -1,0 +1,77 @@
+"""Table 1 analog: communication interval & volume per model per round.
+
+Volume is exact (2 × parameter bytes per participant per round, as in the
+paper's upload+download accounting), reported for every assigned full-scale
+architecture; the int8-compressed volume (beyond-paper) is shown alongside.
+Interval is measured on the CPU-scale smoke run (wall time of a T_0-epoch
+round) and, for the full configs, derived from the dry-run compute terms.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.compression import compressed_bytes
+from repro.launch import analytic
+from repro.launch.steps import params_shapes
+
+
+def volume_rows(quiet=False):
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = params_shapes(cfg, jnp.bfloat16)
+        nbytes = sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(shapes))
+        comp = compressed_bytes(shapes)
+        rows.append({"arch": arch, "params": sum(
+            v.size for v in jax.tree.leaves(shapes)),
+            "volume_mb_per_round": 2 * nbytes / 2 ** 20,
+            "volume_int8_mb": 2 * comp / 2 ** 20})
+        if not quiet:
+            r = rows[-1]
+            print(f"table1,{arch},params={r['params']:,},"
+                  f"vol={r['volume_mb_per_round']:.0f}MB,"
+                  f"vol_int8={r['volume_int8_mb']:.0f}MB", flush=True)
+    return rows
+
+
+def interval_rows(archs=("internlm2-1.8b",), T0=1, quiet=False):
+    """Measured smoke-scale round interval + the ILE doubling effect."""
+    from benchmarks.harness import run_colearn
+    from repro.data.synthetic import lm_examples
+    from repro.models import transformer as tr
+
+    rows = []
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        x, y = lm_examples(0, 400, 32, cfg.vocab_size)
+
+        def init_fn(key, cfg=cfg):
+            return tr.init_params(key, cfg, jnp.float32)
+
+        def apply_fn(params, xb, cfg=cfg):
+            logits, _ = tr.forward(params, cfg, {"tokens": xb})
+            return logits[:, -1]                      # last-token classifier
+
+        r = run_colearn(init_fn, apply_fn, (x, y[:, -1]), (x[:100], y[:100, -1]),
+                        K=5, rounds=3, T0=T0, epsilon=1.0,   # force ILE fire
+                        batch_size=8, seed=0)
+        rows.append({"arch": arch, "round_s": r["round_s"], "T": r["T"]})
+        if not quiet:
+            print(f"table1_interval,{arch},round_s="
+                  f"{['%.1f' % s for s in r['round_s']]},T={r['T']}",
+                  flush=True)
+    return rows
+
+
+def main():
+    rows = volume_rows()
+    rows += interval_rows()
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Shared harness for the paper-claims benchmarks: runs vanilla-learning
+(centralized), ensemble-learning, and co-learning (any CLR/ELR × ILE/FLE
+combo) on a classification task and reports accuracy per round."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CoLearnConfig
+from repro.core.colearn import CoLearner
+from repro.core.ensemble import ensemble_accuracy
+from repro.data.partition import partition_arrays
+from repro.data.pipeline import ParticipantData
+from repro.models.layers import softmax_xent
+
+
+def cls_loss(apply_fn):
+    def loss_fn(params, batch):
+        x, y = batch
+        logits = apply_fn(params, x)
+        loss = softmax_xent(logits[:, None, :], y[:, None])
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def accuracy(apply_fn, params, x, y, bs=256):
+    correct = n = 0
+    for i in range(0, len(x), bs):
+        lg = apply_fn(params, jnp.asarray(x[i:i + bs]))
+        correct += int((jnp.argmax(lg, -1) == jnp.asarray(y[i:i + bs])).sum())
+        n += len(x[i:i + bs])
+    return correct / n
+
+
+def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
+                eta0=0.02, epsilon=0.02, schedule="clr", epochs_rule="ile",
+                batch_size=32, seed=0, steps_cap=0):
+    """Returns dict with per-round accuracy, controller history, comm stats."""
+    x, y = train
+    shards = partition_arrays([x, y], K, seed)
+    data = ParticipantData(shards, batch_size, seed)
+    ccfg = CoLearnConfig(n_participants=K, T0=T0, eta0=eta0, epsilon=epsilon,
+                         schedule=schedule, epochs_rule=epochs_rule,
+                         max_rounds=rounds)
+    learner = CoLearner(ccfg, cls_loss(apply_fn))
+    params = init_fn(jax.random.PRNGKey(seed))
+    state = learner.init(params)
+    accs, Ts, times = [], [], []
+    for i in range(rounds):
+        t0 = time.time()
+
+        def eb(i_, j_):
+            bx, by = data.epoch_batches(i_, j_)
+            if steps_cap:
+                bx, by = bx[:, :steps_cap], by[:, :steps_cap]
+            return (jnp.asarray(bx), jnp.asarray(by))
+
+        state = learner.run_round(state, eb)
+        times.append(time.time() - t0)
+        Ts.append(state["log"][-1].T)
+        accs.append(accuracy(apply_fn, learner.shared_model(state), *test))
+    return {"acc": accs, "T": Ts, "round_s": times,
+            "comm_bytes": state["log"][0].comm_bytes,
+            "history": state["ctrl"].history,
+            "final_params": learner.shared_model(state), "state": state,
+            "learner": learner}
+
+
+def run_vanilla(init_fn, apply_fn, train, test, *, epochs=6, eta0=0.02,
+                batch_size=32, seed=0, schedule="elr", steps_cap=0):
+    """Centralized baseline: K=1, all data, ELR (paper's vanilla setting)."""
+    out = run_colearn(init_fn, apply_fn, train, test, K=1, rounds=epochs,
+                      T0=1, eta0=eta0, epsilon=0.0, schedule=schedule,
+                      epochs_rule="fle", batch_size=batch_size, seed=seed,
+                      steps_cap=steps_cap)
+    return out
+
+
+def run_ensemble(init_fn, apply_fn, train, test, *, K=5, epochs=6, eta0=0.02,
+                 batch_size=32, seed=0, steps_cap=0):
+    """Paper's ensemble baseline: independent local training, avg outputs."""
+    x, y = train
+    shards = partition_arrays([x, y], K, seed)
+    data = ParticipantData(shards, batch_size, seed)
+    ccfg = CoLearnConfig(n_participants=K, T0=epochs, eta0=eta0,
+                         epsilon=0.0, schedule="clr", epochs_rule="fle",
+                         max_rounds=1)
+    learner = CoLearner(ccfg, cls_loss(apply_fn))
+    state = learner.init(init_fn(jax.random.PRNGKey(seed)))
+
+    # one "round" of T0=epochs local epochs, but NO averaging: grab the
+    # participant replicas right before aggregation
+    def eb(i_, j_):
+        bx, by = data.epoch_batches(i_, j_)
+        if steps_cap:
+            bx, by = bx[:, :steps_cap], by[:, :steps_cap]
+        return (jnp.asarray(bx), jnp.asarray(by))
+
+    cfg = learner.cfg
+    for j in range(cfg.T0):
+        from repro.core.schedule import round_lr
+        lr = float(round_lr(cfg, 0, j, cfg.T0, j, cfg.T0))
+        batches = eb(0, j)
+        state["params"], state["opt"], _ = learner._jit_epoch(
+            state["params"], state["opt"], batches, lr)
+    xt, yt = test
+    acc = float(ensemble_accuracy(lambda p, b: apply_fn(p, b),
+                                  state["params"], jnp.asarray(xt),
+                                  jnp.asarray(yt)))
+    # per-participant local accuracies for reference
+    local = [accuracy(apply_fn, jax.tree.map(lambda t: t[k], state["params"]),
+                      xt, yt) for k in range(K)]
+    return {"acc": acc, "local_acc": local}

@@ -1,0 +1,41 @@
+"""Quickstart: co-learning (the paper's Algorithm 1) in ~40 lines.
+
+Five "data centers" each hold a disjoint shard of a synthetic LM corpus;
+they train locally with the cyclical learning rate (Eq. 3), the server
+averages parameters (Eq. 2) and doubles local epochs when the shared model
+stabilizes (Eq. 4).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import CoLearnConfig
+from repro.core.colearn import CoLearner
+from repro.data.partition import partition_arrays
+from repro.data.pipeline import ParticipantData
+from repro.data.synthetic import lm_examples
+from repro.models import transformer as tr
+
+cfg = get_smoke_config("internlm2-1.8b")           # reduced dense GQA model
+x, y = lm_examples(seed=0, n=600, seq_len=32, vocab=cfg.vocab_size)
+data = ParticipantData(partition_arrays([x, y], K=5, seed=0), batch_size=8)
+
+learner = CoLearner(
+    CoLearnConfig(n_participants=5, T0=1, eta0=0.05, epsilon=0.05,
+                  schedule="clr", epochs_rule="ile", max_rounds=4),
+    loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
+)
+state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+
+for i in range(4):
+    state = learner.run_round(
+        state, lambda i_, j_: tuple(map(jnp.asarray, data.epoch_batches(i_, j_))))
+    log = state["log"][-1]
+    print(f"round {log.round}: T_i={log.T} lr {log.lr_first:.3f}->{log.lr_last:.4f}"
+          f" loss={np.mean(log.local_losses):.3f} |Δw̄|/|w̄|={log.rel_change:.4f}"
+          f" next_T={state['ctrl'].T} comm={log.comm_bytes/2**20:.1f}MiB")
+
+print("shared model params:", tr.count_params(learner.shared_model(state)))

@@ -1,0 +1,86 @@
+"""Pytree checkpointing (npz) + co-learning round-state persistence.
+
+No orbax offline; this is a compact, dependency-free implementation with
+path-keyed flat storage so checkpoints survive refactors of dict ordering.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def jnp_astype(arr, dtype):
+    """astype that tolerates ml_dtypes targets numpy can't cast to."""
+    try:
+        return arr.astype(dtype)
+    except (TypeError, ValueError):
+        import jax.numpy as jnp
+        return np.asarray(jnp.asarray(arr).astype(dtype))
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz can't round-trip ml_dtypes
+            key += "::bf16"
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore_pytree(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for pth, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        if key + "::bf16" in flat:
+            import ml_dtypes
+            arr = flat[key + "::bf16"].view(ml_dtypes.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jnp_astype(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def save_round_state(path: str, state):
+    """Persist the co-learning server state (params + controller)."""
+    save_pytree(path + ".params.npz", state["params"])
+    meta = {"round": state["round"], "global_epoch": state["global_epoch"],
+            "T": state["ctrl"].T, "epsilon": state["ctrl"].epsilon,
+            "rule": state["ctrl"].rule,
+            "history": list(state["ctrl"].history)}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_round_state(path: str, state):
+    from repro.core.schedule import EpochController
+    state["params"] = restore_pytree(path + ".params.npz", state["params"])
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    state["round"] = meta["round"]
+    state["global_epoch"] = meta["global_epoch"]
+    state["ctrl"] = EpochController(
+        meta["T"], meta["epsilon"], meta["rule"],
+        tuple(tuple(h) for h in meta["history"]))
+    return state

@@ -1,0 +1,141 @@
+"""Algorithm 1 — the co-learning protocol.
+
+The global-server logic (round state, Eq. 4 T_i control, failure restarts)
+is plain Python; the heavy steps (K-participant local SGD epochs, Eq. 2
+averaging) are jitted JAX. The same `CoLearner` drives both the simulation
+path (K participants vmapped on one host — used by every paper-claims
+experiment) and the production path (K = pods, `spmd_axis_name='pod'`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import averaging
+from repro.core.schedule import EpochController, relative_change, round_lr
+from repro.optim.optimizers import apply_updates, get_optimizer
+
+
+@dataclass
+class RoundLog:
+    round: int
+    T: int
+    lr_first: float
+    lr_last: float
+    rel_change: float
+    local_losses: list
+    comm_bytes: int
+
+
+@dataclass
+class CoLearner:
+    """K-participant co-learning driver.
+
+    loss_fn(params, batch) -> (loss, metrics) for ONE participant.
+    data: per-participant iterables of epochs; see ``run_round``.
+    """
+    cfg: Any                                  # CoLearnConfig
+    loss_fn: Callable
+    optimizer_name: str = "sgd"
+    compress_fn: Optional[Callable] = None    # stacked params -> stacked params
+
+    def __post_init__(self):
+        self.opt = get_optimizer(self.optimizer_name)
+        self._jit_epoch = jax.jit(self._epoch, static_argnames=())
+        self._jit_avg = jax.jit(averaging.average_pjit)
+
+    # -- one SGD epoch for all K participants (vmapped) ---------------------
+    def _epoch(self, stacked_params, opt_state, batches, lr):
+        """batches: (K, n_batches, ...) pytree; one full local epoch."""
+        def one_participant(params, ostate, pbatches):
+            def step(carry, batch):
+                params, ostate = carry
+                (loss, _), grads = jax.value_and_grad(
+                    self.loss_fn, has_aux=True)(params, batch)
+                upd, ostate = self.opt.update(grads, ostate, params, lr)
+                return (apply_updates(params, upd), ostate), loss
+            (params, ostate), losses = jax.lax.scan(
+                step, (params, ostate), pbatches)
+            return params, ostate, losses.mean()
+        return jax.vmap(one_participant)(stacked_params, opt_state, batches)
+
+    # -- Algorithm 1 ---------------------------------------------------------
+    def init(self, params):
+        K = self.cfg.n_participants
+        stacked = averaging.stack_participants(params, K)
+        opt_state = jax.vmap(self.opt.init)(stacked)
+        ctrl = EpochController(self.cfg.T0, self.cfg.epsilon,
+                               self.cfg.epochs_rule)
+        return {"params": stacked, "opt": opt_state, "ctrl": ctrl,
+                "round": 0, "global_epoch": 0, "prev_avg": None, "log": []}
+
+    def total_epochs_budget(self):
+        # used by the ELR baseline's anneal denominator
+        return max(self.cfg.T0 * self.cfg.max_rounds, 1)
+
+    def param_bytes(self, state):
+        one = averaging.unstack_participant(state["params"], 0)
+        return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(one))
+
+    def run_round(self, state, epoch_batches_fn):
+        """One communication round.
+
+        epoch_batches_fn(round, epoch) -> (K, n_batches, B, ...) pytree for
+        that local epoch (each participant sees only its own disjoint shard —
+        the data never crosses participants, only parameters do).
+        """
+        cfg = self.cfg
+        i = state["round"]
+        T_i = state["ctrl"].T
+        lrs = []
+        losses = []
+        for j in range(T_i):
+            lr = float(round_lr(cfg, i, j, T_i, state["global_epoch"],
+                                self.total_epochs_budget()))
+            lrs.append(lr)
+            batches = epoch_batches_fn(i, j)
+            params, opt, l = self._jit_epoch(
+                state["params"], state["opt"], batches, lr)
+            state["params"], state["opt"] = params, opt
+            state["global_epoch"] += 1
+            losses.append(jax.device_get(l))
+
+        # -- upload + aggregate (Eq. 2); optional beyond-paper compression --
+        uploaded = state["params"]
+        if self.compress_fn is not None:
+            uploaded = self.compress_fn(uploaded)
+        averaged = self._jit_avg(uploaded)
+        new_avg = averaging.unstack_participant(averaged, 0)
+
+        rel = (float("inf") if state["prev_avg"] is None
+               else relative_change(new_avg, state["prev_avg"]))
+        state["prev_avg"] = jax.device_get(new_avg)
+        state["ctrl"] = state["ctrl"].update(rel)
+        state["params"] = averaged
+        # opt state intentionally NOT averaged (each participant restarts
+        # from the shared model; paper resets local training each round)
+        state["opt"] = jax.vmap(self.opt.init)(averaged)
+
+        # comm volume: each participant uploads + downloads the full model
+        comm = 2 * self.param_bytes(state)
+        state["round"] = i + 1
+        state["log"].append(RoundLog(i, T_i, lrs[0], lrs[-1], rel,
+                                     [float(x.mean()) for x in losses], comm))
+        return state
+
+    def shared_model(self, state):
+        return averaging.unstack_participant(state["params"], 0)
+
+    # -- failure handling (paper: restart the participant's local training) --
+    def restart_participant(self, state, k):
+        """Reset participant k's replica to the current shared model."""
+        shared = self.shared_model(state)
+        def put(t, s):
+            return t.at[k].set(s)
+        state["params"] = jax.tree.map(put, state["params"], shared)
+        return state

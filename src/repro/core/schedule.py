@@ -1,0 +1,70 @@
+"""Learning-rate schedules (Eq. 3) and local-epoch controllers (Eq. 4).
+
+CLR — the paper's "modified cyclical learning rate": within round *i* the
+rate decays exponentially from the shared η^i over the round's T_i epochs,
+``η_j^i = η^i · r^(j/T_i)`` (r = 1/4), and *restarts* at η^i when the next
+round begins — the cycle period is the communication round itself.
+
+ELR — the non-cyclical ablation baseline: the same exponential anneal but
+over *global* epochs, never restarting.
+
+ILE — Eq. 4: double T_i when the relative change of the averaged model
+falls to ≤ ε; FLE keeps T_i = T_0 (the FedAvg-style ablation baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def clr_lr(eta_i: float, decay_rate: float, epoch_j, T_i):
+    """Eq. 3: η_j^i = η^i · r^(j/T_i). epoch_j may be traced."""
+    return eta_i * decay_rate ** (epoch_j / T_i)
+
+
+def elr_lr(eta_0: float, decay_rate: float, global_epoch, total_epochs):
+    """Non-cyclical baseline: one long anneal over the whole run."""
+    return eta_0 * decay_rate ** (global_epoch / total_epochs)
+
+
+def round_lr(colearn_cfg, round_i: int, epoch_j, T_i: int, global_epoch,
+             total_epochs: int):
+    """The per-epoch learning rate under the configured schedule."""
+    if colearn_cfg.schedule == "clr":
+        return clr_lr(colearn_cfg.eta0, colearn_cfg.decay_rate, epoch_j, T_i)
+    return elr_lr(colearn_cfg.eta0, colearn_cfg.decay_rate, global_epoch,
+                  max(total_epochs, 1))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 controller
+# ---------------------------------------------------------------------------
+@dataclass
+class EpochController:
+    """Server-side state deciding T_i each round (Eq. 4)."""
+    T: int
+    epsilon: float
+    rule: str = "ile"                 # ile | fle
+    history: tuple = ()               # (round, rel_change, T) log
+
+    def update(self, rel_change: float) -> "EpochController":
+        """Called after round i computed w̄^i; returns controller for i+1."""
+        T = self.T
+        if self.rule == "ile" and rel_change <= self.epsilon:
+            T = 2 * self.T
+        return dataclasses.replace(
+            self, T=T, history=self.history + ((rel_change, T),))
+
+
+def relative_change(new_avg, old_avg) -> float:
+    """‖w̄^i − w̄^{i−1}‖ / ‖w̄^{i−1}‖ over the flattened parameter pytree."""
+    num = 0.0
+    den = 0.0
+    for a, b in zip(jax.tree.leaves(new_avg), jax.tree.leaves(old_avg)):
+        d = (a.astype(jnp.float32) - b.astype(jnp.float32))
+        num += float(jnp.sum(d * d))
+        den += float(jnp.sum(b.astype(jnp.float32) ** 2))
+    return (num ** 0.5) / max(den ** 0.5, 1e-12)

@@ -1,0 +1,22 @@
+"""K-way disjoint data partitioning (paper: "randomly allocated to 5
+participants in an equally distributed manner"). Participants never see
+each other's shard — only parameters cross the WAN."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def partition(n: int, K: int, seed: int = 0):
+    """Random equal disjoint split. Returns list of K index arrays; drops
+    the n % K remainder (paper uses exactly-equal shards)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    per = n // K
+    return [perm[k * per:(k + 1) * per] for k in range(K)]
+
+
+def partition_arrays(arrays, K: int, seed: int = 0):
+    """Apply the same disjoint split to every array in a tuple/list."""
+    n = len(arrays[0])
+    idx = partition(n, K, seed)
+    return [[a[i] for a in arrays] for i in idx]

@@ -1,0 +1,41 @@
+"""Batching pipeline: per-participant, per-epoch shuffled batch stacks.
+
+Produces the (K, n_batches, B, ...) arrays the vmapped participant step
+consumes. Host-side numpy; deterministic in (seed, round, epoch).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ParticipantData:
+    """Holds K disjoint shards; yields stacked epoch batches."""
+
+    def __init__(self, shards, batch_size: int, seed: int = 0):
+        # shards: list of K lists of arrays, all same leading length per k
+        self.shards = shards
+        self.K = len(shards)
+        self.B = batch_size
+        self.seed = seed
+        n = min(len(s[0]) for s in shards)
+        self.n_batches = n // batch_size
+        assert self.n_batches > 0, "shard smaller than one batch"
+
+    def epoch_batches(self, round_i: int, epoch_j: int):
+        """(K, n_batches, B, ...) tuple of arrays for one local epoch."""
+        out = [[] for _ in self.shards[0]]
+        for k, shard in enumerate(self.shards):
+            rng = np.random.default_rng(
+                (self.seed, k, round_i, epoch_j, 0xC0))
+            perm = rng.permutation(len(shard[0]))[: self.n_batches * self.B]
+            for a_i, a in enumerate(shard):
+                out[a_i].append(a[perm].reshape(
+                    self.n_batches, self.B, *a.shape[1:]))
+        return tuple(np.stack(x) for x in out)
+
+    def full(self, k=None):
+        """All data of participant k (or concatenated) for evaluation."""
+        if k is not None:
+            return self.shards[k]
+        return [np.concatenate([s[i] for s in self.shards])
+                for i in range(len(self.shards[0]))]

@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+impl semantics:
+  * "ref"     — pure-jnp oracle (default on CPU; also what the dry-run
+                lowers, since Mosaic custom-calls need a TPU backend);
+  * "pallas"  — the real kernel; automatically falls back to interpret
+                mode when the backend is not TPU (bit-accurate kernel-body
+                execution in Python — how tests validate the kernels here);
+  * "interpret" — force interpret mode explicitly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mlstm as _ml
+from repro.kernels import quantize as _qz
+from repro.kernels import ref as _ref
+from repro.kernels import selective_scan as _ss
+
+
+def _interp(impl):
+    if impl == "interpret":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, n_kv_heads, window=0, softmax_scale=None,
+                    impl="pallas", **kw):
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, n_kv_heads=n_kv_heads,
+                                        window=window,
+                                        softmax_scale=softmax_scale)
+    return _fa.flash_attention_fwd(q, k, v, n_kv_heads=n_kv_heads,
+                                   window=window, softmax_scale=softmax_scale,
+                                   interpret=_interp(impl), **kw)
+
+
+def selective_scan(xc, dt, Bm, Cm, A, D, *, impl="pallas", **kw):
+    if impl == "ref":
+        return _ref.selective_scan_ref(xc, dt, Bm, Cm, A, D)
+    return _ss.selective_scan_fwd(xc, dt, Bm, Cm, A, D,
+                                  interpret=_interp(impl), **kw)
+
+
+def mlstm(q, k, v, ig, fg, *, impl="pallas", **kw):
+    if impl == "ref":
+        return _ref.mlstm_ref(q, k, v, ig, fg)
+    h = _ml.mlstm_fwd(q, k, v, ig, fg, interpret=_interp(impl), **kw)
+    return h, None
+
+
+def quantize_blockwise(x, *, block=256, impl="pallas", **kw):
+    if impl == "ref":
+        return _ref.quantize_blockwise_ref(x, block=block)
+    return _qz.quantize_blockwise_fwd(x, block=block,
+                                      interpret=_interp(impl), **kw)
+
+
+def dequantize_blockwise(q, scale, shape, *, impl="pallas", **kw):
+    if impl == "ref":
+        return _ref.dequantize_blockwise_ref(q, scale, shape)
+    return _qz.dequantize_blockwise_fwd(q, scale, shape,
+                                        interpret=_interp(impl), **kw)

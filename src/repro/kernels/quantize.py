@@ -1,0 +1,67 @@
+"""Blockwise int8 quant/dequant — Pallas TPU kernel (comm compression).
+
+Used by the beyond-paper compressed model-averaging path: parameters are
+flattened, padded, and quantized in VMEM-resident tiles of (rows × block)
+with one f32 absmax scale per block row. Tiles are (8, 256) by default —
+8 sublanes × 256 lanes (two 128-lane vregs), a natural VPU shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+ROWS = 8
+
+
+def _q_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (ROWS, block)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # (ROWS, 1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dq_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def quantize_blockwise_fwd(x, *, block=DEFAULT_BLOCK, interpret=False):
+    """x: any shape -> (q int8 (nblocks, block), scale f32 (nblocks,), shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // block)
+    nb = -(-nb // ROWS) * ROWS                          # pad rows to ROWS
+    flat = jnp.pad(flat, (0, nb * block - n))
+    xb = flat.reshape(nb, block)
+    q, s = pl.pallas_call(
+        _q_kernel,
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+                   pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q, s[:, 0], x.shape
+
+
+def dequantize_blockwise_fwd(q, scale, shape, *, interpret=False):
+    nb, block = q.shape
+    x = pl.pallas_call(
+        _dq_kernel,
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, scale[:, None])
+    n = 1
+    for s in shape:
+        n *= s
+    return x.reshape(-1)[:n].reshape(shape)

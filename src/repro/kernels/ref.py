@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are intentionally naive (materialize full score matrices, sequential
+scans) — clarity over speed. Tests sweep shapes/dtypes asserting the Pallas
+kernels (interpret=True on CPU) match these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, n_kv_heads, window=0, softmax_scale=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd*) -> (B,Sq,H,hd_v). Causal."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], n_kv_heads
+    G = H // KV
+    scale = softmax_scale or hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qpos, kpos = jnp.arange(Sq), jnp.arange(Sk)
+    ok = kpos[None, :] <= qpos[:, None] + (Sk - Sq)
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] + (Sk - Sq) - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def selective_scan_ref(xc, dt, Bm, Cm, A, D, h0=None):
+    """Sequential Mamba scan; identical math to models.mamba (re-exported)."""
+    from repro.models.mamba import selective_scan_ref as _impl
+    return _impl(xc, dt, Bm, Cm, A, D, h0)
+
+
+def mlstm_ref(q, k, v, ig, fg, state=None):
+    """Sequential stabilized mLSTM; identical math to models.xlstm."""
+    from repro.models.xlstm import mlstm_cell_ref as _impl
+    return _impl(q, k, v, ig, fg, state)
+
+
+def quantize_blockwise_ref(x, block=256):
+    """x: any shape -> (q int8 (nblocks, block), scale f32 (nblocks,), shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, x.shape
+
+
+def dequantize_blockwise_ref(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)

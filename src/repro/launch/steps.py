@@ -1,0 +1,145 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape).
+
+``long_500k`` policy (DESIGN.md §4): SSM/hybrid run natively; DeepSeek's MLA
+latent cache is ~0.6 GB at 524k so it also runs natively (the latent *is*
+the compression); pure full-attention dense/vlm/audio archs switch to the
+first-class sliding-window variant (window 4096).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape
+from repro.models import transformer as tr
+from repro.optim.optimizers import apply_updates, get_optimizer
+
+LONG_WINDOW = 4096
+# families whose long-context decode needs the SWA carve-in
+SWA_AT_500K = {"dense", "vlm", "audio"}
+
+
+def config_for_shape(cfg, shape: InputShape):
+    """Apply per-shape config adjustments (the SWA carve-in)."""
+    if shape.name == "long_500k" and cfg.family in SWA_AT_500K:
+        return cfg.with_(window=LONG_WINDOW)
+    return cfg
+
+
+def params_shapes(cfg, dtype=jnp.bfloat16):
+    """Abstract (ShapeDtypeStruct) params — no allocation."""
+    return jax.eval_shape(
+        lambda k: tr.init_params(k, cfg, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_shapes(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(tr.init_cache, cfg, batch, seq_len, dtype))
+
+
+def input_specs(cfg, shape: InputShape, participants: int = 0,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for the step's data inputs.
+
+    train/prefill -> batch dict; decode -> (cache, token, pos).
+    participants > 0 stacks a leading K dim (co-learning variant).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    lead = (participants,) if participants else ()
+    if participants:
+        assert B % participants == 0
+        B = B // participants
+
+    if shape.kind in ("train", "prefill"):
+        S_tok = S - (cfg.prefix_len if cfg.input_mode == "tokens+prefix" else 0)
+        batch = {"tokens": jax.ShapeDtypeStruct((*lead, B, S_tok), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((*lead, B, S), jnp.int32)}
+        if cfg.input_mode == "tokens+prefix":
+            batch["prefix"] = jax.ShapeDtypeStruct(
+                (*lead, B, cfg.prefix_len, cfg.d_model), dtype)
+        return batch
+
+    cache = cache_shapes(cfg, B, S, dtype)
+    if participants:
+        cache = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct((participants, *v.shape), v.dtype),
+            cache)
+    token = jax.ShapeDtypeStruct((*lead, B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"cache": cache, "token": token, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg, optimizer="sgd", lr=0.01, lowering="scan",
+                    impl="ref", remat=True, microbatch=1):
+    """Paper-faithful local step: SGD on the LM loss.
+
+    (params, batch) -> (params, loss). microbatch>1 scans over gradient-
+    accumulation slices of the global batch (numerically identical SGD step,
+    M× lower activation memory — the production memory knob)."""
+    opt = get_optimizer(optimizer)
+
+    def grad_of(params, b):
+        return jax.value_and_grad(
+            lambda p: tr.loss_fn(p, cfg, b, lowering, impl, remat),
+            has_aux=True)(params)
+
+    def train_step(params, batch):
+        if microbatch > 1:
+            mb = jax.tree.map(
+                lambda t: t.reshape(microbatch, t.shape[0] // microbatch,
+                                    *t.shape[1:]), batch)
+
+            def acc(g, b):
+                (loss, _), gi = grad_of(params, b)
+                return jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g, gi), loss
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            grads, losses = jax.lax.scan(acc, g0, mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = losses.mean()
+        else:
+            (loss, _), grads = grad_of(params, batch)
+        upd, _ = opt.update(grads, opt.init(params), params, lr)
+        return apply_updates(params, upd), loss
+
+    return train_step
+
+
+def make_colearn_train_step(cfg, **kw):
+    """One local step for every participant: vmapped over the leading K dim,
+    pinned to the `pod` mesh axis so gradient reductions stay intra-pod."""
+    from repro.sharding.constrain import batch_axes
+    step = make_train_step(cfg, **kw)
+    vstep = jax.vmap(step, spmd_axis_name="pod")
+
+    def wrapped(params, batch):
+        # the vmap consumes the pod axis; in-model "dp" hints must not
+        with batch_axes(("data",)):
+            return vstep(params, batch)
+    return wrapped
+
+
+def make_average_step():
+    """Eq. 2 over the leading participant dim (all-reduce over `pod`)."""
+    from repro.core.averaging import average_pjit
+    return average_pjit
+
+
+def make_prefill_step(cfg, lowering="scan", impl="ref"):
+    def prefill_step(params, batch):
+        return tr.prefill(params, cfg, batch, lowering, impl)
+    return prefill_step
+
+
+def make_serve_step(cfg, lowering="scan"):
+    def serve_step(params, cache, token, pos):
+        return tr.decode_step(params, cfg, cache, token, pos, lowering)
+    return serve_step

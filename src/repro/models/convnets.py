@@ -1,0 +1,198 @@
+"""Compact conv/recurrent classifiers for the paper-claims experiments.
+
+The paper's testbeds (VGG/ResNet/DenseNet/Inception on CIFAR, LSTM/Capsule
+on text, CRNN on audio) are reproduced as same-family reduced JAX models:
+  * vgg_tiny / resnet_tiny / densenet_tiny — image task (Table 2 analog)
+  * gru_text / transformer_text           — text task  (Table 4 analog)
+  * crnn_{ap,mp,sa,ma}                    — audio task (Table 6 analog:
+                                            avg/max pooling, single/multi attention)
+All are ``init(key, ...) -> params`` / ``apply(params, x) -> logits``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_init(key, k, cin, cout):
+    return trunc_normal(key, (k, k, cin, cout), (k * k * cin) ** -0.5,
+                        jnp.float32)
+
+
+def _dense_init(key, din, dout):
+    return {"w": trunc_normal(key, (din, dout), din ** -0.5, jnp.float32),
+            "b": jnp.zeros(dout)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Image models
+# ---------------------------------------------------------------------------
+def vgg_tiny_init(key, n_classes=10, c=24, cin=3):
+    ks = jax.random.split(key, 4)
+    return {"c1": _conv_init(ks[0], 3, cin, c), "c2": _conv_init(ks[1], 3, c, 2 * c),
+            "c3": _conv_init(ks[2], 3, 2 * c, 2 * c),
+            "head": _dense_init(ks[3], 2 * c, n_classes)}
+
+
+def vgg_tiny_apply(p, x):
+    x = jax.nn.relu(_conv(x, p["c1"], 2))
+    x = jax.nn.relu(_conv(x, p["c2"], 2))
+    x = jax.nn.relu(_conv(x, p["c3"], 1))
+    return _dense(p["head"], x.mean((1, 2)))
+
+
+def resnet_tiny_init(key, n_classes=10, c=24, cin=3):
+    ks = jax.random.split(key, 5)
+    return {"c1": _conv_init(ks[0], 3, cin, c),
+            "r1": _conv_init(ks[1], 3, c, c), "r2": _conv_init(ks[2], 3, c, c),
+            "c2": _conv_init(ks[3], 3, c, 2 * c),
+            "head": _dense_init(ks[4], 2 * c, n_classes)}
+
+
+def resnet_tiny_apply(p, x):
+    x = jax.nn.relu(_conv(x, p["c1"], 2))
+    h = jax.nn.relu(_conv(x, p["r1"]))
+    x = jax.nn.relu(x + _conv(h, p["r2"]))          # residual block
+    x = jax.nn.relu(_conv(x, p["c2"], 2))
+    return _dense(p["head"], x.mean((1, 2)))
+
+
+def densenet_tiny_init(key, n_classes=10, c=16, cin=3):
+    ks = jax.random.split(key, 4)
+    return {"c1": _conv_init(ks[0], 3, cin, c),
+            "d1": _conv_init(ks[1], 3, c, c), "d2": _conv_init(ks[2], 3, 2 * c, c),
+            "head": _dense_init(ks[3], 3 * c, n_classes)}
+
+
+def densenet_tiny_apply(p, x):
+    x = jax.nn.relu(_conv(x, p["c1"], 2))
+    h1 = jax.nn.relu(_conv(x, p["d1"]))
+    x = jnp.concatenate([x, h1], -1)                # dense connectivity
+    h2 = jax.nn.relu(_conv(x, p["d2"]))
+    x = jnp.concatenate([x, h2], -1)
+    return _dense(p["head"], x.mean((1, 2)))
+
+
+# ---------------------------------------------------------------------------
+# GRU cell (text + audio recurrent backbones)
+# ---------------------------------------------------------------------------
+def gru_init(key, din, dh):
+    ks = jax.random.split(key, 2)
+    return {"wx": trunc_normal(ks[0], (din, 3 * dh), din ** -0.5, jnp.float32),
+            "wh": trunc_normal(ks[1], (dh, 3 * dh), dh ** -0.5, jnp.float32),
+            "b": jnp.zeros(3 * dh)}
+
+
+def gru_apply(p, x):
+    """x: (B,S,din) -> (B,S,dh)."""
+    dh = p["wh"].shape[0]
+    wx = x @ p["wx"] + p["b"]
+
+    def step(h, wx_t):
+        r, z, n = jnp.split(wx_t + h @ p["wh"], 3, -1)
+        # reset gate applies to the candidate's recurrent term
+        n = jnp.tanh(jnp.split(wx_t, 3, -1)[2]
+                     + jax.nn.sigmoid(r) * jnp.split(h @ p["wh"], 3, -1)[2])
+        z = jax.nn.sigmoid(z)
+        h = (1 - z) * n + z * h
+        return h, h
+
+    h0 = jnp.zeros((x.shape[0], dh))
+    _, hs = jax.lax.scan(step, h0, wx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def gru_text_init(key, vocab=128, d=48, n_classes=6):
+    ks = jax.random.split(key, 4)
+    return {"emb": trunc_normal(ks[0], (vocab, d), d ** -0.5, jnp.float32),
+            "fwd": gru_init(ks[1], d, d), "bwd": gru_init(ks[2], d, d),
+            "head": _dense_init(ks[3], 2 * d, n_classes)}
+
+
+def gru_text_apply(p, x):
+    e = p["emb"][x]                                  # (B,S,d)
+    hf = gru_apply(p["fwd"], e)
+    hb = gru_apply(p["bwd"], e[:, ::-1])[:, ::-1]
+    h = jnp.concatenate([hf, hb], -1).max(1)         # bi-GRU + max pool
+    return _dense(p["head"], h)
+
+
+def transformer_text_init(key, vocab=128, d=48, n_classes=6):
+    """Stands in for the paper's Capsule text model (see DESIGN.md)."""
+    ks = jax.random.split(key, 6)
+    return {"emb": trunc_normal(ks[0], (vocab, d), d ** -0.5, jnp.float32),
+            "wq": _dense_init(ks[1], d, d), "wk": _dense_init(ks[2], d, d),
+            "wv": _dense_init(ks[3], d, d), "ff": _dense_init(ks[4], d, d),
+            "head": _dense_init(ks[5], d, n_classes)}
+
+
+def transformer_text_apply(p, x):
+    e = p["emb"][x]
+    q, k, v = _dense(p["wq"], e), _dense(p["wk"], e), _dense(p["wv"], e)
+    a = jax.nn.softmax(q @ k.transpose(0, 2, 1) / q.shape[-1] ** 0.5, -1)
+    h = e + a @ v
+    h = h + jax.nn.relu(_dense(p["ff"], h))
+    return _dense(p["head"], h.mean(1))
+
+
+# ---------------------------------------------------------------------------
+# CRNN audio models (paper Table 6: AP / MP / SA / MA pooling variants)
+# ---------------------------------------------------------------------------
+def crnn_init(key, mels=32, d=48, n_classes=10, variant="ap"):
+    ks = jax.random.split(key, 5)
+    p = {"conv": _conv_init(ks[0], 3, 1, 8),
+         "gru": gru_init(ks[1], 8 * (mels // 2), d),
+         "head": _dense_init(ks[2], d, n_classes)}
+    if variant in ("sa", "ma"):
+        p["att1"] = _dense_init(ks[3], d, 1)
+    if variant == "ma":
+        p["att2"] = _dense_init(ks[4], d, 1)
+    return p
+
+
+def crnn_apply(p, x, variant="ap"):
+    """x: (B,frames,mels). variant passed by closure — params stay a pure
+    array pytree (strings break participant stacking)."""
+    B, T, M = x.shape
+    h = jax.nn.relu(_conv(x[..., None], p["conv"], 1))       # (B,T,M,8)
+    h = h.reshape(B, T // 2, 2, M, 8).mean(2)                # pool time
+    h = h.reshape(B, T // 2, 2, (M // 2) * 8 * 2 // 2)       # fold mels
+    h = h.mean(2)
+    h = gru_apply(p["gru"], h)                               # (B,T',d)
+    v = variant
+    if v == "ap":
+        g = h.mean(1)
+    elif v == "mp":
+        g = h.max(1)
+    else:
+        a1 = jax.nn.softmax(_dense(p["att1"], h), 1)
+        g = (a1 * h).sum(1)
+        if v == "ma":
+            a2 = jax.nn.softmax(_dense(p["att2"], h), 1)
+            g = 0.5 * g + 0.5 * (a2 * h).sum(1)
+    return _dense(p["head"], g)
+
+
+IMAGE_MODELS = {"vgg_tiny": (vgg_tiny_init, vgg_tiny_apply),
+                "resnet_tiny": (resnet_tiny_init, resnet_tiny_apply),
+                "densenet_tiny": (densenet_tiny_init, densenet_tiny_apply)}
+TEXT_MODELS = {"gru_text": (gru_text_init, gru_text_apply),
+               "transformer_text": (transformer_text_init,
+                                    transformer_text_apply)}
+AUDIO_MODELS = {f"crnn_{v}": (functools.partial(crnn_init, variant=v),
+                              functools.partial(crnn_apply, variant=v))
+                for v in ("ap", "mp", "sa", "ma")}

@@ -1,0 +1,150 @@
+"""Core layers: norms, RoPE, embeddings, dense (SwiGLU) FFN.
+
+Functional style: ``init_*`` builds a params dict (optionally with a stacked
+leading ``repeats`` dim for scan-over-layers); ``apply_*`` consumes it.
+Compute runs in the activation dtype; norms/softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key, shape, scale, dtype):
+    """Fan-in scaled init (normal, as in most published decoder stacks)."""
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, stack=(), bias=False):
+    p = {"w": trunc_normal(key, (*stack, d_in, d_out), d_in ** -0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((*stack, d_out), dtype)
+    return p
+
+
+def dense_apply(p, x, prec=None):
+    y = jnp.einsum("...i,io->...o", x, p["w"], precision=prec)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm_init(d, dtype, stack=()):
+    return {"g": jnp.ones((*stack, d), dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                        # has a heads dim
+        ang = ang[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding + LM head
+# --------------------------------------------------------------------------
+def embed_init(key, vocab, d, dtype):
+    return {"table": trunc_normal(key, (vocab, d), d ** -0.5, dtype)}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_apply(p_embed, p_head, x, tie):
+    if tie:
+        return jnp.einsum("...d,vd->...v", x, p_embed["table"])
+    return jnp.einsum("...d,dv->...v", x, p_head["w"])
+
+
+# --------------------------------------------------------------------------
+# Dense FFN (SwiGLU — used by every assigned dense arch)
+# --------------------------------------------------------------------------
+def ffn_init(key, d, d_ff, dtype, stack=()):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": trunc_normal(k1, (*stack, d, d_ff), d ** -0.5, dtype),
+        "wg": trunc_normal(k2, (*stack, d, d_ff), d ** -0.5, dtype),
+        "wo": trunc_normal(k3, (*stack, d_ff, d), d_ff ** -0.5, dtype),
+    }
+
+
+def ffn_apply(p, x):
+    from repro.sharding.constrain import constrain
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    # pin the hidden to the TP axis: without this GSPMD resolves the
+    # (batch='data' x, D='data' weight) contraction by all-gathering the
+    # weight and computing the FULL d_ff per device (§Perf cycle 2b: 13x)
+    h = constrain(h, tuple([None] * (h.ndim - 1)) + ("model",))
+    g = constrain(g, tuple([None] * (g.ndim - 1)) + ("model",))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Chunked-remat scan (recurrent memory fix — EXPERIMENTS.md §Perf cycle 1)
+# --------------------------------------------------------------------------
+def chunked_scan(step, carry, xs, chunk=256, remat=True):
+    """`lax.scan(step, carry, xs)` with gradient checkpoints every `chunk`
+    steps: backward saves the carry only at chunk boundaries and recomputes
+    inside — O(S/chunk) instead of O(S) saved state. Critical when the
+    carry is large (mLSTM's hd×hd matrix memory: 347 GiB -> GBs at 4k seq).
+    Falls back to a plain scan when S doesn't divide."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    c = min(chunk, S)
+    if S % c or c == S:
+        return jax.lax.scan(step, carry, xs)
+
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    xs_c = jax.tree.map(lambda t: t.reshape(S // c, c, *t.shape[1:]), xs)
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda t: t.reshape(S, *t.shape[2:]), ys)
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+def softmax_xent(logits, labels, ignore_index=-1):
+    """Mean next-token cross-entropy over valid positions. logits f32-cast.
+
+    Implemented with a fused one-hot select/reduce rather than
+    take_along_axis so a vocab dim sharded over the `model` mesh axis never
+    forces an all-gather of the logits (critical at 152k–200k vocabs).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    valid = (labels != ignore_index).astype(jnp.float32)
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,117 @@
+"""Mamba selective-SSM block (Jamba's recurrent mixer, arXiv:2403.19887).
+
+Reference path is a `lax.scan` recurrence (the CPU/lowering oracle); the
+TPU hot path is `repro.kernels.selective_scan` (chunked parallel scan in
+Pallas). Decode keeps O(1) state: a (conv_dim-1) tail of inputs plus the
+(d_inner, d_state) SSM state — this is what makes long_500k native here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import chunked_scan, trunc_normal
+from repro.sharding.constrain import constrain
+
+
+def mamba_init(key, cfg, dtype, stack=()):
+    d, di = cfg.d_model, cfg.d_inner_ssm
+    st, dtr, K = cfg.ssm_state_dim, cfg.dt_rank, cfg.ssm_conv_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": trunc_normal(ks[0], (*stack, d, 2 * di), d ** -0.5, dtype),
+        "conv_w": trunc_normal(ks[1], (*stack, K, di), K ** -0.5, dtype),
+        "conv_b": jnp.zeros((*stack, di), dtype),
+        "x_proj": trunc_normal(ks[2], (*stack, di, dtr + 2 * st), di ** -0.5, dtype),
+        "dt_proj": {"w": trunc_normal(ks[3], (*stack, dtr, di), dtr ** -0.5, dtype),
+                    "b": jnp.full((*stack, di), -4.6, dtype)},  # softplus^-1(0.01)
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, st + 1, dtype=jnp.float32)), (*stack, di, st)
+        ).astype(jnp.float32) * jnp.ones((*stack, di, st), jnp.float32),
+        "D": jnp.ones((*stack, di), jnp.float32),
+        "out_proj": trunc_normal(ks[5], (*stack, di, d), di ** -0.5, dtype),
+    }
+
+
+def _ssm_inputs(p, xc, cfg):
+    """xc: (B,S,di) post-conv. Returns dt (B,S,di), Bm/Cm (B,S,st), A (di,st)."""
+    st, dtr = cfg.ssm_state_dim, cfg.dt_rank
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"]["w"]) + p["dt_proj"]["b"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                                   # (di,st)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32), A
+
+
+def selective_scan_ref(xc, dt, Bm, Cm, A, D, h0=None):
+    """Sequential selective scan. xc:(B,S,di) -> (y:(B,S,di), h:(B,di,st))."""
+    B, S, di = xc.shape
+    st = A.shape[-1]
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        # discretization INSIDE the step: materializing dA/dBx as (B,S,di,st)
+        # up front cost ~4 GiB/device/layer at 4k seq (§Perf cycle 1)
+        dt_t, B_t, C_t, x_t = inp                              # (B,di)/(B,st)
+        dA_t = jnp.exp(dt_t[..., None] * A)                    # (B,di,st)
+        dBx_t = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA_t * h + dBx_t                                   # (B,di,st)
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, st), jnp.float32) if h0 is None else h0
+    h, ys = chunked_scan(step, h0,
+                         (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+                          Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + xf * D                         # (B,S,di)
+    return y, h
+
+
+def _causal_conv(p, x, state=None):
+    """x: (B,S,di); depthwise causal conv (kernel K). state: (B,K-1,di)."""
+    K = p["conv_w"].shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B,S+K-1,di)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out + p["conv_b"], new_state
+
+
+def mamba_apply(p, x, cfg, impl="ref"):
+    """Training/prefill. x: (B,S,D) -> (B,S,D)."""
+    di = cfg.d_inner_ssm
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = constrain(xi, (None, None, "model"))   # d_inner stays TP-sharded
+    xc, _ = _causal_conv(p, xi)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm, A = _ssm_inputs(p, xc, cfg)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.selective_scan(xc, dt, Bm, Cm, A, p["D"])
+    else:
+        y, _ = selective_scan_ref(xc, dt, Bm, Cm, A, p["D"])
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba_state_init(cfg, batch, dtype):
+    di, st, K = cfg.d_inner_ssm, cfg.ssm_state_dim, cfg.ssm_conv_dim
+    return {"conv": jnp.zeros((batch, K - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, st), jnp.float32)}
+
+
+def mamba_decode(p, x, cfg, state, pos):
+    """x: (B,1,D) -> (y, new_state). O(1) per token."""
+    di = cfg.d_inner_ssm
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _causal_conv(p, xi, state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm, A = _ssm_inputs(p, xc, cfg)
+    y, h = selective_scan_ref(xc, dt, Bm, Cm, A, p["D"], h0=state["ssm"])
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": conv_state, "ssm": h}

@@ -1,0 +1,96 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+We implement the *absorbed* formulation throughout: queries are projected
+into the KV latent space (q_eff = q_nope @ W_uk), so attention is MQA-like
+with a single shared latent "KV head" of width ``kv_lora_rank`` plus the
+decoupled RoPE key of width ``qk_rope_dim``.  The decode cache stores only
+``(c_kv, k_rope)`` — the paper's KV-cache compression — and the sliding
+window (for long_500k) applies to that latent cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention, NEG_INF
+from repro.models.layers import apply_rope, rmsnorm_apply, trunc_normal
+
+
+def mla_init(key, cfg, dtype, stack=()):
+    d = cfg.d_model
+    H, ql, kl = cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": trunc_normal(ks[0], (*stack, d, ql), d ** -0.5, dtype),
+        "q_norm_g": jnp.ones((*stack, ql), dtype),
+        "w_uq": trunc_normal(ks[1], (*stack, ql, H, nope + rope), ql ** -0.5, dtype),
+        "w_dkv": trunc_normal(ks[2], (*stack, d, kl), d ** -0.5, dtype),
+        "kv_norm_g": jnp.ones((*stack, kl), dtype),
+        "w_kr": trunc_normal(ks[3], (*stack, d, rope), d ** -0.5, dtype),
+        "w_uk": trunc_normal(ks[4], (*stack, kl, H, nope), kl ** -0.5, dtype),
+        "w_uv": trunc_normal(ks[5], (*stack, kl, H, vh), kl ** -0.5, dtype),
+        "w_o": trunc_normal(ks[6], (*stack, H, vh, d), (H * vh) ** -0.5, dtype),
+    }
+
+
+def _latents(p, x, cfg, positions):
+    """Returns q_eff (B,S,H,kl+rope), c_kv (B,S,kl), k_rope (B,S,rope)."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = jnp.einsum("bsd,dq->bsq", x, p["w_dq"])
+    cq = rmsnorm_apply({"g": p["q_norm_g"]}, cq, cfg.norm_eps)
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # absorb: q_eff_latent = q_nope @ W_uk  -> (B,S,H,kl)
+    q_eff = jnp.einsum("bshn,khn->bshk", q_nope, p["w_uk"])
+    c_kv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])
+    c_kv = rmsnorm_apply({"g": p["kv_norm_g"]}, c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_eff, q_rope], -1), c_kv, k_rope
+
+
+def _out_proj(p, o_latent, cfg):
+    """o_latent: (B,S,H,kl) -> (B,S,D) via per-head W_uv then W_o."""
+    o = jnp.einsum("bshk,khv->bshv", o_latent, p["w_uv"])
+    return jnp.einsum("bshv,hvd->bsd", o, p["w_o"])
+
+
+def mla_apply(p, x, cfg, positions, impl="ref"):
+    """Training/prefill forward; returns (y, (c_kv, k_rope)) for caching."""
+    q_all, c_kv, k_rope = _latents(p, x, cfg, positions)
+    kv = jnp.concatenate([c_kv, k_rope], -1)[:, :, None, :]   # (B,S,1,kl+r)
+    v = c_kv[:, :, None, :]                                    # (B,S,1,kl)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    o_latent = chunked_attention(q_all, kv, v, n_kv_heads=1,
+                                 window=cfg.window, softmax_scale=scale)
+    return _out_proj(p, o_latent, cfg), (c_kv, k_rope)
+
+
+def mla_cache_init(cfg, batch, seq_len, dtype):
+    S = min(cfg.window, seq_len) if cfg.window else seq_len
+    return {"c_kv": jnp.zeros((batch, S, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, S, cfg.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    B = x.shape[0]
+    S = cache["c_kv"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_all, c_kv, k_rope = _latents(p, x, cfg, positions)
+    slot = pos % S if cfg.window else pos
+    cc = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, slot, 0))
+    kv = jnp.concatenate([cc, cr], -1)                         # (B,S,kl+r)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    qh = (q_all * scale)[:, 0]                                 # (B,H,kl+r)
+    s = jnp.einsum("bhd,bsd->bhs", qh, kv).astype(jnp.float32)
+    idx = jnp.arange(S)
+    valid = ((idx <= pos) | (pos >= S)) if cfg.window else (idx <= pos)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_latent = jnp.einsum("bhs,bsk->bhk", w.astype(cc.dtype), cc)[:, None]
+    return _out_proj(p, o_latent, cfg), {"c_kv": cc, "k_rope": cr}

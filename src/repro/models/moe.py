@@ -1,0 +1,134 @@
+"""Token-choice top-k MoE with sort-based capacity dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch avoids the classic (tokens, experts, capacity) one-hot einsum —
+    at 32k-seq prefill that tensor is O(10^13). Instead tokens are argsorted
+    by expert id, ranked within their expert by position arithmetic, and
+    scattered into a static (E, capacity, D) buffer (`mode='drop'` handles
+    over-capacity tokens = the standard "token dropping" semantics).
+  * Expert weights carry a leading E dim sharded over the `model` mesh axis
+    (expert parallelism); the scatter/gather pair is where XLA inserts the
+    all-to-all — visible in the dry-run collective table.
+  * Router math in f32; aux load-balance loss is the Switch-style E·Σ f_e·P_e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+from repro.sharding.constrain import constrain
+
+
+def moe_init(key, cfg, dtype, stack=()):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": trunc_normal(ks[0], (*stack, d, E), d ** -0.5, jnp.float32),
+        "wi": trunc_normal(ks[1], (*stack, E, d, f), d ** -0.5, dtype),
+        "wg": trunc_normal(ks[2], (*stack, E, d, f), d ** -0.5, dtype),
+        "wo": trunc_normal(ks[3], (*stack, E, f, d), f ** -0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "wi": trunc_normal(ks[4], (*stack, d, fs), d ** -0.5, dtype),
+            "wg": trunc_normal(ks[5], (*stack, d, fs), d ** -0.5, dtype),
+            "wo": trunc_normal(ks[6], (*stack, fs, d), fs ** -0.5, dtype),
+        }
+    return p
+
+
+def capacity(n_tokens, cfg):
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)    # round up to a multiple of 4, >= 4
+
+
+def n_groups(T, E):
+    """Dispatch groups: largest power of two <= 64 such that every group
+    still holds >= 4·E tokens (so per-group capacity stays meaningful)."""
+    g = 1
+    while g < 64 and T % (2 * g) == 0 and T // (2 * g) >= 4 * E:
+        g *= 2
+    return g
+
+
+def moe_apply(p, x, cfg):
+    """x: (B,S,D) -> (y, aux_loss).
+
+    Grouped sort-based dispatch (§Perf cycle 2): tokens are split into G
+    data-parallel groups; sort/rank/scatter happen *within* a group, so with
+    the G dim pinned to `data` and the E dim to `model` every scatter is
+    shard-local and the only cross-shard movement is the (G,E)-blocked
+    token buffer — which GSPMD lowers as all-to-all/all-gather instead of
+    the pathological full-buffer all-reduce the global scatter produced
+    (measured 78 GiB -> ~9 GiB link bytes per DeepSeek MoE layer at 32k
+    prefill). Per-(group,expert) capacity is the standard TPU "grouped"
+    token-dropping semantic (Switch/GShard style).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T,E)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # (T,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- grouped sort-based dispatch ---------------------------------------
+    G = n_groups(T, E)
+    Tg = T // G
+    cap = capacity(Tg, cfg)
+    xg = constrain(xt.reshape(G, Tg, D), ("dp", None, None))
+    ge = top_i.reshape(G, Tg * k)                               # expert ids
+    gp = top_p.reshape(G, Tg * k)
+
+    def dispatch_one(eids):
+        order = jnp.argsort(eids)
+        se = eids[order]
+        start = jnp.searchsorted(se, jnp.arange(E))
+        rank = jnp.arange(Tg * k) - start[se]
+        keep = rank < cap
+        dest = jnp.where(keep, se * cap + rank, E * cap)
+        return order, dest, keep
+
+    order, dest, keep = jax.vmap(dispatch_one)(ge)
+    st = order // k                                             # token in group
+    src = jnp.take_along_axis(
+        xg, st[..., None], axis=1)                              # (G,Tg*k,D)
+    buf = jax.vmap(lambda d, s: jnp.zeros((E * cap, D), xt.dtype)
+                   .at[d].set(s, mode="drop"))(dest, src)
+    buf = constrain(buf.reshape(G, E, cap, D),
+                    ("dp", "model", None, None))
+
+    # ---- expert compute (block-local: G on data, E on model) ----------------
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(buf.dtype) * h
+    h = constrain(h, ("dp", "model", None, None))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"]).reshape(G, E * cap, D)
+    out = constrain(out, ("dp", None, None))      # gather experts per group
+
+    # ---- combine (group-local gather + weighted scatter-add) ----------------
+    back = jnp.take_along_axis(out, jnp.minimum(dest, E * cap - 1)[..., None],
+                               axis=1)
+    sp = jnp.take_along_axis(gp, order, axis=1)
+    w = jnp.where(keep, sp, 0.0).astype(back.dtype)[..., None]
+    y = jax.vmap(lambda t, bw: jnp.zeros((Tg, D), back.dtype)
+                 .at[t].add(bw))(st, back * w * keep[..., None])
+    y = y.reshape(B, S, D)
+
+    # ---- shared experts (always-on, DeepSeek-style) --------------------------
+    if "shared" in p:
+        s = p["shared"]
+        hs = jnp.einsum("td,df->tf", xt, s["wi"])
+        gs = jnp.einsum("td,df->tf", xt, s["wg"])
+        hs = jax.nn.silu(gs.astype(jnp.float32)).astype(xt.dtype) * hs
+        y = y + jnp.einsum("tf,fd->td", hs, s["wo"]).reshape(B, S, D)
+
+    # ---- Switch aux load-balance loss ----------------------------------------
+    f_e = jnp.zeros(E, jnp.float32).at[top_i.reshape(-1)].add(1.0) / (T * k)
+    P_e = probs.mean(0)
+    aux = cfg.router_aux_coef * E * jnp.sum(f_e * P_e)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,200 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory), arXiv:2405.04517.
+
+Both use the stabilized exponential gating of the paper (running max m_t).
+Reference recurrences are `lax.scan`; the TPU hot path for mLSTM is the
+chunkwise-parallel `repro.kernels.mlstm` Pallas kernel. Both are O(1)-state
+at decode, so xlstm-1.3b runs long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import chunked_scan, trunc_normal
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg, dtype, stack=()):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    H = cfg.n_heads
+    hd = di // H
+    ks = jax.random.split(key, 6)
+    return {
+        "up": trunc_normal(ks[0], (*stack, d, 2 * di), d ** -0.5, dtype),
+        "wq": trunc_normal(ks[1], (*stack, di, H, hd), di ** -0.5, dtype),
+        "wk": trunc_normal(ks[2], (*stack, di, H, hd), di ** -0.5, dtype),
+        "wv": trunc_normal(ks[3], (*stack, di, H, hd), di ** -0.5, dtype),
+        "w_if": trunc_normal(ks[4], (*stack, di, H, 2), di ** -0.5, jnp.float32),
+        "b_if": jnp.zeros((*stack, H, 2), jnp.float32),
+        "gn_g": jnp.ones((*stack, H, hd), dtype),
+        "down": trunc_normal(ks[5], (*stack, di, d), di ** -0.5, dtype),
+    }
+
+
+def mlstm_cell_ref(q, k, v, ig, fg, state=None):
+    """Stabilized mLSTM recurrence.
+
+    q,k,v: (B,S,H,hd); ig,fg: (B,S,H) raw gate pre-activations.
+    state: dict(C:(B,H,hd,hd), n:(B,H,hd), m:(B,H)) or None.
+    Returns (h: (B,S,H,hd) f32, new_state).
+    """
+    B, S, H, hd = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    qf, kf, vf = (t.astype(jnp.float32) * (hd ** -0.25) for t in (q, k, v))
+    vf = vf * hd ** 0.25  # only q,k scaled (standard 1/sqrt(hd) split)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, lf_t = inp                     # (B,H,...)
+        m_new = jnp.maximum(lf_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(lf_t + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])         # (B,H,hd,hd)
+        n = f_p[..., None] * n + i_p[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    # chunked_scan: bwd saves the (B,H,hd,hd) matrix memory only at chunk
+    # boundaries (347 GiB -> ~13 GiB at 4k seq; EXPERIMENTS.md §Perf)
+    (C, n, m), hs = chunked_scan(
+        step, (C0, n0, m0),
+        (qf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+         vf.transpose(1, 0, 2, 3), ig.astype(jnp.float32).transpose(1, 0, 2),
+         logf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2, 3), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_qkvg(p, x, cfg):
+    from repro.sharding.constrain import constrain
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xz = constrain(xz, (None, None, "model"))   # keep d_inner TP-sharded
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xm, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xm, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"])
+    g = jnp.einsum("bsd,dhg->bshg", xm.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    return q, k, v, g[..., 0], g[..., 1], z
+
+
+def _mlstm_out(p, h, z, x_dtype, eps):
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)        # per-head groupnorm
+    hn = (hf * jax.lax.rsqrt(var + eps)) * p["gn_g"].astype(jnp.float32)
+    hn = hn.reshape(*h.shape[:-2], -1)
+    y = hn * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsd,de->bse", y.astype(x_dtype), p["down"])
+
+
+def mlstm_apply(p, x, cfg, impl="ref"):
+    q, k, v, ig, fg, z = _mlstm_qkvg(p, x, cfg)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h, _ = kops.mlstm(q, k, v, ig, fg)
+    else:
+        h, _ = mlstm_cell_ref(q, k, v, ig, fg)
+    return _mlstm_out(p, h, z, x.dtype, cfg.norm_eps)
+
+
+def mlstm_state_init(cfg, batch, dtype):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H, hd = cfg.n_heads, di // cfg.n_heads
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg, state, pos):
+    q, k, v, ig, fg, z = _mlstm_qkvg(p, x, cfg)
+    h, new_state = mlstm_cell_ref(q, k, v, ig, fg, state)
+    return _mlstm_out(p, h, z, x.dtype, cfg.norm_eps), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg, dtype, stack=()):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    f = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": trunc_normal(ks[0], (*stack, d, H, 4 * hd), d ** -0.5, dtype),
+        # block-diagonal hidden-to-hidden recurrence, per head
+        "r": trunc_normal(ks[1], (*stack, H, hd, 4 * hd), hd ** -0.5, jnp.float32),
+        "b": jnp.zeros((*stack, H, 4 * hd), jnp.float32),
+        "gn_g": jnp.ones((*stack, H, hd), dtype),
+        "up1": trunc_normal(ks[2], (*stack, d, f), d ** -0.5, dtype),
+        "up2": trunc_normal(ks[3], (*stack, d, f), d ** -0.5, dtype),
+        "down": trunc_normal(ks[4], (*stack, f, d), f ** -0.5, dtype),
+    }
+
+
+def slstm_cell_ref(wx, r, b, state):
+    """wx: (B,S,H,4*hd) input contributions; recurrence per head.
+
+    state: dict(h,c,n:(B,H,hd), m:(B,H,hd)). Returns (h_seq (B,S,H,hd) f32, state).
+    """
+    hd = r.shape[-2]
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        pre = wx_t + jnp.einsum("bhk,bhkg->bhg", h, jnp.broadcast_to(
+            r, (h.shape[0], *r.shape[-3:]))) + b               # (B,H,4hd)
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = chunked_scan(
+        step, (state["h"], state["c"], state["n"], state["m"]),
+        wx.astype(jnp.float32).transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2, 3), {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_state_init(cfg, batch, dtype):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def _slstm_out(p, h, x, cfg):
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hn = (hf * jax.lax.rsqrt(var + cfg.norm_eps)) * p["gn_g"].astype(jnp.float32)
+    hn = hn.reshape(*h.shape[:-2], -1).astype(x.dtype)
+    a = jnp.einsum("bsd,df->bsf", hn, p["up1"])
+    g = jnp.einsum("bsd,df->bsf", hn, p["up2"])
+    a = a * jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", a, p["down"])
+
+
+def slstm_apply(p, x, cfg, impl="ref"):
+    wx = jnp.einsum("bsd,dhg->bshg", x, p["w_in"])
+    st = slstm_state_init(cfg, x.shape[0], x.dtype)
+    h, _ = slstm_cell_ref(wx, p["r"], p["b"], st)
+    return _slstm_out(p, h, x, cfg)
+
+
+def slstm_decode(p, x, cfg, state, pos):
+    wx = jnp.einsum("bsd,dhg->bshg", x, p["w_in"])
+    h, new_state = slstm_cell_ref(wx, p["r"], p["b"], state)
+    return _slstm_out(p, h, x, cfg), new_state

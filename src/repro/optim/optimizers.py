@@ -1,0 +1,89 @@
+"""Hand-built optimizers (optax is not available offline).
+
+API mirrors the optax triple: ``init(params) -> state``,
+``update(grads, state, params, lr) -> (updates, state)``; ``apply(params,
+updates)`` adds them. The learning rate is passed per call because the
+paper's CLR schedule changes it every local epoch (Eq. 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(t.astype(jnp.float32) ** 2)
+                        for t in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+class SGD:
+    """Plain SGD — the paper's local optimizer ("localSGD", Algorithm 1)."""
+
+    def init(self, params):
+        return ()
+
+    def update(self, grads, state, params, lr):
+        return _tmap(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+
+class Momentum:
+    def __init__(self, beta=0.9):
+        self.beta = beta
+
+    def init(self, params):
+        return _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(self, grads, state, params, lr):
+        new_m = _tmap(lambda m, g: self.beta * m + g.astype(jnp.float32),
+                      state, grads)
+        return _tmap(lambda m: -lr * m, new_m), new_m
+
+
+class AdamW:
+    def __init__(self, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+        self.b1, self.b2, self.eps, self.wd = b1, b2, eps, weight_decay
+
+    def init(self, params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        t = state["t"] + 1
+        m = _tmap(lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: self.b2 * v
+                  + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        upd = _tmap(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+                                   + self.wd * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+
+def get_optimizer(name: str, *, momentum=0.9, weight_decay=0.0):
+    if name == "sgd":
+        return SGD()
+    if name == "momentum":
+        return Momentum(momentum)
+    if name == "adamw":
+        return AdamW(weight_decay=weight_decay)
+    raise KeyError(name)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                 params, updates)

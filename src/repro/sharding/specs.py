@@ -1,0 +1,197 @@
+"""PartitionSpec rules for params, batches, and decode caches.
+
+Strategy (baseline — the §Perf hillclimbs change some of these):
+  * TP over `model`: attention heads / FFN hidden / experts / vocab;
+  * FSDP over `data`: the complementary d_model dim of every large weight;
+  * any template axis whose dim is not divisible by the mesh axis size is
+    dropped (replicated) — e.g. phi4's 24 heads on a model=16 axis fall
+    back to replicated attention weights (recorded in the roofline notes);
+  * co-learning stacks a leading participant dim sharded over `pod`.
+
+Templates are keyed by leaf name and aligned to the TRAILING dims of the
+leaf (leading stack/repeat dims are replicated).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# trailing-dim templates per leaf name
+_TEMPLATES = {
+    # embeddings / head
+    "table": ("model", "data"),                 # (V, D)
+    # generic dense (head.w is (D,V))
+    "w": ("data", "model"),
+    "b": ("model",),
+    # attention
+    "wq": ("data", "model", None),              # (D,H,hd)
+    "wk": ("data", "model", None),              # (D,KV,hd)
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),              # (H,hd,D)
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    # FFN
+    "wi": ("data", "model"),                    # (D,F) — and (E,D,F) via moe
+    "wg": ("data", "model"),
+    # MLA
+    "w_dq": ("data", "model"),                  # (D,ql)
+    "w_uq": (None, "model", None),              # (ql,H,e)
+    "w_dkv": ("data", "model"),                 # (D,kl)
+    "w_kr": ("data", None),                     # (D,rope)
+    "w_uk": (None, "model", None),              # (kl,H,nope)
+    "w_uv": (None, "model", None),              # (kl,H,vh)
+    "w_o": ("model", None, "data"),             # (H,vh,D)
+    # MoE
+    "router": ("data", None),                   # (D,E)
+    # Mamba
+    "in_proj": ("data", "model"),               # (D,2di)
+    "conv_w": (None, "model"),                  # (K,di)
+    "conv_b": ("model",),
+    "x_proj": ("model", None),                  # (di,dtr+2st)
+    "A_log": ("model", None),                   # (di,st)
+    "D": ("model",),
+    "out_proj": ("model", "data"),              # (di,D)
+    # xLSTM
+    "up": ("data", "model"),                    # (D,2di)
+    "down": ("model", "data"),                  # (di,D)
+    "w_if": ("model", None, None),              # (di,H,2)
+    "b_if": (None, None),
+    "gn_g": (None, None),
+    "w_in": ("data", None, "model"),            # (D,H,4hd)
+    "r": (None, None, "model"),                 # (H,hd,4hd)
+    "up1": ("data", "model"),
+    "up2": ("data", "model"),
+}
+# MoE expert weights: leading E dim gets 'model', rest from dense template
+_MOE_LEAF = {"wi": ("model", "data", None), "wg": ("model", "data", None),
+             "wo": ("model", None, "data")}
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return out
+
+
+def _fits(dim, axis, mesh):
+    return axis is not None and axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def leaf_spec(path_names, shape, mesh, participant=False):
+    name = path_names[-1]
+    in_moe = any(n in ("ffn", "moe") for n in path_names) and \
+        name in _MOE_LEAF and len(shape) >= 3 and "shared" not in path_names
+    tmpl = _MOE_LEAF[name] if in_moe else _TEMPLATES.get(name)
+    ndim = len(shape)
+    off = 1 if participant else 0               # leading participant dim
+    spec = [None] * ndim
+    if participant:
+        spec[0] = "pod"
+    if tmpl is not None:
+        k = len(tmpl)
+        lead = ndim - k                          # stack/repeat dims replicated
+        if lead >= off:
+            used = {"pod"} if participant else set()
+            for i, ax in enumerate(tmpl):
+                dim_i = lead + i
+                if ax in used:
+                    continue
+                if _fits(shape[dim_i], ax, mesh):
+                    spec[dim_i] = ax
+                    used.add(ax)
+    return P(*spec)
+
+
+def param_specs(params_shapes, cfg, mesh, participant=False):
+    """pytree of ShapeDtypeStructs -> pytree of PartitionSpecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [leaf_spec(_path_names(p), v.shape, mesh, participant)
+             for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _dp_axes(mesh, participant):
+    """Data-parallel axes for the batch dim."""
+    if participant:
+        return "data"                            # leading K dim carries 'pod'
+    return tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+
+
+def batch_specs(cfg, mesh, kind="train", participant=False):
+    """Specs for the input batch dict (tokens/labels/prefix or decode)."""
+    dp = _dp_axes(mesh, participant)
+    lead = ("pod",) if participant else ()
+    tok = P(*lead, dp, None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.input_mode == "tokens+prefix":
+        out["prefix"] = P(*lead, dp, None, None)
+    if kind == "decode":
+        out = {"tokens": P(*lead, dp, None)}
+    return out
+
+
+def cache_specs(cache_shapes, mesh, batch_size, participant=False):
+    """Decode-cache specs: batch over data (when divisible), long dims over
+    model; falls back gracefully for batch=1 (long_500k) by sharding the
+    sequence/state dims over both axes where divisible."""
+    dsz = mesh.shape.get("data", 1)
+    msz = mesh.shape.get("model", 1)
+    lead = ("pod",) if participant else ()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape) \
+        if not participant else ("data",)
+
+    def one(path, v):
+        shape = v.shape
+        names = _path_names(path)
+        off = len(lead)
+        # layout: (repeats, B, ...) — repeats replicated
+        spec = [None] * len(shape)
+        for i, _ in enumerate(lead):
+            spec[i] = lead[i]
+        bdim = off + 1                           # after repeats dim
+        rest = list(range(bdim + 1, len(shape)))
+        b_ok = shape[bdim] % dsz == 0 and shape[bdim] > 1
+        if b_ok:
+            spec[bdim] = dp if len(dp) > 1 else dp[0]
+        if names[-1] in ("k", "v") and len(shape) - off == 5:
+            # GQA KV cache (R,B,S,KV,hd): never shard S over `model` — the
+            # per-step single-slot update would move the whole cache
+            # (§Perf cycle 3: 3.3s -> small collective term). Shard KV
+            # heads if divisible, else head_dim; batch=1 long-context
+            # spreads S over `data` (window ring, update stays local-ish).
+            kv_dim, hd_dim = off + 3, off + 4
+            if shape[kv_dim] % msz == 0:
+                spec[kv_dim] = "model"
+            elif shape[hd_dim] % msz == 0:
+                spec[hd_dim] = "model"
+            if not b_ok and shape[off + 2] % dsz == 0:
+                spec[off + 2] = "data"
+            return P(*spec)
+        if b_ok:
+            # shard the largest remaining dim over model
+            cands = [i for i in rest if shape[i] % msz == 0 and shape[i] >= msz]
+            if cands:
+                big = max(cands, key=lambda i: shape[i])
+                spec[big] = "model"
+        else:
+            # batch=1: spread the biggest dims over model then data
+            cands = sorted(rest, key=lambda i: -shape[i])
+            used = []
+            for ax, sz in (("model", msz), ("data", dsz)):
+                for i in cands:
+                    if i not in used and shape[i] % sz == 0 and shape[i] >= sz:
+                        spec[i] = ax
+                        used.append(i)
+                        break
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, v) for p, v in flat])
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

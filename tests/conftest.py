@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run on the plain 1-device CPU backend (the dry-run forces 512
+# devices in its own process only — never here)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

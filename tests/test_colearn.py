@@ -1,0 +1,135 @@
+"""Co-learning protocol invariants (Algorithm 1 / Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import averaging
+from repro.core.colearn import CoLearner
+from repro.core.ensemble import ensemble_logits
+
+
+def tiny_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {"loss": loss}
+
+
+def tiny_params(key=0, d=4):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, 1)), "b": jnp.zeros((1,))}
+
+
+def tiny_batches(K, n_batches, B, d=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (K, n_batches, B, d))
+    w_true = jnp.arange(1.0, d + 1)[:, None]
+    y = x @ w_true
+    return (x, y)
+
+
+def test_average_is_mean():
+    p = tiny_params()
+    stacked = averaging.stack_participants(p, 3)
+    # perturb each copy differently
+    stacked = jax.tree.map(
+        lambda t: t + jnp.arange(3.0).reshape(3, *([1] * (t.ndim - 1))), stacked)
+    avg = averaging.average_pjit(stacked)
+    got = jax.tree.map(lambda t: t[0], avg)
+    want = jax.tree.map(lambda t: t.mean(0), stacked)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    # all K slots identical after averaging (the broadcast back)
+    for t in jax.tree.leaves(avg):
+        np.testing.assert_allclose(t[0], t[-1])
+
+
+def test_averaging_identical_models_is_identity():
+    p = tiny_params()
+    stacked = averaging.stack_participants(p, 5)
+    avg = averaging.average_pjit(stacked)
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(stacked)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_k1_colearn_equals_plain_sgd():
+    """K=1 co-learning round == T0 epochs of plain SGD."""
+    cfg = CoLearnConfig(n_participants=1, T0=2, eta0=0.05, schedule="clr",
+                        epochs_rule="fle", max_rounds=1)
+    learner = CoLearner(cfg, tiny_loss)
+    params = tiny_params()
+    state = learner.init(params)
+    batches = tiny_batches(1, 3, 8)
+    state = learner.run_round(state, lambda i, j: batches)
+    got = learner.shared_model(state)
+
+    # manual: 2 epochs of SGD over the same batches with the CLR lrs
+    from repro.core.schedule import clr_lr
+    p = params
+    for j in range(2):
+        lr = clr_lr(0.05, 0.25, j, 2)
+        for b in range(3):
+            g = jax.grad(lambda q: tiny_loss(
+                q, (batches[0][0, b], batches[1][0, b]))[0])(p)
+            p = jax.tree.map(lambda a, d: a - lr * d, p, g)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(p)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_colearn_reduces_loss_and_logs():
+    cfg = CoLearnConfig(n_participants=4, T0=2, eta0=0.05, epsilon=0.5,
+                        max_rounds=3)
+    learner = CoLearner(cfg, tiny_loss)
+    state = learner.init(tiny_params())
+    batches = tiny_batches(4, 4, 8)
+    first = last = None
+    for i in range(3):
+        state = learner.run_round(state, lambda i_, j_: batches)
+        log = state["log"][-1]
+        if first is None:
+            first = np.mean(log.local_losses)
+        last = np.mean(log.local_losses)
+    assert last < first
+    assert state["round"] == 3
+    assert state["log"][0].comm_bytes > 0
+
+
+def test_ile_doubles_T_on_convergence():
+    # zero gradients (loss already 0) => params never change => rel=0 => double
+    def zero_loss(params, batch):
+        return jnp.zeros(()), {}
+    cfg = CoLearnConfig(n_participants=2, T0=1, epsilon=0.01,
+                        epochs_rule="ile", max_rounds=3)
+    learner = CoLearner(cfg, zero_loss)
+    state = learner.init(tiny_params())
+    b = tiny_batches(2, 1, 2)
+    for _ in range(3):
+        state = learner.run_round(state, lambda i, j: b)
+    # round0: rel=inf (no prev) keep 1; round1: rel=0 -> 2; round2: -> 4
+    assert [l.T for l in state["log"]] == [1, 1, 2]
+    assert state["ctrl"].T == 4
+
+
+def test_restart_participant_resets_to_shared():
+    cfg = CoLearnConfig(n_participants=3, T0=1, max_rounds=1)
+    learner = CoLearner(cfg, tiny_loss)
+    state = learner.init(tiny_params())
+    state["params"] = jax.tree.map(
+        lambda t: t.at[1].add(100.0), state["params"])
+    state = learner.restart_participant(state, 1)
+    shared = learner.shared_model(state)
+    for t, s in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(shared)):
+        np.testing.assert_allclose(t[1], s)
+
+
+def test_ensemble_baseline_averages_probs():
+    K, B, C = 3, 4, 5
+    key = jax.random.PRNGKey(0)
+    stacked = {"w": jax.random.normal(key, (K, 7, C))}
+    batch = jax.random.normal(jax.random.PRNGKey(1), (B, 7))
+    lp = ensemble_logits(lambda p, b: b @ p["w"], stacked, batch)
+    probs = jax.vmap(lambda p: jax.nn.softmax(batch @ p["w"], -1))(stacked)
+    np.testing.assert_allclose(np.exp(lp), probs.mean(0), rtol=1e-5)

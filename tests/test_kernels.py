@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Every kernel is exercised over a grid of shapes and dtypes and must
+allclose the ref.py oracle (deliverable c).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 32),      # MHA
+    (2, 256, 8, 2, 64),      # GQA
+    (1, 128, 4, 1, 32),      # MQA
+    (2, 512, 4, 2, 128),     # longer, MXU-width head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    o_ref = ref.flash_attention_ref(q, k, v, n_kv_heads=KV)
+    o_pal = ops.flash_attention(q, k, v, n_kv_heads=KV, impl="interpret",
+                                block_q=64, block_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    B, S, H, KV, hd = 1, 256, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    o_ref = ref.flash_attention_ref(q, k, v, n_kv_heads=KV, window=window)
+    o_pal = ops.flash_attention(q, k, v, n_kv_heads=KV, window=window,
+                                impl="interpret", block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_chunked_path():
+    """The model's jnp chunked attention == the kernel (same contract)."""
+    from repro.models.attention import chunked_attention
+    B, S, H, KV, hd = 2, 256, 8, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    o_model = chunked_attention(q, k, v, n_kv_heads=KV, chunk_q=64,
+                                chunk_kv=64)
+    o_pal = ops.flash_attention(q, k, v, n_kv_heads=KV, impl="interpret",
+                                block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_model),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,di,st,bd,ck", [
+    (1, 64, 128, 8, 128, 32),
+    (2, 128, 256, 16, 128, 64),
+    (1, 256, 128, 4, 64, 256),
+])
+def test_selective_scan_sweep(B, S, di, st, bd, ck):
+    ks = jax.random.split(KEY, 5)
+    xc = jax.random.normal(ks[0], (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, S, st))
+    Cm = jax.random.normal(ks[3], (B, S, st))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, st)) * 0.3)
+    D = jnp.ones(di)
+    y_ref, h_ref = ref.selective_scan_ref(xc, dt, Bm, Cm, A, D)
+    y_pal, h_pal = ops.selective_scan(xc, dt, Bm, Cm, A, D, impl="interpret",
+                                      block_d=bd, chunk=ck)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,hd,ck", [
+    (1, 64, 2, 32, 32),
+    (2, 128, 4, 64, 64),
+])
+def test_mlstm_sweep(B, S, H, hd, ck):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    h_ref, _ = ref.mlstm_ref(q, k, v, ig, fg)
+    h_pal, _ = ops.mlstm(q, k, v, ig, fg, impl="interpret", chunk=ck)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1000, 37), (256,), (8, 8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_roundtrip_and_match(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 5).astype(dtype)
+    q_p, s_p, shp = ops.quantize_blockwise(x, impl="interpret")
+    q_r, s_r, _ = ref.quantize_blockwise_ref(x)
+    # reduction-order ULP differences in the per-block scale may flip a
+    # value sitting exactly on a quantization boundary by one step
+    dq = np.abs(np.asarray(q_p[:q_r.shape[0]], np.int32)
+                - np.asarray(q_r, np.int32))
+    assert dq.max() <= 1 and (dq > 0).mean() < 1e-3
+    x_back = ops.dequantize_blockwise(q_p, s_p, shp, impl="interpret")
+    assert x_back.shape == shape
+    scale = float(jnp.abs(x.astype(jnp.float32)).max())
+    err = float(jnp.abs(x.astype(jnp.float32) - x_back).max())
+    assert err <= scale / 127.0 + 1e-6   # int8 quantization bound

@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import averaging
+from repro.core.schedule import EpochController, clr_lr, relative_change
+from repro.data.partition import partition
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(10, 500), st.integers(1, 8), st.integers(0, 99))
+@settings(**SETTINGS)
+def test_partition_disjoint_and_equal(n, K, seed):
+    """The paper's random equal split: disjoint, equal-size shards."""
+    idx = partition(n, K, seed)
+    assert len(idx) == K
+    sizes = {len(i) for i in idx}
+    assert sizes == {n // K}
+    all_ids = np.concatenate(idx)
+    assert len(set(all_ids.tolist())) == len(all_ids)    # disjoint
+
+
+@given(st.floats(1e-4, 1.0), st.floats(0.01, 0.99), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_clr_monotone_within_round(eta, r, T):
+    """Eq.3 is a monotone decay from η^i to η^i · r within a round."""
+    lrs = [clr_lr(eta, r, j, T) for j in range(T + 1)]
+    assert all(b <= a + 1e-12 for a, b in zip(lrs, lrs[1:]))
+    assert np.isclose(lrs[0], eta)
+    assert np.isclose(lrs[-1], eta * r)
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=20),
+       st.floats(0.001, 0.5))
+@settings(**SETTINGS)
+def test_ile_T_is_monotone_nondecreasing_and_powers(rels, eps):
+    c = EpochController(T=5, epsilon=eps, rule="ile")
+    prev = c.T
+    for r in rels:
+        c = c.update(r)
+        assert c.T >= prev
+        assert c.T % 5 == 0 and (c.T // 5) & (c.T // 5 - 1) == 0  # 5·2^k
+        prev = c.T
+
+
+@given(st.integers(1, 6), st.integers(0, 99))
+@settings(**SETTINGS)
+def test_averaging_linearity(K, seed):
+    """avg(a + b) == avg(a) + avg(b) (Eq. 2 is linear)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = {"w": jax.random.normal(k1, (K, 3, 4))}
+    b = {"w": jax.random.normal(k2, (K, 3, 4))}
+    ab = jax.tree.map(jnp.add, a, b)
+    lhs = averaging.average_mean(ab)["w"]
+    rhs = averaging.average_mean(a)["w"] + averaging.average_mean(b)["w"]
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 6), st.integers(0, 99))
+@settings(**SETTINGS)
+def test_averaging_bounded_by_extremes(K, seed):
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(seed), (K, 5))}
+    avg = averaging.average_mean(stacked)["w"]
+    assert bool((avg <= stacked["w"].max(0) + 1e-6).all())
+    assert bool((avg >= stacked["w"].min(0) - 1e-6).all())
+
+
+@given(st.integers(0, 99))
+@settings(**SETTINGS)
+def test_relative_change_scale_invariant(seed):
+    k = jax.random.PRNGKey(seed)
+    a = {"w": jax.random.normal(k, (8,))}
+    b = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (8,))}
+    r1 = relative_change(a, b)
+    a2 = jax.tree.map(lambda t: t * 3.0, a)
+    b2 = jax.tree.map(lambda t: t * 3.0, b)
+    assert np.isclose(relative_change(a2, b2), r1, rtol=1e-5)
+
+
+@given(st.integers(1, 400), st.integers(0, 99))
+@settings(**SETTINGS)
+def test_quantize_error_bound(n, seed):
+    """int8 blockwise quantization: |x - dq(q(x))| <= blockmax/127."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10
+    q, s, shape = ref.quantize_blockwise_ref(x, block=64)
+    back = ref.dequantize_blockwise_ref(q, s, shape)
+    err = np.abs(np.asarray(x) - np.asarray(back))
+    blocks = np.pad(np.asarray(x), (0, (-n) % 64)).reshape(-1, 64)
+    bound = (np.abs(blocks).max(1) / 127.0 + 1e-7).repeat(64)[:n]
+    # rounding error is at most half a step; allow a full step for safety
+    assert (err <= bound).all()
+
+
+@given(st.integers(2, 5), st.integers(4, 16), st.integers(0, 9))
+@settings(max_examples=10, deadline=None)
+def test_softmax_xent_ignores_masked_positions(B, S, seed):
+    """Changing logits at ignored (-1) positions never changes the loss."""
+    from repro.models.layers import softmax_xent
+    k = jax.random.PRNGKey(seed)
+    V = 11
+    logits = jax.random.normal(k, (B, S, V))
+    labels = jax.random.randint(k, (B, S), 0, V).at[:, 0].set(-1)
+    l1 = softmax_xent(logits, labels)
+    logits2 = logits.at[:, 0].add(100.0)
+    l2 = softmax_xent(logits2, labels)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)

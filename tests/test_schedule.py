@@ -1,0 +1,56 @@
+"""Eq. 3 (CLR) and Eq. 4 (ILE) unit tests against hand-computed values."""
+import numpy as np
+import pytest
+
+from repro.core.schedule import (EpochController, clr_lr, elr_lr,
+                                 relative_change, round_lr)
+from repro.configs.base import CoLearnConfig
+
+
+def test_clr_eq3_values():
+    # η_j^i = η^i · r^(j/T_i), r=1/4 (paper's setting)
+    assert np.isclose(clr_lr(0.01, 0.25, 0, 8), 0.01)
+    assert np.isclose(clr_lr(0.01, 0.25, 8, 8), 0.0025)
+    assert np.isclose(clr_lr(0.01, 0.25, 4, 8), 0.01 * 0.25 ** 0.5)
+
+
+def test_clr_restarts_each_round():
+    cfg = CoLearnConfig(schedule="clr", T0=4)
+    lr_round0_start = round_lr(cfg, 0, 0, 4, 0, 100)
+    lr_round0_end = round_lr(cfg, 0, 3, 4, 3, 100)
+    lr_round1_start = round_lr(cfg, 1, 0, 4, 4, 100)
+    assert lr_round0_end < lr_round0_start
+    assert np.isclose(lr_round1_start, lr_round0_start)  # the cycle restart
+
+
+def test_elr_never_restarts():
+    cfg = CoLearnConfig(schedule="elr", T0=4)
+    lrs = [round_lr(cfg, i, j, 4, i * 4 + j, 16)
+           for i in range(4) for j in range(4)]
+    assert all(b < a for a, b in zip(lrs, lrs[1:]))  # strictly decreasing
+
+
+def test_ile_eq4_doubles_only_below_epsilon():
+    c = EpochController(T=5, epsilon=0.01, rule="ile")
+    c = c.update(0.5)        # big change: keep T
+    assert c.T == 5
+    c = c.update(0.009)      # below eps: double
+    assert c.T == 10
+    c = c.update(0.0001)
+    assert c.T == 20
+
+
+def test_fle_never_doubles():
+    c = EpochController(T=5, epsilon=0.01, rule="fle")
+    for rel in (0.5, 0.001, 0.0):
+        c = c.update(rel)
+    assert c.T == 5
+
+
+def test_relative_change():
+    import jax.numpy as jnp
+    a = {"w": jnp.ones((4,))}
+    b = {"w": jnp.ones((4,)) * 2}
+    # ||a - b|| / ||b|| = 2/4 = 0.5
+    assert np.isclose(relative_change(a, b), 0.5)
+    assert relative_change(a, a) == 0.0

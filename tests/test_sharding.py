@@ -1,0 +1,119 @@
+"""Distribution tests on a small forced-device mesh (subprocess: the main
+pytest process must keep the plain 1-device backend)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_smoke_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_sim_mesh
+from repro.sharding import specs as sp
+from repro.core import averaging
+from repro.models import transformer as tr
+
+mesh = make_sim_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = get_smoke_config("internlm2-1.8b")
+out = {}
+
+# 1) vanilla train step lowers+compiles and runs on the 3-axis mesh
+params = tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+pspecs = sp.param_specs(params, cfg, mesh)
+psh = sp.named(mesh, pspecs)
+bsh = sp.named(mesh, sp.batch_specs(cfg, mesh, "train"))
+step = steps_mod.make_train_step(cfg, lr=0.01)
+batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+         "labels": jnp.ones((8, 16), jnp.int32)}
+with jax.set_mesh(mesh):
+    fn = jax.jit(step, in_shardings=(psh, bsh))
+    new_params, loss = fn(params, batch)
+out["vanilla_loss_finite"] = bool(jnp.isfinite(loss))
+
+# 2) colearn vmapped step: per-pod replicas stay DIFFERENT after local steps
+K = 2
+stacked = averaging.stack_participants(params, K)
+stacked = jax.tree.map(
+    lambda t: t.at[1].multiply(1.5) if t.ndim > 0 else t, stacked)
+spshapes = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), stacked)
+spsh = sp.named(mesh, sp.param_specs(spshapes, cfg, mesh, participant=True))
+cbsh = sp.named(mesh, sp.batch_specs(cfg, mesh, "train", participant=True))
+cbatch = {"tokens": jnp.zeros((K, 4, 16), jnp.int32),
+          "labels": jnp.ones((K, 4, 16), jnp.int32)}
+cstep = steps_mod.make_colearn_train_step(cfg, lr=0.01)
+with jax.set_mesh(mesh):
+    cfn = jax.jit(cstep, in_shardings=(spsh, cbsh))
+    new_stacked, losses = cfn(stacked, cbatch)
+out["colearn_losses"] = [float(x) for x in losses]
+d = jax.tree.leaves(jax.tree.map(
+    lambda t: float(jnp.abs(t[0] - t[1]).max()), new_stacked))
+out["replicas_differ"] = max(d) > 0
+
+# 3) averaging: pjit mean == shard_map psum over 'pod'
+avg_p = jax.jit(averaging.average_pjit)(new_stacked)
+avg_sm_fn = averaging.make_average_shard_map(
+    mesh, sp.param_specs(spshapes, cfg, mesh, participant=True))
+avg_s = avg_sm_fn(new_stacked)
+diffs = [float(jnp.abs(a - b).max()) for a, b in
+         zip(jax.tree.leaves(avg_p), jax.tree.leaves(avg_s))]
+out["avg_match"] = max(diffs) < 1e-4
+out["avg_is_mean"] = bool(np.allclose(
+    np.asarray(jax.tree.leaves(avg_p)[0][0]),
+    np.asarray(jax.tree.leaves(new_stacked)[0].mean(0)), atol=1e-5))
+
+# 4) decode step lowers on the mesh
+cache = tr.init_cache(cfg, 8, 16, jnp.float32)
+csh = sp.named(mesh, sp.cache_specs(
+    jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), cache),
+    mesh, 8))
+with jax.set_mesh(mesh):
+    sfn = jax.jit(steps_mod.make_serve_step(cfg),
+                  in_shardings=(psh, csh, NamedSharding(mesh, P()),
+                                NamedSharding(mesh, P())))
+    logits, _ = sfn(new_params, cache, jnp.zeros((8, 1), jnp.int32),
+                    jnp.int32(0))
+out["decode_finite"] = bool(jnp.isfinite(logits).all())
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def mesh_results():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError("no RESULT line:\n" + proc.stdout[-2000:])
+
+
+def test_vanilla_step_on_mesh(mesh_results):
+    assert mesh_results["vanilla_loss_finite"]
+
+
+def test_colearn_replicas_independent(mesh_results):
+    assert mesh_results["replicas_differ"]
+    assert all(np.isfinite(l) for l in mesh_results["colearn_losses"])
+
+
+def test_average_pjit_matches_shard_map(mesh_results):
+    assert mesh_results["avg_match"]
+    assert mesh_results["avg_is_mean"]
+
+
+def test_decode_on_mesh(mesh_results):
+    assert mesh_results["decode_finite"]
+
+
+import numpy as np  # noqa: E402  (used in fixtures above)

@@ -1,0 +1,130 @@
+"""Optimizers, data pipeline, checkpointing, compression substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (restore_pytree, restore_round_state,
+                                 save_pytree, save_round_state)
+from repro.core.compression import compressed_bytes, quantize_roundtrip
+from repro.data.pipeline import ParticipantData
+from repro.data.partition import partition_arrays
+from repro.optim.optimizers import (SGD, AdamW, Momentum, apply_updates,
+                                    clip_by_global_norm, get_optimizer,
+                                    global_norm)
+
+
+def test_sgd_analytic():
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    opt = SGD()
+    upd, _ = opt.update(g, opt.init(p), p, lr=0.1)
+    new = apply_updates(p, upd)
+    np.testing.assert_allclose(new["w"], [0.95, 2.1], rtol=1e-6)
+
+
+def test_momentum_accumulates():
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    opt = Momentum(beta=0.5)
+    s = opt.init(p)
+    u1, s = opt.update(g, s, p, 1.0)
+    u2, s = opt.update(g, s, p, 1.0)
+    np.testing.assert_allclose(u1["w"], [-1.0])
+    np.testing.assert_allclose(u2["w"], [-1.5])   # 0.5*1 + 1
+
+
+def test_adamw_first_step_is_lr_sized():
+    p = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([0.3])}
+    opt = AdamW()
+    u, _ = opt.update(g, opt.init(p), p, lr=0.01)
+    np.testing.assert_allclose(u["w"], [-0.01], rtol=1e-4)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW()
+    p = {"w": jnp.array([5.0])}
+    s = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(lambda q: ((q["w"] - 2.0) ** 2).sum())(p)
+        u, s = opt.update(g, s, p, 0.1)
+        p = apply_updates(p, u)
+    np.testing.assert_allclose(p["w"], [2.0], atol=1e-2)
+
+
+def test_grad_clip():
+    g = {"w": jnp.array([3.0, 4.0])}
+    assert np.isclose(float(global_norm(g)), 5.0)
+    c = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(global_norm(c)), 1.0)
+    c2 = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(c2["w"], g["w"])
+
+
+def test_get_optimizer_names():
+    for n in ("sgd", "momentum", "adamw"):
+        get_optimizer(n)
+    with pytest.raises(KeyError):
+        get_optimizer("nope")
+
+
+# ---------------------------------------------------------------------------
+def test_pipeline_epochs_deterministic_and_batched():
+    x = np.arange(100, dtype=np.int32)
+    y = x * 2
+    shards = partition_arrays([x, y], 4, seed=1)
+    pd = ParticipantData(shards, batch_size=5, seed=3)
+    bx1, by1 = pd.epoch_batches(0, 0)
+    bx2, by2 = pd.epoch_batches(0, 0)
+    np.testing.assert_array_equal(bx1, bx2)          # deterministic
+    assert bx1.shape == (4, 5, 5)
+    np.testing.assert_array_equal(by1, bx1 * 2)      # pairing preserved
+    bx3, _ = pd.epoch_batches(0, 1)
+    assert not np.array_equal(bx1, bx3)              # reshuffled per epoch
+    # participant k only ever sees its own shard
+    for k in range(4):
+        assert set(bx1[k].ravel().tolist()) <= set(shards[k][0].tolist())
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+            "c": [jnp.ones(4, jnp.int32), jnp.zeros((2, 2), jnp.bfloat16)]}
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, tree)
+    like = jax.tree.map(lambda t: jnp.zeros_like(t), tree)
+    back = restore_pytree(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_round_state_roundtrip(tmp_path):
+    from repro.configs.base import CoLearnConfig
+    from repro.core.colearn import CoLearner
+    learner = CoLearner(CoLearnConfig(n_participants=2, T0=3),
+                        lambda p, b: (jnp.zeros(()), {}))
+    state = learner.init({"w": jnp.ones((2, 2))})
+    state["round"] = 4
+    state["global_epoch"] = 12
+    state["ctrl"] = state["ctrl"].update(0.001)      # doubles T
+    path = str(tmp_path / "round")
+    save_round_state(path, state)
+    fresh = learner.init({"w": jnp.zeros((2, 2))})
+    restored = restore_round_state(path, fresh)
+    assert restored["round"] == 4
+    assert restored["ctrl"].T == 6
+    np.testing.assert_allclose(restored["params"]["w"], state["params"]["w"])
+
+
+def test_compression_roundtrip_close_and_smaller():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)),
+            "tiny": jnp.ones(3)}
+    back = quantize_roundtrip(tree, block=256)
+    err = float(jnp.abs(tree["w"] - back["w"]).max())
+    assert err < float(jnp.abs(tree["w"]).max()) / 100
+    np.testing.assert_array_equal(back["tiny"], tree["tiny"])  # small skipped
+    raw = sum(t.size * 4 for t in jax.tree.leaves(tree))
+    assert compressed_bytes(tree) < raw / 3
