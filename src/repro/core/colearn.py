@@ -5,6 +5,18 @@ is plain Python; the heavy steps (K-participant local SGD epochs, Eq. 2
 averaging) are jitted JAX. The same `CoLearner` drives both the simulation
 path (K participants vmapped on one host — used by every paper-claims
 experiment) and the production path (K = pods, `spmd_axis_name='pod'`).
+
+Two round engines sit behind ``CoLearner(engine=...)``:
+
+  * ``"python"`` — the reference path: a host loop dispatching one jitted
+    epoch at a time, host-side Eq. 3 learning rates and Eq. 4 metric.
+  * ``"fused"``  — ``repro.core.engine``: the whole round (T_i-epoch scan
+    with the CLR computed traced in-graph, Eq. 2 averaging, on-device
+    Eq. 4 relative_change) is one donated XLA executable with a single
+    host sync; rounds longer than ``fused_chunk`` epochs chain chunk
+    executables to bound staged-batch memory (still one final sync).
+    Same state transitions and RoundLog; equivalence is asserted in
+    tests/test_engine.py.
 """
 from __future__ import annotations
 
@@ -15,10 +27,11 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import averaging
+from repro.core import averaging, engine as engine_mod
 from repro.core.schedule import EpochController, relative_change, round_lr
-from repro.optim.optimizers import apply_updates, get_optimizer
+from repro.optim.optimizers import get_optimizer
 
 
 @dataclass
@@ -43,26 +56,27 @@ class CoLearner:
     loss_fn: Callable
     optimizer_name: str = "sgd"
     compress_fn: Optional[Callable] = None    # stacked params -> stacked params
+    engine: str = "python"                    # python (reference) | fused
+    fused_chunk: int = 32                     # max epochs staged on device
 
     def __post_init__(self):
+        if self.engine not in ("python", "fused"):
+            raise ValueError(f"unknown engine {self.engine!r}")
         self.opt = get_optimizer(self.optimizer_name)
-        self._jit_epoch = jax.jit(self._epoch, static_argnames=())
+        # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
+        # the python path jits it per-epoch, the fused paths scan over it
+        self._jit_epoch = jax.jit(
+            engine_mod.make_epoch_fn(self.loss_fn, self.opt))
         self._jit_avg = jax.jit(averaging.average_pjit)
-
-    # -- one SGD epoch for all K participants (vmapped) ---------------------
-    def _epoch(self, stacked_params, opt_state, batches, lr):
-        """batches: (K, n_batches, ...) pytree; one full local epoch."""
-        def one_participant(params, ostate, pbatches):
-            def step(carry, batch):
-                params, ostate = carry
-                (loss, _), grads = jax.value_and_grad(
-                    self.loss_fn, has_aux=True)(params, batch)
-                upd, ostate = self.opt.update(grads, ostate, params, lr)
-                return (apply_updates(params, upd), ostate), loss
-            (params, ostate), losses = jax.lax.scan(
-                step, (params, ostate), pbatches)
-            return params, ostate, losses.mean()
-        return jax.vmap(one_participant)(stacked_params, opt_state, batches)
+        kw = dict(compress_fn=self.compress_fn,
+                  total_epochs=self.total_epochs_budget())
+        self._fused_round = engine_mod.make_fused_round(
+            self.loss_fn, self.opt, self.cfg, **kw)
+        self._fused_epochs = engine_mod.make_fused_epochs(
+            self.loss_fn, self.opt, self.cfg,
+            total_epochs=self.total_epochs_budget())
+        self._fused_finalize = engine_mod.make_fused_finalize(
+            self.opt, compress_fn=self.compress_fn)
 
     # -- Algorithm 1 ---------------------------------------------------------
     def init(self, params):
@@ -88,21 +102,99 @@ class CoLearner:
         epoch_batches_fn(round, epoch) -> (K, n_batches, B, ...) pytree for
         that local epoch (each participant sees only its own disjoint shard —
         the data never crosses participants, only parameters do).
+
+        Dispatches to the configured round engine; both engines apply the
+        identical state transition (params, opt reset, controller, log).
         """
+        if self.engine == "fused":
+            return self._run_round_fused(state, epoch_batches_fn)
+        return self._run_round_python(state, epoch_batches_fn)
+
+    def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
+                      lr_last, averaged, fresh_opt, new_avg):
+        """The one round state transition, shared verbatim by both engines.
+
+        ``fresh_opt`` is the per-participant opt reset (opt state is
+        intentionally NOT averaged: the paper restarts local training from
+        the shared model each round). ``new_avg`` stays device-side — no
+        full-model host transfer per round.
+        """
+        state["params"], state["opt"] = averaged, fresh_opt
+        state["prev_avg"] = new_avg
+        state["ctrl"] = state["ctrl"].update(rel)
+        state["global_epoch"] += T_i
+        # comm volume: each participant uploads + downloads the full model
+        comm = 2 * self.param_bytes(state)
+        state["round"] = i + 1
+        state["log"].append(RoundLog(i, T_i, lr_first, lr_last, rel,
+                                     local_losses, comm))
+        return state
+
+    def _run_round_fused(self, state, epoch_batches_fn):
+        """One round as one (or, past ``fused_chunk`` epochs, a few chained)
+        donated executables — zero host syncs until the final aux fetch."""
+        i = state["round"]
+        T_i = state["ctrl"].T
+        ge0 = jnp.int32(state["global_epoch"])
+        # state["params"]/["opt"] are reassigned immediately after every
+        # donating call below, so an exception mid-round (e.g. from
+        # epoch_batches_fn) can never leave state holding deleted buffers.
+        if T_i <= self.fused_chunk:
+            batches = engine_mod.stack_epoch_batches(
+                [epoch_batches_fn(i, j) for j in range(T_i)])
+            averaged, fresh_opt, aux = self._fused_round(
+                state["params"], state["opt"], batches, ge0)
+            state["params"], state["opt"] = averaged, fresh_opt
+            new_avg = aux["new_avg"]
+            # the round's single host sync (scalars/loss curves only — the
+            # averaged model itself stays on device)
+            losses, lrs, rel_dev = jax.device_get(
+                (aux["losses"], aux["lrs"], aux["rel"]))
+        else:
+            # staging all T_i epochs at once would cost device memory linear
+            # in T_i (which ILE doubles); chain chunk executables instead.
+            # j0/T_i/ge0 are traced, so chunks reuse one compiled program.
+            old_avg = averaging.unstack_participant(state["params"], 0)
+            lparts, rparts, j0 = [], [], 0
+            while j0 < T_i:
+                C = min(self.fused_chunk, T_i - j0)
+                batches = engine_mod.stack_epoch_batches(
+                    [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
+                params, opt_st, l, r = self._fused_epochs(
+                    state["params"], state["opt"], batches, jnp.int32(j0),
+                    jnp.int32(T_i), ge0)
+                state["params"], state["opt"] = params, opt_st
+                lparts.append(l)
+                rparts.append(r)
+                j0 += C
+            averaged, fresh_opt, rel_t, new_avg = self._fused_finalize(
+                state["params"], old_avg)
+            state["params"], state["opt"] = averaged, fresh_opt
+            lparts, rparts, rel_dev = jax.device_get((lparts, rparts, rel_t))
+            losses = np.concatenate(lparts)
+            lrs = np.concatenate(rparts)
+        rel = float("inf") if state["prev_avg"] is None else float(rel_dev)
+        return self._finish_round(state, i, T_i, rel,
+                                  [float(l.mean()) for l in losses],
+                                  float(lrs[0]), float(lrs[-1]),
+                                  averaged, fresh_opt, new_avg)
+
+    def _run_round_python(self, state, epoch_batches_fn):
+        """Reference path: one jit dispatch + host sync per local epoch."""
         cfg = self.cfg
         i = state["round"]
         T_i = state["ctrl"].T
+        ge0 = state["global_epoch"]
         lrs = []
         losses = []
         for j in range(T_i):
-            lr = float(round_lr(cfg, i, j, T_i, state["global_epoch"],
+            lr = float(round_lr(cfg, i, j, T_i, ge0 + j,
                                 self.total_epochs_budget()))
             lrs.append(lr)
             batches = epoch_batches_fn(i, j)
             params, opt, l = self._jit_epoch(
                 state["params"], state["opt"], batches, lr)
             state["params"], state["opt"] = params, opt
-            state["global_epoch"] += 1
             losses.append(jax.device_get(l))
 
         # -- upload + aggregate (Eq. 2); optional beyond-paper compression --
@@ -111,22 +203,13 @@ class CoLearner:
             uploaded = self.compress_fn(uploaded)
         averaged = self._jit_avg(uploaded)
         new_avg = averaging.unstack_participant(averaged, 0)
-
         rel = (float("inf") if state["prev_avg"] is None
                else relative_change(new_avg, state["prev_avg"]))
-        state["prev_avg"] = jax.device_get(new_avg)
-        state["ctrl"] = state["ctrl"].update(rel)
-        state["params"] = averaged
-        # opt state intentionally NOT averaged (each participant restarts
-        # from the shared model; paper resets local training each round)
-        state["opt"] = jax.vmap(self.opt.init)(averaged)
-
-        # comm volume: each participant uploads + downloads the full model
-        comm = 2 * self.param_bytes(state)
-        state["round"] = i + 1
-        state["log"].append(RoundLog(i, T_i, lrs[0], lrs[-1], rel,
-                                     [float(x.mean()) for x in losses], comm))
-        return state
+        fresh_opt = jax.vmap(self.opt.init)(averaged)
+        return self._finish_round(state, i, T_i, rel,
+                                  [float(x.mean()) for x in losses],
+                                  lrs[0], lrs[-1], averaged, fresh_opt,
+                                  new_avg)
 
     def shared_model(self, state):
         return averaging.unstack_participant(state["params"], 0)

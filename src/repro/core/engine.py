@@ -1,0 +1,211 @@
+"""Fused round engine — one XLA executable per communication round.
+
+The reference implementation of Algorithm 1 (``CoLearner.run_round`` with
+``engine="python"``) drives the T_i local epochs from a host loop: one jit
+dispatch + one blocking ``device_get`` per epoch, plus a host-side Eq. 4
+``relative_change`` over the parameter leaves. Since the paper's protocol
+spends nearly all wall-clock inside those local epochs, that dispatch
+overhead sits directly on the hottest path.
+
+``make_fused_round`` instead compiles the *whole* round into a single
+donated jit:
+
+    lax.scan over the T_i local epochs          (Eq. 3 CLR/ELR computed
+        |                                        *traced* inside the scan
+        |  each epoch: vmap over K participants, via ``schedule.clr_lr`` /
+        |  inner lax.scan over that epoch's      ``schedule.elr_lr``)
+        v  batches
+    Eq. 2 averaging (``average_fn``)
+    Eq. 4 relative_change, on-device            (``relative_change_traced``)
+
+so a round costs one dispatch and exactly one host sync (the aux fetch at
+the end). T_i is baked from the stacked batch shape — the executable is
+recompiled only when the Eq. 4 controller doubles T_i, i.e. O(log T_max)
+times per run.
+
+Staging T_i epochs of batches on device costs memory linear in T_i, and
+the ILE rule doubles T_i. For large rounds ``CoLearner`` therefore caps
+the staged window at ``fused_chunk`` epochs and strings together
+``make_fused_epochs`` executables (same in-scan schedule, j/T_i/epoch
+offsets passed traced so chunks never recompile as T_i grows) followed by
+one ``make_fused_finalize`` executable (Eq. 2 + Eq. 4 + opt reset). The
+round is then ceil(T_i/chunk)+1 dispatches — still zero host syncs until
+the final aux fetch.
+
+Backend API — shared by the simulation and pod paths:
+
+  * simulation (single host, K vmapped participants): the defaults.
+  * pod (K = pods on a multi-pod mesh): pass ``spmd_axis_name="pod"`` so
+    the participant vmap is pinned to the ``pod`` mesh axis, and an
+    ``average_fn`` built by ``averaging.make_average_shard_map`` to pin
+    Eq. 2 to an explicit shard_map psum over that axis
+    (``launch/steps.make_fused_round_step`` wires this for the dry-run).
+
+``CoLearner(engine="fused"|"python")`` selects between this engine and the
+reference loop; both produce the same ``RoundLog``/state transitions and
+are asserted equivalent to <=1e-5 in ``tests/test_engine.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import averaging
+from repro.core.schedule import clr_lr, elr_lr, relative_change_traced
+from repro.optim.optimizers import apply_updates
+
+
+def stack_epoch_batches(per_epoch):
+    """Stack a list of per-epoch (K, n_batches, ...) pytrees along a new
+    leading epoch axis — the shape the fused epoch scan consumes."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_epoch)
+
+
+def make_epoch_fn(loss_fn, opt, spmd_axis_name=None):
+    """One local epoch for all K participants (vmapped).
+
+    Returns epoch_fn(stacked_params, opt_state, batches, lr) ->
+    (stacked_params, opt_state, per-participant mean loss). This is THE
+    local-epoch body: the python reference loop jits it directly and the
+    fused engine scans over it, so the SGD semantics cannot diverge.
+    """
+    def one_participant(params, ostate, pbatches, lr):
+        def step(carry, batch):
+            params, ostate = carry
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            upd, ostate = opt.update(grads, ostate, params, lr)
+            return (apply_updates(params, upd), ostate), loss
+        (params, ostate), losses = jax.lax.scan(step, (params, ostate),
+                                                pbatches)
+        return params, ostate, losses.mean()
+
+    vmap_kw = {"spmd_axis_name": spmd_axis_name} if spmd_axis_name else {}
+    return jax.vmap(one_participant, in_axes=(0, 0, 0, None), **vmap_kw)
+
+
+def _make_epoch_scan(epoch_fn, cfg, total_epochs):
+    """scan_epochs(params, opt, batches, j0, T_i, ge0): run the leading-dim
+    epochs of ``batches`` with the Eq. 3 schedule computed traced in-scan.
+
+    j0 (round-local offset of the first staged epoch), T_i (the round's
+    CLR denominator) and ge0 (global epoch at round start, ELR) may all be
+    traced, so a chunk executable is reused unchanged as T_i doubles.
+    """
+    def scan_epochs(stacked_params, opt_state, batches, j0, T_i,
+                    global_epoch0):
+        n = jax.tree.leaves(batches)[0].shape[0]
+
+        def body(carry, xs):
+            params, ostate = carry
+            j, ebatches = xs
+            if cfg.schedule == "clr":
+                lr = clr_lr(cfg.eta0, cfg.decay_rate, j, T_i)
+            else:
+                lr = elr_lr(cfg.eta0, cfg.decay_rate, global_epoch0 + j,
+                            total_epochs)
+            params, ostate, loss = epoch_fn(params, ostate, ebatches, lr)
+            return (params, ostate), (loss, lr)
+
+        return jax.lax.scan(body, (stacked_params, opt_state),
+                            (j0 + jnp.arange(n), batches))
+    return scan_epochs
+
+
+def _make_finalize(opt, compress_fn, average_fn):
+    """Eq. 2 averaging + Eq. 4 metric + per-participant opt reset."""
+    def finalize(params, old_avg):
+        uploaded = compress_fn(params) if compress_fn is not None else params
+        averaged = average_fn(uploaded)
+        new_avg = averaging.unstack_participant(averaged, 0)
+        rel = relative_change_traced(new_avg, old_avg)
+        # paper: local opt state is discarded; restart from the shared model
+        fresh_opt = jax.vmap(opt.init)(averaged)
+        return averaged, fresh_opt, rel, new_avg
+    return finalize
+
+
+def _resolve(cfg, total_epochs, average_fn):
+    if total_epochs is None:
+        total_epochs = max(cfg.T0 * cfg.max_rounds, 1)
+    if average_fn is None:
+        average_fn = averaging.average_pjit
+    return total_epochs, average_fn
+
+
+def make_fused_round(loss_fn, opt, cfg, *, compress_fn=None,
+                     total_epochs=None, spmd_axis_name=None,
+                     average_fn=None, donate=True):
+    """Build the single-executable round: epoch scan + Eq. 2 + Eq. 4.
+
+    loss_fn(params, batch) -> (loss, aux) for ONE participant.
+    opt: optimizer triple (init/update) from ``repro.optim.optimizers``.
+    cfg: CoLearnConfig — supplies schedule kind, eta0, decay_rate.
+    compress_fn: optional stacked->stacked upload transform, traced into
+        the same executable (wire-format emulation stays on device).
+    total_epochs: ELR anneal denominator (default T0 * max_rounds).
+    spmd_axis_name: e.g. "pod" to pin the participant vmap to a mesh axis.
+    average_fn: Eq. 2 implementation over stacked params (default
+        ``averaging.average_pjit``); inlines into the round executable.
+
+    Returns round_fn(stacked_params, opt_state, batches, global_epoch0)
+      -> (averaged_params, fresh_opt_state, aux) with aux = {losses (T,K),
+         lrs (T,), rel (scalar), new_avg (unstacked averaged model)}.
+    ``batches`` is a (T_i, K, n_batches, ...) pytree; ``global_epoch0`` a
+    traced int32 so ELR never retriggers compilation. stacked_params and
+    opt_state are donated.
+    """
+    total_epochs, average_fn = _resolve(cfg, total_epochs, average_fn)
+    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
+                                                 spmd_axis_name),
+                                   cfg, total_epochs)
+    finalize = _make_finalize(opt, compress_fn, average_fn)
+
+    def round_fn(stacked_params, opt_state, batches, global_epoch0):
+        T_i = jax.tree.leaves(batches)[0].shape[0]
+        # round entry: every slot holds the shared model w̄^{i-1}
+        old_avg = averaging.unstack_participant(stacked_params, 0)
+        (params, opt_out), (losses, lrs) = scan_epochs(
+            stacked_params, opt_state, batches, 0, T_i, global_epoch0)
+        del opt_out  # paper: local opt state is discarded at aggregation
+        averaged, fresh_opt, rel, new_avg = finalize(params, old_avg)
+        return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
+                                     "rel": rel, "new_avg": new_avg}
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(round_fn, donate_argnums=donate_argnums)
+
+
+def make_fused_epochs(loss_fn, opt, cfg, *, total_epochs=None,
+                      spmd_axis_name=None, donate=True):
+    """Memory-bounded building block: a scan over ONE CHUNK of epochs.
+
+    Returns epochs_fn(stacked_params, opt_state, batches, j0, T_i, ge0)
+      -> (stacked_params, opt_state, losses (C,K), lrs (C,)).
+    j0/T_i/ge0 are traced, so the executable is shared across chunks and
+    across T_i doublings; only a distinct chunk length C recompiles.
+    """
+    total_epochs, _ = _resolve(cfg, total_epochs, None)
+    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
+                                                 spmd_axis_name),
+                                   cfg, total_epochs)
+
+    def epochs_fn(stacked_params, opt_state, batches, j0, T_i,
+                  global_epoch0):
+        (params, ostate), (losses, lrs) = scan_epochs(
+            stacked_params, opt_state, batches, j0, T_i, global_epoch0)
+        return params, ostate, losses, lrs
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(epochs_fn, donate_argnums=donate_argnums)
+
+
+def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
+                        donate=True):
+    """End-of-round executable for the chunked path: Eq. 2 + Eq. 4 + opt
+    reset. finalize_fn(params, old_avg) -> (averaged, fresh_opt, rel,
+    new_avg); ``params`` is donated."""
+    if average_fn is None:
+        average_fn = averaging.average_pjit
+    finalize = _make_finalize(opt, compress_fn, average_fn)
+    return jax.jit(finalize, donate_argnums=(0,) if donate else ())

@@ -59,12 +59,31 @@ class EpochController:
             self, T=T, history=self.history + ((rel_change, T),))
 
 
-def relative_change(new_avg, old_avg) -> float:
-    """‖w̄^i − w̄^{i−1}‖ / ‖w̄^{i−1}‖ over the flattened parameter pytree."""
-    num = 0.0
-    den = 0.0
+def relative_change_traced(new_avg, old_avg):
+    """Eq. 4 metric as a traced scalar — usable inside jit/scan.
+
+    ‖w̄^i − w̄^{i−1}‖ / ‖w̄^{i−1}‖ over the flattened parameter pytree,
+    accumulated on-device in float32. The fused round engine embeds this
+    right after Eq. 2 averaging so the whole round has one host sync.
+    """
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
     for a, b in zip(jax.tree.leaves(new_avg), jax.tree.leaves(old_avg)):
-        d = (a.astype(jnp.float32) - b.astype(jnp.float32))
-        num += float(jnp.sum(d * d))
-        den += float(jnp.sum(b.astype(jnp.float32) ** 2))
-    return (num ** 0.5) / max(den ** 0.5, 1e-12)
+        d = a.astype(jnp.float32) - b.astype(jnp.float32)
+        num += jnp.sum(d * d)
+        den += jnp.sum(b.astype(jnp.float32) ** 2)
+    return jnp.sqrt(num) / jnp.maximum(jnp.sqrt(den), 1e-12)
+
+
+@jax.jit
+def _relative_change_jit(new_avg, old_avg):
+    return relative_change_traced(new_avg, old_avg)
+
+
+def relative_change(new_avg, old_avg) -> float:
+    """Host-facing Eq. 4 metric: one jitted reduction, one device_get.
+
+    (The previous implementation pulled two scalars to the host per
+    parameter leaf — 2·n_leaves blocking transfers per round.)
+    """
+    return float(jax.device_get(_relative_change_jit(new_avg, old_avg)))

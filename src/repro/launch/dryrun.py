@@ -31,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch import analytic, steps as steps_mod
 from repro.launch.mesh import make_production_mesh
-from repro.sharding import specs as sp
+from repro.sharding import compat, specs as sp
 
 DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
@@ -136,7 +136,8 @@ def build(cfg, shape, mesh, multi_pod, variant, lowering):
     """Returns (jitted_fn, abstract args)."""
     pshapes = steps_mod.params_shapes(cfg)
     K = mesh.shape.get("pod", 1)
-    participant = variant in ("train_colearn", "average") and multi_pod
+    participant = (variant in ("train_colearn", "average", "round_colearn")
+                   and multi_pod)
 
     if participant:
         pshapes = jax.tree.map(
@@ -165,6 +166,30 @@ def build(cfg, shape, mesh, multi_pod, variant, lowering):
                      donate_argnums=(0,))
         return fn, (pshapes,)
 
+    if variant == "round_colearn":
+        # fused round engine on the pod mesh: T_dry-epoch scan + shard_map
+        # Eq. 2 + on-device Eq. 4, compiled as ONE program. T_dry=2 and one
+        # batch per epoch keep the compile bounded while still exercising
+        # the epoch scan (the real T_i only changes scan trip count).
+        from repro.configs.base import CoLearnConfig
+        T_dry, n_b = 2, 1
+        data = steps_mod.input_specs(cfg, shape, participants=K)
+        data = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(
+                (T_dry, v.shape[0], n_b, *v.shape[1:]), v.dtype), data)
+        bspecs = sp.batch_specs(cfg, mesh, "train", participant=True)
+        rspecs = jax.tree.map(lambda s: P(None, *s[:1], None, *s[1:]),
+                              bspecs, is_leaf=lambda x: isinstance(x, P))
+        rbsh = sp.named(mesh, rspecs)
+        ccfg = CoLearnConfig(n_participants=K, T0=T_dry, max_rounds=1)
+        round_fn = steps_mod.make_fused_round_step(
+            cfg, ccfg, lowering=lowering, mesh=mesh,
+            param_specs=sp.param_specs(pshapes, cfg, mesh, participant=True))
+        fn = jax.jit(round_fn,
+                     in_shardings=(psh, (), rbsh, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        return fn, (pshapes, (), data, jax.ShapeDtypeStruct((), jnp.int32))
+
     if variant == "prefill":
         data = steps_mod.input_specs(cfg, shape)
         bspecs = sp.named(mesh, sp.batch_specs(cfg, mesh, "train"))
@@ -188,7 +213,7 @@ def build(cfg, shape, mesh, multi_pod, variant, lowering):
 
 def _compile(cfg, shape, mesh, multi_pod, variant, lowering):
     fn, args = build(cfg, shape, mesh, multi_pod, variant, lowering)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         compiled = fn.lower(*args).compile()
     return compiled
 
@@ -273,21 +298,22 @@ def run_one(arch, shape_name, mesh_kind, variant, profile=True):
         "scan_raw_cost": _costs(compiled, multi_pod),
         "analytic": {
             "model_flops": analytic.model_flops(cfg, shape, shape.kind)
-            if variant != "average" else 0.0,
+            if variant not in ("average", "round_colearn") else 0.0,
             "scan_correction_flops":
                 analytic.scan_corrections(cfg, shape, shape.kind)
-                if variant != "average" else 0.0,
+                if variant not in ("average", "round_colearn") else 0.0,
         },
     }
     del compiled
-    if profile and variant != "average":
+    if profile and variant not in ("average", "round_colearn"):
         rec["profile"] = profile_costs(cfg, shape, mesh, multi_pod, variant)
     return rec
 
 
 VARIANTS = {
     "train": {"single": ["train_vanilla"],
-              "multi": ["train_vanilla", "train_colearn", "average"]},
+              "multi": ["train_vanilla", "train_colearn", "average",
+                        "round_colearn"]},
     "prefill": {"single": ["prefill"], "multi": ["prefill"]},
     "decode": {"single": ["serve"], "multi": ["serve"]},
 }

@@ -133,6 +133,43 @@ def make_average_step():
     return average_pjit
 
 
+def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
+                          impl="ref", remat=True, mesh=None,
+                          param_specs=None):
+    """Pod-path fused round: the whole communication round as one program.
+
+    Shares ``repro.core.engine`` with the simulation path, but pins the
+    participant vmap to the ``pod`` mesh axis (``spmd_axis_name``) and — when
+    ``mesh``/``param_specs`` are given — Eq. 2 to an explicit shard_map psum
+    over that axis instead of an inferred all-reduce.
+
+    Returns round_fn(stacked_params, opt_state, batches, global_epoch0);
+    ``batches`` is the (T_i, K, n_batches, ...) stacked-epoch batch dict.
+    """
+    from repro.core import engine as engine_mod
+    from repro.core.averaging import make_average_shard_map
+    from repro.optim.optimizers import get_optimizer as _get_opt
+    from repro.sharding.constrain import batch_axes
+
+    def loss_fn(params, batch):
+        return tr.loss_fn(params, cfg, batch, lowering, impl, remat)
+
+    average_fn = None
+    if mesh is not None and param_specs is not None:
+        average_fn = make_average_shard_map(mesh, param_specs)
+
+    fused = engine_mod.make_fused_round(
+        loss_fn, _get_opt(optimizer), ccfg, spmd_axis_name="pod",
+        average_fn=average_fn, donate=False)
+
+    def round_fn(stacked_params, opt_state, batches, global_epoch0):
+        # the engine's vmap consumes the pod axis; in-model "dp" hints must
+        # then resolve to data only (same contract as the colearn step)
+        with batch_axes(("data",)):
+            return fused(stacked_params, opt_state, batches, global_epoch0)
+    return round_fn
+
+
 def make_prefill_step(cfg, lowering="scan", impl="ref"):
     def prefill_step(params, batch):
         return tr.prefill(params, cfg, batch, lowering, impl)

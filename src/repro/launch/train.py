@@ -36,12 +36,17 @@ def build_data(cfg, K, batch_size, seq_len, n_examples, seed=0):
     return ParticipantData(shards, batch_size, seed)
 
 
+# Module-level so every eval batch reuses one compiled executable; a
+# jax.jit created inside the loop is a fresh wrapper (and retrace) per batch.
+_eval_loss_step = jax.jit(tr.loss_fn, static_argnums=(1,))
+
+
 def eval_loss(params, cfg, x, y, batch=64):
     tot, n = 0.0, 0
     for i in range(0, len(x) - batch + 1, batch):
         b = {"tokens": jnp.asarray(x[i:i + batch]),
              "labels": jnp.asarray(y[i:i + batch])}
-        loss, _ = jax.jit(tr.loss_fn, static_argnums=(1,))(params, cfg, b)
+        loss, _ = _eval_loss_step(params, cfg, b)
         tot += float(loss) * batch
         n += batch
     return tot / max(n, 1)
@@ -64,6 +69,9 @@ def main(argv=None):
     ap.add_argument("--steps-per-epoch", type=int, default=0,
                     help="truncate each epoch to this many batches (0=full)")
     ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--engine", default="fused", choices=["fused", "python"],
+                    help="round engine: fused = one executable per round "
+                         "(repro.core.engine); python = reference loop")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -85,12 +93,14 @@ def main(argv=None):
 
     learner = CoLearner(ccfg, loss_fn, optimizer_name=args.optimizer,
                         compress_fn=(make_compress_fn() if
-                                     args.compress == "int8" else None))
+                                     args.compress == "int8" else None),
+                        engine=args.engine)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)
     print(f"co-learning {cfg.name}: K={K} params="
           f"{tr.count_params(params):,} rounds={args.rounds} T0={args.t0} "
-          f"{args.schedule}+{args.epochs_rule}", flush=True)
+          f"{args.schedule}+{args.epochs_rule} engine={args.engine}",
+          flush=True)
 
     for i in range(args.rounds):
         t0 = time.time()

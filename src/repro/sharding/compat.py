@@ -1,0 +1,56 @@
+"""Version-compat shims for the moving jax mesh / shard_map API surface.
+
+The repo targets the *new* spellings (``jax.set_mesh``, ``jax.shard_map``
+with ``check_vma``) but must run on the pinned toolchain image, whose
+jax 0.4.37 predates both. Rationale for a dedicated module instead of
+inline try/excepts: every mesh-entry and shard_map call site in the repo
+(tests, dryrun, averaging, the fused round engine) goes through exactly
+one shim each, so the day the image moves to jax>=0.6 the fallbacks are
+deleted in one place and the call sites never change.
+
+Resolution order:
+
+``use_mesh(mesh)``
+    1. ``jax.set_mesh``            (jax >= 0.6 context-manager form)
+    2. ``jax.sharding.use_mesh``   (jax ~0.5 experimental spelling)
+    3. the ``Mesh`` object itself  (jax <= 0.4.x: ``with mesh:``)
+
+``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+    1. ``jax.shard_map``                         (keyword ``check_vma``)
+    2. ``jax.experimental.shard_map.shard_map``  (keyword ``check_rep``)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh, on any jax."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    sharding_use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if sharding_use_mesh is not None:
+        return sharding_use_mesh(mesh)
+    # jax <= 0.4.x: Mesh is itself a context manager
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the old/new replication-check kwarg mapped.
+
+    The kwarg is chosen by inspecting the resolved function's signature,
+    not by where it lives: mid-range jax versions promoted ``jax.shard_map``
+    while it still took ``check_rep``.
+    """
+    import inspect
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        params = inspect.signature(sm).parameters
+        kwarg = "check_vma" if "check_vma" in params else "check_rep"
+    except (TypeError, ValueError):
+        kwarg = "check_vma"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kwarg: check_vma})

@@ -1,0 +1,225 @@
+"""Fused round engine (repro.core.engine) vs the python reference loop.
+
+The acceptance bar for the fused engine: the shared model after 3 rounds
+matches the python-loop engine to <=1e-5 (we observe bitwise equality on
+CPU), and the Eq. 4 ILE doubling / Eq. 3 CLR restart behaviour is
+identical even though the fused path computes the schedule *traced*
+inside the epoch scan.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import engine as engine_mod
+from repro.core.colearn import CoLearner
+from repro.core.schedule import clr_lr
+
+
+def tiny_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {"loss": loss}
+
+
+def tiny_params(key=0, d=4):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, 1)), "b": jnp.zeros((1,))}
+
+
+def tiny_batches(K, n_batches, B, d=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (K, n_batches, B, d))
+    w_true = jnp.arange(1.0, d + 1)[:, None]
+    return (x, x @ w_true)
+
+
+def run_both(cfg, loss_fn, params, batches_fn, rounds, **kw):
+    out = {}
+    for eng in ("python", "fused"):
+        learner = CoLearner(cfg, loss_fn, engine=eng, **kw)
+        state = learner.init(params)
+        for _ in range(rounds):
+            state = learner.run_round(state, batches_fn)
+        out[eng] = (learner.shared_model(state), state)
+    return out
+
+
+def max_abs_diff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("schedule", ["clr", "elr"])
+@pytest.mark.parametrize("rule", ["ile", "fle"])
+def test_fused_matches_python_all_schedules(schedule, rule):
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=0.5,
+                        schedule=schedule, epochs_rule=rule, max_rounds=3)
+    b = tiny_batches(3, 4, 8)
+    out = run_both(cfg, tiny_loss, tiny_params(), lambda i, j: b, rounds=3)
+    (mp, sp_), (mf, sf) = out["python"], out["fused"]
+    assert max_abs_diff(mp, mf) <= 1e-5
+    # identical controller decisions and round bookkeeping
+    assert [l.T for l in sp_["log"]] == [l.T for l in sf["log"]]
+    assert sp_["ctrl"].T == sf["ctrl"].T
+    assert sp_["global_epoch"] == sf["global_epoch"]
+    for lp, lf in zip(sp_["log"], sf["log"]):
+        np.testing.assert_allclose(lp.local_losses, lf.local_losses,
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose([lp.lr_first, lp.lr_last],
+                                   [lf.lr_first, lf.lr_last], rtol=1e-6)
+        assert lp.comm_bytes == lf.comm_bytes
+
+
+@pytest.mark.parametrize("optimizer", ["momentum", "adamw"])
+def test_fused_matches_python_stateful_optimizers(optimizer):
+    """Opt state threads through the fused epoch scan exactly like the loop."""
+    cfg = CoLearnConfig(n_participants=2, T0=3, eta0=0.01, epsilon=0.5,
+                        max_rounds=2)
+    b = tiny_batches(2, 3, 8)
+    out = run_both(cfg, tiny_loss, tiny_params(), lambda i, j: b, rounds=2,
+                   optimizer_name=optimizer)
+    assert max_abs_diff(out["python"][0], out["fused"][0]) <= 1e-5
+
+
+def test_fused_matches_python_with_compression():
+    from repro.core.compression import make_compress_fn
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=0.5,
+                        max_rounds=2)
+    b = tiny_batches(3, 2, 8)
+    out = run_both(cfg, tiny_loss, tiny_params(), lambda i, j: b, rounds=2,
+                   compress_fn=make_compress_fn())
+    assert max_abs_diff(out["python"][0], out["fused"][0]) <= 1e-5
+
+
+def test_fused_matches_python_smoke_transformer():
+    """The ISSUE acceptance bar: <=1e-5 over 3 rounds on the smoke config."""
+    from repro.configs import get_smoke_config
+    from repro.data.partition import partition_arrays
+    from repro.data.pipeline import ParticipantData
+    from repro.data.synthetic import lm_examples
+    from repro.models import transformer as tr
+
+    cfg = get_smoke_config("internlm2-1.8b").with_(
+        n_layers=1, segments=((("gqa:dense",), 1),))
+    K = 3
+    x, y = lm_examples(0, 240, 32, cfg.vocab_size)
+    data = ParticipantData(partition_arrays([x, y], K, 0), batch_size=8)
+
+    def loss_fn(params, batch):
+        bx, by = batch
+        return tr.loss_fn(params, cfg, {"tokens": bx, "labels": by})
+
+    def eb(i, j):
+        return tuple(map(jnp.asarray, data.epoch_batches(i, j)))
+
+    ccfg = CoLearnConfig(n_participants=K, T0=1, eta0=0.05, epsilon=1e-6,
+                         max_rounds=3)
+    params = tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    out = run_both(ccfg, loss_fn, params, eb, rounds=3)
+    assert max_abs_diff(out["python"][0], out["fused"][0]) <= 1e-5
+    # both engines actually trained
+    lf = [np.mean(l.local_losses) for l in out["fused"][1]["log"]]
+    assert lf[-1] < lf[0]
+
+
+def test_ile_doubling_identical_under_traced_schedule():
+    """Zero gradients => rel=0 => Eq. 4 doubles T the same in both engines."""
+    def zero_loss(params, batch):
+        return jnp.zeros(()), {}
+    cfg = CoLearnConfig(n_participants=2, T0=1, epsilon=0.01,
+                        epochs_rule="ile", max_rounds=3)
+    b = tiny_batches(2, 1, 2)
+    out = run_both(cfg, zero_loss, tiny_params(), lambda i, j: b, rounds=3)
+    for eng in ("python", "fused"):
+        state = out[eng][1]
+        # round0: rel=inf (no prev) keep 1; round1: rel=0 -> 2; round2: -> 4
+        assert [l.T for l in state["log"]] == [1, 1, 2], eng
+        assert state["ctrl"].T == 4, eng
+    hp = out["python"][1]["ctrl"].history
+    hf = out["fused"][1]["ctrl"].history
+    assert [t for _, t in hp] == [t for _, t in hf]
+
+
+def test_clr_restart_traced_in_scan():
+    """The in-scan Eq. 3 schedule restarts at eta0 every round and decays
+    to eta0 * r^((T-1)/T) within the round — same as the host loop."""
+    cfg = CoLearnConfig(n_participants=2, T0=4, eta0=0.02, epsilon=0.0,
+                        schedule="clr", epochs_rule="fle", max_rounds=3)
+    b = tiny_batches(2, 2, 8)
+    learner = CoLearner(cfg, tiny_loss, engine="fused")
+    state = learner.init(tiny_params())
+    for _ in range(3):
+        state = learner.run_round(state, lambda i, j: b)
+    for log in state["log"]:
+        np.testing.assert_allclose(log.lr_first, 0.02, rtol=1e-6)
+        np.testing.assert_allclose(
+            log.lr_last, clr_lr(0.02, cfg.decay_rate, 3, 4), rtol=1e-6)
+
+
+def test_stack_epoch_batches_shape():
+    per_epoch = [tiny_batches(2, 3, 4, seed=s) for s in range(5)]
+    stacked = engine_mod.stack_epoch_batches(per_epoch)
+    assert stacked[0].shape == (5, 2, 3, 4, 4)
+    assert stacked[1].shape == (5, 2, 3, 4, 1)
+    np.testing.assert_array_equal(stacked[0][2], per_epoch[2][0])
+
+
+def test_fused_chunked_matches_python_and_single_shot():
+    """T_i > fused_chunk switches to chained chunk executables + finalize;
+    the trajectory must match both the python loop and the single-shot
+    fused path (chunk sizes 2 and 5 cover remainder/no-remainder splits)."""
+    cfg = CoLearnConfig(n_participants=2, T0=5, eta0=0.05, epsilon=0.5,
+                        schedule="clr", epochs_rule="fle", max_rounds=2)
+    b = tiny_batches(2, 3, 8)
+    ref = None
+    for eng, chunk in (("python", 32), ("fused", 32), ("fused", 2),
+                       ("fused", 5)):
+        learner = CoLearner(cfg, tiny_loss, engine=eng, fused_chunk=chunk)
+        state = learner.init(tiny_params())
+        for _ in range(2):
+            state = learner.run_round(state, lambda i, j: b)
+        model = learner.shared_model(state)
+        log = [(l.T, l.lr_first, l.lr_last) for l in state["log"]]
+        if ref is None:
+            ref = (model, log, state["global_epoch"])
+        else:
+            assert max_abs_diff(ref[0], model) <= 1e-5, (eng, chunk)
+            np.testing.assert_allclose(
+                np.array([x[1:] for x in log]),
+                np.array([x[1:] for x in ref[1]]), rtol=1e-6)
+            assert [x[0] for x in log] == [x[0] for x in ref[1]]
+            assert state["global_epoch"] == ref[2]
+
+
+def test_fused_chunk_executable_reused_across_T_doubling():
+    """j0/T_i/ge0 are traced in the chunk executable: ILE doubling past the
+    chunk size must NOT trigger recompiles for full-size chunks."""
+    def zero_loss(params, batch):
+        return jnp.zeros(()), {}
+    cfg = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                        epochs_rule="ile", max_rounds=4)
+    learner = CoLearner(cfg, zero_loss, engine="fused", fused_chunk=2)
+    state = learner.init(tiny_params())
+    b = tiny_batches(2, 1, 2)
+    for _ in range(4):
+        state = learner.run_round(state, lambda i, j: b)
+    # T trajectory 2,2,4,8: rounds 3-4 use the chunked path with C=2 only
+    assert [l.T for l in state["log"]] == [2, 2, 4, 8]
+    assert learner._fused_epochs._cache_size() == 1
+
+
+def test_fused_single_round_recompiles_only_on_T_change():
+    """The executable is cached per T_i: growing T (ILE doubling) recompiles,
+    repeated rounds at the same T reuse the cache."""
+    cfg = CoLearnConfig(n_participants=2, T0=2, eta0=0.01, epsilon=0.0,
+                        max_rounds=4)
+    learner = CoLearner(cfg, tiny_loss, engine="fused")
+    state = learner.init(tiny_params())
+    b = tiny_batches(2, 2, 4)
+    for _ in range(3):
+        state = learner.run_round(state, lambda i, j: b)
+    sizes = learner._fused_round._cache_size()
+    assert sizes == 1, sizes  # T never doubled (epsilon=0) => one executable

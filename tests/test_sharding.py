@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 SCRIPT = r"""
@@ -18,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_sim_mesh
-from repro.sharding import specs as sp
+from repro.sharding import compat, specs as sp
 from repro.core import averaging
 from repro.models import transformer as tr
 
@@ -34,8 +36,9 @@ bsh = sp.named(mesh, sp.batch_specs(cfg, mesh, "train"))
 step = steps_mod.make_train_step(cfg, lr=0.01)
 batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
          "labels": jnp.ones((8, 16), jnp.int32)}
-with jax.set_mesh(mesh):
-    fn = jax.jit(step, in_shardings=(psh, bsh))
+with compat.use_mesh(mesh):
+    fn = jax.jit(step, in_shardings=(psh, bsh),
+                 out_shardings=(psh, NamedSharding(mesh, P())))
     new_params, loss = fn(params, batch)
 out["vanilla_loss_finite"] = bool(jnp.isfinite(loss))
 
@@ -50,7 +53,7 @@ cbsh = sp.named(mesh, sp.batch_specs(cfg, mesh, "train", participant=True))
 cbatch = {"tokens": jnp.zeros((K, 4, 16), jnp.int32),
           "labels": jnp.ones((K, 4, 16), jnp.int32)}
 cstep = steps_mod.make_colearn_train_step(cfg, lr=0.01)
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     cfn = jax.jit(cstep, in_shardings=(spsh, cbsh))
     new_stacked, losses = cfn(stacked, cbatch)
 out["colearn_losses"] = [float(x) for x in losses]
@@ -70,12 +73,29 @@ out["avg_is_mean"] = bool(np.allclose(
     np.asarray(jax.tree.leaves(avg_p)[0][0]),
     np.asarray(jax.tree.leaves(new_stacked)[0].mean(0)), atol=1e-5))
 
-# 4) decode step lowers on the mesh
+# 4) fused round engine on the pod mesh: whole round (epoch scan + shard_map
+#    Eq. 2 + on-device Eq. 4) as one program; slots converge to the mean
+from repro.configs.base import CoLearnConfig
+ccfg = CoLearnConfig(n_participants=K, T0=2, eta0=0.01, max_rounds=1)
+round_fn = steps_mod.make_fused_round_step(
+    cfg, ccfg, mesh=mesh,
+    param_specs=sp.param_specs(spshapes, cfg, mesh, participant=True))
+rbatch = {"tokens": jnp.zeros((2, K, 1, 4, 16), jnp.int32),
+          "labels": jnp.ones((2, K, 1, 4, 16), jnp.int32)}
+with compat.use_mesh(mesh):
+    averaged, _, aux = round_fn(stacked, (), rbatch, jnp.int32(0))
+out["fused_round_losses_finite"] = bool(jnp.isfinite(aux["losses"]).all())
+out["fused_round_rel_finite"] = bool(jnp.isfinite(aux["rel"]))
+out["fused_round_slots_equal"] = max(
+    float(jnp.abs(t[0] - t[1]).max())
+    for t in jax.tree.leaves(averaged)) < 1e-4
+
+# 5) decode step lowers on the mesh
 cache = tr.init_cache(cfg, 8, 16, jnp.float32)
 csh = sp.named(mesh, sp.cache_specs(
     jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), cache),
     mesh, 8))
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     sfn = jax.jit(steps_mod.make_serve_step(cfg),
                   in_shardings=(psh, csh, NamedSharding(mesh, P()),
                                 NamedSharding(mesh, P())))
@@ -110,6 +130,12 @@ def test_colearn_replicas_independent(mesh_results):
 def test_average_pjit_matches_shard_map(mesh_results):
     assert mesh_results["avg_match"]
     assert mesh_results["avg_is_mean"]
+
+
+def test_fused_round_on_pod_mesh(mesh_results):
+    assert mesh_results["fused_round_losses_finite"]
+    assert mesh_results["fused_round_rel_finite"]
+    assert mesh_results["fused_round_slots_equal"]
 
 
 def test_decode_on_mesh(mesh_results):
