@@ -1,22 +1,66 @@
-"""Table 1 analog: communication interval & volume per model per round.
+"""Table 1 analog: communication interval & volume per model per round,
+plus the end-of-round finalize-latency benchmark (ISSUE 2 tentpole).
 
-Volume is exact (2 × parameter bytes per participant per round, as in the
+Volume is exact (2 x parameter bytes per participant per round, as in the
 paper's upload+download accounting), reported for every assigned full-scale
-architecture; the int8-compressed volume (beyond-paper) is shown alongside.
-Interval is measured on the CPU-scale smoke run (wall time of a T_0-epoch
-round) and, for the full configs, derived from the dry-run compute terms.
+architecture; the int8-compressed volume (beyond-paper) is shown alongside
+in both wire accountings: leafwise (small leaves bypass the codec and ride
+uncompressed) and flat-buffer (every element on the wire format, exact by
+construction).
+
+``finalize_latency_rows`` times the jitted Eq. 2 compressed-averaging step
+— the one hot path the PR 1 fused round engine did not touch — under both
+wire paths on the smoke-scale model param trees:
+
+* ``leafwise``    — per-leaf quantize-roundtrip + separate stacked mean
+                    (``core.compression`` + ``averaging.average_pjit``);
+* ``flat_buffer`` — the flat-buffer wire codec: one contiguous (K, N_pad)
+                    buffer, one fused quantize->average->dequantize pass
+                    (``core.flatbuf`` + ``kernels.comm`` via
+                    ``engine.make_fused_compressed_average``).
+
+Timings are min-of-N over jitted, block_until_ready'd calls (robust on a
+shared box); compile time is excluded by a warmup call. The result JSON is
+committed as benchmarks/BENCH_comm_cost.json.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.comm_cost \
+      [--reps 30] [--out benchmarks/BENCH_comm_cost.json]
+  PYTHONPATH=src python -m benchmarks.comm_cost --check   # CI smoke mode
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core.compression import compressed_bytes
-from repro.launch import analytic
+from repro.core import averaging, engine as engine_mod, flatbuf
+from repro.core.compression import (compressed_bytes, flat_compressed_bytes,
+                                    quantize_roundtrip)
 from repro.launch.steps import params_shapes
+
+# smoke trees spanning few-leaf dense to many-leaf MoE/hybrid structures,
+# plus a deep-narrow unrolled-segment variant (the dryrun PROFILE config
+# family): ~580 small leaves, the regime where the leafwise path's
+# per-leaf codec overhead dominates — on CPU this stands in for the
+# per-leaf kernel-launch cost real models pay on TPU
+LATENCY_ARCHS = ("internlm2-1.8b", "xlstm-1.3b", "jamba-v0.1-52b",
+                 "deepseek-v3-671b", "internlm2-1.8b:unrolled-deep")
+
+
+def _latency_config(arch):
+    if arch.endswith(":unrolled-deep"):
+        base = get_smoke_config(arch.split(":")[0])
+        L = 96
+        return base.with_(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                          d_ff=64, n_layers=L,
+                          segments=((("gqa:dense",), 1),) * L)
+    return get_smoke_config(arch)
 
 
 def volume_rows(quiet=False):
@@ -26,15 +70,85 @@ def volume_rows(quiet=False):
         shapes = params_shapes(cfg, jnp.bfloat16)
         nbytes = sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(shapes))
         comp = compressed_bytes(shapes)
+        stacked = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct((1, *v.shape), v.dtype), shapes)
+        flat = flat_compressed_bytes(stacked)
         rows.append({"arch": arch, "params": sum(
             v.size for v in jax.tree.leaves(shapes)),
             "volume_mb_per_round": 2 * nbytes / 2 ** 20,
-            "volume_int8_mb": 2 * comp / 2 ** 20})
+            "volume_int8_mb": 2 * comp / 2 ** 20,
+            "volume_int8_flat_mb": 2 * flat / 2 ** 20})
         if not quiet:
             r = rows[-1]
             print(f"table1,{arch},params={r['params']:,},"
                   f"vol={r['volume_mb_per_round']:.0f}MB,"
-                  f"vol_int8={r['volume_int8_mb']:.0f}MB", flush=True)
+                  f"vol_int8={r['volume_int8_mb']:.0f}MB,"
+                  f"vol_int8_flat={r['volume_int8_flat_mb']:.0f}MB",
+                  flush=True)
+    return rows
+
+
+def _stacked_smoke_params(arch, K, dtype=jnp.float32):
+    from repro.models import transformer as tr
+    cfg = _latency_config(arch)
+    params = tr.init_params(jax.random.PRNGKey(0), cfg, dtype)
+    return averaging.stack_participants(params, K)
+
+
+def _time_pair(fn_a, fn_b, arg, reps):
+    """Interleaved min/mean seconds for two jitted fns on the same input.
+
+    Alternating A/B per rep makes shared-box load drift hit both paths
+    equally — sequential blocks were observed to skew either way by 1.5x.
+    """
+    jax.block_until_ready(fn_a(arg))                    # warmup (compile)
+    jax.block_until_ready(fn_b(arg))
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(arg))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(arg))
+        tb.append(time.perf_counter() - t0)
+    return ((min(ta), float(np.mean(ta))), (min(tb), float(np.mean(tb))))
+
+
+def finalize_latency_rows(archs=LATENCY_ARCHS, K=4, reps=30, block=256,
+                          impl="ref", quiet=False):
+    """Jitted compressed-average latency, leafwise vs flat-buffer codec."""
+    rows = []
+    for arch in archs:
+        stacked = _stacked_smoke_params(arch, K)
+        leaves = jax.tree.leaves(stacked)
+        leaf_fn = jax.jit(lambda s: averaging.average_pjit(
+            quantize_roundtrip(s, block=block, impl=impl)))
+        flat_fn = jax.jit(engine_mod.make_fused_compressed_average(
+            block=block, impl=impl))
+        (l_min, l_mean), (f_min, f_mean) = _time_pair(leaf_fn, flat_fn,
+                                                      stacked, reps)
+        layout = flatbuf.make_layout(stacked, block=block)
+        rows.append({
+            "arch": arch, "K": K, "n_leaves": len(leaves),
+            "params_per_participant": layout.n,
+            # what the TIMED leafwise fn bypasses: it roundtrips the
+            # stacked tree, so the threshold sees the K*size leaf
+            "small_leaves_bypassed_leafwise": sum(
+                1 for v in leaves if v.ndim == 0 or v.size < block),
+            "leafwise_ms_min": l_min * 1e3, "leafwise_ms_mean": l_mean * 1e3,
+            "flat_buffer_ms_min": f_min * 1e3,
+            "flat_buffer_ms_mean": f_mean * 1e3,
+            "speedup_min": l_min / f_min,
+            "wire_bytes_leafwise": compressed_bytes(
+                jax.tree.map(lambda t: t[0], stacked), block=block),
+            "wire_bytes_flat": flatbuf.wire_bytes(layout),
+        })
+        if not quiet:
+            r = rows[-1]
+            print(f"finalize,{arch},leaves={r['n_leaves']},"
+                  f"leafwise={r['leafwise_ms_min']:.2f}ms,"
+                  f"flat={r['flat_buffer_ms_min']:.2f}ms,"
+                  f"speedup={r['speedup_min']:.2f}x", flush=True)
     return rows
 
 
@@ -67,11 +181,82 @@ def interval_rows(archs=("internlm2-1.8b",), T0=1, quiet=False):
     return rows
 
 
-def main():
-    rows = volume_rows()
-    rows += interval_rows()
-    return rows
+def check():
+    """CI smoke mode: fast invariants so the codec benchmark can't rot.
+
+    No timing assertions (CI boxes are noisy) — correctness only:
+    roundtrip bit-exactness, fused-vs-leafwise numerics, exact wire-byte
+    accounting, and that both benchmark paths still jit and run.
+    """
+    K, block = 3, 256
+    stacked = _stacked_smoke_params("xlstm-1.3b", K)   # has small leaves
+    layout = flatbuf.make_layout(stacked, block=block)
+    buf = flatbuf.flatten(stacked, layout)
+    back = flatbuf.unflatten(buf, layout)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+            "flatten/unflatten roundtrip not bit-exact"
+    assert flatbuf.wire_bytes(layout) == layout.n_pad + 4 * (
+        layout.n_pad // block)
+
+    exact = averaging.average_pjit(stacked)
+    fused = jax.jit(engine_mod.make_fused_compressed_average(
+        block=block, impl="ref"))(stacked)
+    for a, b, t in zip(jax.tree.leaves(fused), jax.tree.leaves(exact),
+                       jax.tree.leaves(stacked)):
+        amax = np.abs(np.asarray(t, np.float32)).max()
+        err = np.abs(np.asarray(a, np.float32)
+                     - np.asarray(b, np.float32)).max()
+        assert err <= amax / 127.0 + 1e-6, \
+            f"fused average outside the int8 quantization bound: {err}"
+
+    rows = finalize_latency_rows(archs=("internlm2-1.8b",), reps=2,
+                                 quiet=True)
+    assert rows and rows[0]["flat_buffer_ms_min"] > 0
+    assert rows[0]["wire_bytes_flat"] >= rows[0]["params_per_participant"]
+    vol = volume_rows(quiet=True)
+    assert all(r["volume_int8_mb"] < r["volume_mb_per_round"] for r in vol)
+    print("comm_cost --check OK", flush=True)
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=30)
+    ap.add_argument("--out", default="benchmarks/BENCH_comm_cost.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fast CI smoke mode: invariants only, no timings")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check()
+    rec = {"backend": jax.default_backend(), "reps": args.reps,
+           "volume": volume_rows(),
+           "finalize_latency": finalize_latency_rows(reps=args.reps),
+           "interval": interval_rows()}
+    best = max(rec["finalize_latency"], key=lambda r: r["speedup_min"])
+    rec["headline"] = {
+        "best_finalize_speedup": best["speedup_min"],
+        "best_finalize_arch": best["arch"],
+        "note": "flat-buffer codec collapses the leafwise path's per-leaf "
+                "pad/reshape + quant/dequant + separate mean into one "
+                "fused pass over one contiguous buffer; leafwise also "
+                "exempts sub-block leaves from the wire format, flat "
+                "covers every element (wire_bytes exact). On CPU the win "
+                "shows where per-leaf codec overhead dominates (the "
+                "many-leaf unrolled-deep tree; leafwise cost grows with "
+                "leaf count, flat is leaf-count-flat); wide-leaf smoke "
+                "trees are XLA-CPU bandwidth-bound and favor leafwise's "
+                "cache-resident per-leaf fusions — on TPU that regime is "
+                "instead bound by the ~2L pallas launches the single "
+                "kernel removes.",
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -2,8 +2,11 @@
 
 The paper notes it does NOT compress parameter exchange; this example shows
 the framework's beyond-paper option: participants upload int8 blockwise-
-quantized parameters (the Pallas quantize kernel's wire format), cutting
-per-round WAN volume ~2x vs bf16 / ~4x vs f32 at negligible accuracy cost.
+quantized parameters, cutting per-round WAN volume ~2x vs bf16 / ~4x vs
+f32 at negligible accuracy cost. Both wire paths are exercised: the
+leafwise reference codec and the flat-buffer fast path (one fused
+quantize->average->dequantize pass over one contiguous buffer, exact
+byte accounting — see ROADMAP "Wire codec").
 
 Run:  PYTHONPATH=src python examples/compressed_wan.py
 """
@@ -14,7 +17,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
 from repro.core.colearn import CoLearner
-from repro.core.compression import compressed_bytes, make_compress_fn
+from repro.core.compression import compressed_bytes, flat_compressed_bytes
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
 from repro.data.synthetic import lm_examples
@@ -25,12 +28,13 @@ x, y = lm_examples(seed=0, n=400, seq_len=32, vocab=cfg.vocab_size)
 shards = partition_arrays([x, y], K=4, seed=0)
 
 for label, compress in (("exact (paper)", None),
-                        ("int8 (beyond-paper)", make_compress_fn())):
+                        ("int8 leafwise", "leafwise"),
+                        ("int8 flat-buffer", "fused")):
     data = ParticipantData(shards, batch_size=8)
     learner = CoLearner(
         CoLearnConfig(n_participants=4, T0=1, max_rounds=3, eta0=0.05),
         loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
-        compress_fn=compress)
+        compress=compress)
     state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
     for i in range(3):
         state = learner.run_round(
@@ -38,7 +42,11 @@ for label, compress in (("exact (paper)", None),
                                             data.epoch_batches(i_, j_))))
     params = learner.shared_model(state)
     raw = sum(t.size * 4 for t in jax.tree.leaves(params))
-    wire = compressed_bytes(params) if compress else raw
+    wire = raw
+    if compress == "leafwise":
+        wire = compressed_bytes(params)
+    elif compress == "fused":
+        wire = flat_compressed_bytes(state["params"])  # exact, incl. pad
     print(f"{label:22s} final_loss={np.mean(state['log'][-1].local_losses):.4f}"
           f"  wire_bytes/round={2*wire/2**20:.1f}MiB (f32 would be "
           f"{2*raw/2**20:.1f}MiB)")

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import averaging, engine as engine_mod
+from repro.core import averaging, compression, engine as engine_mod
 from repro.core.schedule import EpochController, relative_change, round_lr
 from repro.optim.optimizers import get_optimizer
 
@@ -51,6 +51,17 @@ class CoLearner:
 
     loss_fn(params, batch) -> (loss, metrics) for ONE participant.
     data: per-participant iterables of epochs; see ``run_round``.
+
+    compress selects the beyond-paper int8 upload emulation for Eq. 2:
+      * None       — exact f32 averaging (the paper-faithful default);
+      * "leafwise" — per-leaf quantize-roundtrip then average (reference
+        wire path; leaves smaller than ``compress_block`` bypass the codec);
+      * "fused"    — the flat-buffer wire codec: one contiguous buffer, one
+        quantize->average->dequantize kernel pass, every leaf on the wire
+        format (``core.flatbuf`` + ``kernels.comm``).
+    ``compress_impl`` picks the kernel backend ("ref" jnp oracle on CPU,
+    "pallas" on TPU); ``compress_fn`` remains the low-level escape hatch
+    (mutually exclusive with compress="fused").
     """
     cfg: Any                                  # CoLearnConfig
     loss_fn: Callable
@@ -58,17 +69,39 @@ class CoLearner:
     compress_fn: Optional[Callable] = None    # stacked params -> stacked params
     engine: str = "python"                    # python (reference) | fused
     fused_chunk: int = 32                     # max epochs staged on device
+    compress: Optional[str] = None            # None | leafwise | fused
+    compress_block: int = 256                 # int8 quantization block
+    compress_impl: str = "ref"                # ref | pallas | interpret
 
     def __post_init__(self):
         if self.engine not in ("python", "fused"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.compress not in (None, "leafwise", "fused"):
+            raise ValueError(f"unknown compress {self.compress!r}")
+        # Eq. 2 upload emulation: "leafwise" quantize-roundtrips each leaf
+        # then averages (the tested reference wire path); "fused" collapses
+        # codec + averaging into one flat-buffer kernel pass (same wire
+        # format, exact byte accounting, no small-leaf bypass).
+        self._average_fn = averaging.average_pjit
+        if self.compress == "leafwise":
+            if self.compress_fn is None:
+                self.compress_fn = compression.make_compress_fn(
+                    self.compress_block, self.compress_impl)
+        elif self.compress == "fused":
+            if self.compress_fn is not None:
+                raise ValueError(
+                    "compress='fused' replaces compress_fn entirely; "
+                    "pass one or the other")
+            self._average_fn = engine_mod.make_fused_compressed_average(
+                block=self.compress_block, impl=self.compress_impl)
         self.opt = get_optimizer(self.optimizer_name)
         # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
         # the python path jits it per-epoch, the fused paths scan over it
         self._jit_epoch = jax.jit(
             engine_mod.make_epoch_fn(self.loss_fn, self.opt))
-        self._jit_avg = jax.jit(averaging.average_pjit)
+        self._jit_avg = jax.jit(self._average_fn)
         kw = dict(compress_fn=self.compress_fn,
+                  average_fn=self._average_fn,
                   total_epochs=self.total_epochs_budget())
         self._fused_round = engine_mod.make_fused_round(
             self.loss_fn, self.opt, self.cfg, **kw)
@@ -76,7 +109,8 @@ class CoLearner:
             self.loss_fn, self.opt, self.cfg,
             total_epochs=self.total_epochs_budget())
         self._fused_finalize = engine_mod.make_fused_finalize(
-            self.opt, compress_fn=self.compress_fn)
+            self.opt, compress_fn=self.compress_fn,
+            average_fn=self._average_fn)
 
     # -- Algorithm 1 ---------------------------------------------------------
     def init(self, params):

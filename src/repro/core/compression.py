@@ -1,12 +1,30 @@
-"""Beyond-paper: int8 blockwise-quantized model averaging.
+"""Beyond-paper: int8 blockwise-quantized model averaging (wire emulation).
 
 The paper explicitly notes it does NOT compress uploads ("we do not employ
-the compression technique"). We add it as a separately-reported
-optimization: participants upload int8 block-quantized deltas, cutting the
-inter-pod (WAN-analog) collective bytes ~2x vs bf16 / ~4x vs f32. The
-quant/dequant hot loop is the `repro.kernels.quantize` Pallas kernel; this
-module is the model-level wrapper. Reported ONLY in EXPERIMENTS.md §Perf
-beyond-paper rows, never mixed into the paper-faithful baseline.
+the compression technique"); we add int8 upload compression as a
+separately-reported optimization, cutting the inter-pod (WAN-analog)
+collective bytes ~2x vs bf16 / ~4x vs f32. Two wire paths implement the
+same int8 + per-block f32 absmax scale format:
+
+* **leafwise** (this module, the tested reference): every parameter leaf is
+  independently quantize-roundtripped (``repro.kernels.quantize``) and the
+  dequantized f32 tensors are averaged afterwards. Simple, but it costs two
+  pallas launches + a host-shaped pad/reshape per leaf, leaves with
+  ``size < block`` (or scalars) bypass the codec entirely and travel
+  uncompressed — ``compressed_bytes`` accounts for that bypass at raw-dtype
+  rates — and because the STACKED (K, ...) leaf is flattened as one array,
+  a quantization block can straddle two participants' data mid-leaf (a
+  physical wire could not do that; the flat-buffer path quantizes strict
+  per-participant rows).
+* **flat-buffer** (``repro.core.flatbuf`` + ``repro.kernels.comm``,
+  selected by ``CoLearner(compress="fused")``): the whole stacked tree is
+  flattened into one contiguous ``(K, N_pad)`` f32 buffer and a single
+  fused quantize->average->dequantize kernel performs Eq. 2 in one
+  blockwise pass. No leaf escapes the wire format and
+  ``flatbuf.wire_bytes`` is exact by construction.
+
+Reported ONLY in EXPERIMENTS.md §Perf beyond-paper rows, never mixed into
+the paper-faithful baseline.
 """
 from __future__ import annotations
 
@@ -17,7 +35,11 @@ from repro.kernels import ops as kops
 
 
 def quantize_roundtrip(tree, block=256, impl="ref"):
-    """Simulate upload-as-int8: quantize then dequantize every leaf."""
+    """Simulate upload-as-int8: quantize then dequantize every leaf.
+
+    Leaves with fewer than ``block`` elements (and scalars) are returned
+    unchanged — they go on the wire uncompressed (see ``compressed_bytes``).
+    """
     def one(t):
         if t.ndim == 0 or t.size < block:
             return t
@@ -34,9 +56,29 @@ def make_compress_fn(block=256, impl="ref"):
 
 
 def compressed_bytes(tree, block=256):
-    """Wire bytes of the int8 encoding (int8 payload + f32 scale / block)."""
+    """Idealized per-participant wire bytes of the leafwise int8 encoding.
+
+    ``tree`` is ONE participant's (unstacked) params: int8 payload + one
+    f32 scale per block for quantized leaves; leaves below the block
+    threshold bypass the codec and are counted at their raw dtype size —
+    the same bypass rule ``quantize_roundtrip`` applies. Note the in-sim
+    emulation runs the roundtrip on the STACKED tree, where the threshold
+    sees K*size and blocks can straddle participants, so at small K its
+    behavior can differ from this per-upload accounting (the flat-buffer
+    path has no such gap — ``flat_compressed_bytes`` is exact)."""
     total = 0
     for t in jax.tree.leaves(tree):
         n = t.size
-        total += n + 4 * (-(-n // block))
+        if t.ndim == 0 or n < block:
+            total += n * t.dtype.itemsize        # uploaded uncompressed
+        else:
+            total += n + 4 * (-(-n // block))
     return total
+
+
+def flat_compressed_bytes(tree, block=256):
+    """Exact per-participant wire bytes of the flat-buffer codec for a
+    STACKED tree (leading participant dim on every leaf) — every element,
+    however small its leaf, is on the int8 + scale format."""
+    from repro.core import flatbuf
+    return flatbuf.wire_bytes(flatbuf.make_layout(tree, block=block))

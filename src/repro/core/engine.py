@@ -44,14 +44,23 @@ Backend API — shared by the simulation and pod paths:
 ``CoLearner(engine="fused"|"python")`` selects between this engine and the
 reference loop; both produce the same ``RoundLog``/state transitions and
 are asserted equivalent to <=1e-5 in ``tests/test_engine.py``.
+
+The end-of-round Eq. 2 step has its own fast path:
+``make_fused_compressed_average`` (selected by ``CoLearner(compress=
+"fused")``) replaces the leafwise int8 roundtrip + separate mean with the
+flat-buffer wire codec (``core.flatbuf``) and one fused
+quantize->average->dequantize kernel (``kernels.comm``) over one
+contiguous buffer.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core import averaging
+from repro.core import averaging, flatbuf
 from repro.core.schedule import clr_lr, elr_lr, relative_change_traced
+from repro.kernels import ops as kops
 from repro.optim.optimizers import apply_updates
 
 
@@ -110,6 +119,62 @@ def _make_epoch_scan(epoch_fn, cfg, total_epochs):
         return jax.lax.scan(body, (stacked_params, opt_state),
                             (j0 + jnp.arange(n), batches))
     return scan_epochs
+
+
+def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
+                                  axis="pod"):
+    """Eq. 2 fast path: int8 wire emulation + averaging as ONE buffer pass.
+
+    Returns an ``average_fn`` (stacked tree -> stacked tree, every slot
+    holding the mean) that replaces the leafwise pair ``compress_fn=
+    make_compress_fn(...)`` + ``average_pjit``: the stacked params are
+    flattened through the flat-buffer wire codec (``repro.core.flatbuf``)
+    into one contiguous ``(K, N_pad)`` f32 buffer and a single
+    ``quant_avg_dequant`` kernel (``repro.kernels.comm``) quantizes,
+    averages, and dequantizes it blockwise — collapsing ~2 pallas launches
+    + a pad/reshape per leaf + a separate whole-tree mean into one pass,
+    with every leaf (however small) on the wire format.
+
+    simulation path (``mesh=None``): the kernel sees all K rows at once.
+
+    pod path (``mesh`` given): a ``shard_map`` over ``axis`` — each pod
+    int8-roundtrips only its local row (its upload, exactly what the wire
+    carries) and a single psum over the inter-pod axis aggregates the
+    dequantized block payloads; only that one fused collective crosses the
+    pod boundary, with ``flatbuf.wire_bytes`` giving the exact encoded
+    size a production transport would move.
+
+    The layout is recomputed per trace from static shapes only (free); the
+    same tree structure always yields the same wire layout.
+    """
+    if mesh is None:
+        def average(stacked):
+            layout = flatbuf.make_layout(stacked, block=block)
+            buf = flatbuf.flatten(stacked, layout)
+            mean = kops.quant_avg_dequant(buf, block=block, impl=impl)
+            return flatbuf.unflatten_mean(mean, layout)
+        return average
+
+    from repro.sharding import compat
+    K = mesh.shape[axis]
+
+    def average(stacked):
+        layout = flatbuf.make_layout(stacked, block=block)
+        buf = flatbuf.flatten(stacked, layout)         # (K, N_pad) over pod
+
+        def local_avg(lbuf):                           # (1, N_pad) per pod
+            q, scale, _ = kops.quantize_blockwise(lbuf, block=block,
+                                                  impl=impl)
+            dq = q.astype(jnp.int32).astype(jnp.float32) * scale[:, None]
+            mean = jax.lax.psum(dq, axis) / K
+            return mean.reshape(1, -1)[:, :layout.n_pad]
+
+        avg = compat.shard_map(local_avg, mesh=mesh,
+                               in_specs=(P(axis, None),),
+                               out_specs=P(axis, None),
+                               check_vma=False)(buf)
+        return flatbuf.unflatten(avg, layout)
+    return average
 
 
 def _make_finalize(opt, compress_fn, average_fn):

@@ -1,0 +1,154 @@
+"""Flat-buffer wire codec: one contiguous buffer for a stacked params tree.
+
+The leafwise int8 path (``core.compression.quantize_roundtrip``) pays codec
+overhead per parameter leaf — two ``pallas_call`` launches plus a host-shaped
+pad/reshape for every tensor — and silently exempts leaves smaller than one
+quantization block from the wire format. This module removes both costs by
+committing to ONE wire layout per tree structure:
+
+  * ``make_layout(stacked)`` computes a static table (offsets / trailing
+    shapes / dtypes, all derived from ``.shape``/``.dtype`` only, so it works
+    on tracers and ``ShapeDtypeStruct``s alike) describing how every leaf of
+    a stacked ``(K, ...)`` params tree maps into one ``(K, N_pad)`` f32
+    buffer, ``N_pad`` rounded up to a whole number of ``rows x block``
+    quantization tiles. Each leaf's offset is aligned to a ``block``
+    boundary (zero fill between leaves): quantization blocks never straddle
+    leaves, so a small-magnitude leaf is never scaled by a neighbour's
+    absmax, and for any leaf whose per-participant size is a block multiple
+    the int8 codes match the leafwise reference path bit-for-bit.
+  * ``flatten`` / ``unflatten`` move between the tree and the buffer.
+    ``unflatten(flatten(t)) == t`` bit-exactly for every floating dtype
+    (f32 is a superset of bf16/f16) — no leaf, however small or oddly
+    shaped, escapes the wire format.
+  * ``wire_bytes(layout)`` is the exact per-participant byte count of the
+    int8 encoding of that buffer (int8 payload + one f32 scale per block
+    row) — the bytes-on-the-wire guarantee the leafwise accounting could
+    only approximate.
+
+The codec's consumer is ``repro.core.engine.make_fused_compressed_average``,
+which runs the fused quantize->average->dequantize kernel
+(``repro.kernels.comm``) over the flat buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# the wire tile shape is owned by the quantize kernel; layouts must pad to
+# whole quantizer tiles or the blockwise kernels would slice mid-tile
+from repro.kernels.quantize import DEFAULT_BLOCK, ROWS
+
+# dtypes the f32 wire container holds losslessly (bit-exact roundtrip)
+_WIRE_DTYPES = frozenset(
+    jnp.dtype(d) for d in (jnp.float32, jnp.bfloat16, jnp.float16))
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static wire layout of one stacked params tree structure.
+
+    All fields are python ints/tuples computed from shapes only — a layout
+    never captures array data and can be built at trace time for free.
+    """
+    treedef: Any                     # jax treedef of the stacked tree
+    shapes: tuple                    # per-leaf trailing shape (K stripped)
+    dtypes: tuple                    # per-leaf original dtype
+    offsets: tuple                   # per-leaf start offset in the buffer
+    sizes: tuple                     # per-leaf element count (per participant)
+    k: int                           # leading participant dim shared by leaves
+    n: int                           # block-aligned payload end per row
+    n_pad: int                       # n rounded up to rows*block tiles
+    block: int
+    rows: int
+
+
+def make_layout(stacked, *, block: int = DEFAULT_BLOCK,
+                rows: int = ROWS) -> FlatLayout:
+    """Layout for a stacked tree whose every leaf has leading dim K.
+
+    Accepts arrays, tracers, or ``ShapeDtypeStruct``s — only shape/dtype
+    are read.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        raise ValueError("cannot build a flat layout for an empty tree")
+    k = leaves[0].shape[0] if leaves[0].ndim else 0
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        if leaf.ndim == 0 or leaf.shape[0] != k:
+            raise ValueError(
+                f"every leaf must share the leading participant dim {k}; "
+                f"got shape {leaf.shape}")
+        if jnp.dtype(leaf.dtype) not in _WIRE_DTYPES:
+            raise ValueError(
+                f"dtype {leaf.dtype} does not roundtrip bit-exactly "
+                f"through the f32 wire container (allowed: "
+                f"{sorted(d.name for d in _WIRE_DTYPES)})")
+        size = int(math.prod(leaf.shape[1:]))
+        shapes.append(tuple(leaf.shape[1:]))
+        dtypes.append(jnp.dtype(leaf.dtype))
+        offsets.append(off)
+        sizes.append(size)
+        off += -(-size // block) * block          # next leaf block-aligned
+    tile = rows * block
+    n_pad = -(-off // tile) * tile
+    return FlatLayout(treedef=treedef, shapes=tuple(shapes),
+                      dtypes=tuple(dtypes), offsets=tuple(offsets),
+                      sizes=tuple(sizes), k=k, n=off, n_pad=n_pad,
+                      block=block, rows=rows)
+
+
+def flatten(stacked, layout: FlatLayout):
+    """Stacked tree -> one contiguous ``(K, N_pad)`` f32 buffer.
+
+    Leaves are laid out in tree order at the block-aligned
+    ``layout.offsets``; all padding (between leaves and at the tail) is
+    zero fill inside blocks owned by a single leaf or whole zero blocks,
+    so no leaf ever shares a quantization scale with another.
+    """
+    # write leaves into a zero buffer with dynamic_update_slice: measured
+    # ~10x faster on CPU than a padded many-operand concatenate, and the
+    # zero fill gives the inter-leaf/tail padding for free
+    buf = jnp.zeros((layout.k, layout.n_pad), jnp.float32)
+    for leaf, off in zip(jax.tree.leaves(stacked), layout.offsets):
+        buf = jax.lax.dynamic_update_slice(
+            buf, leaf.astype(jnp.float32).reshape(layout.k, -1), (0, off))
+    return buf
+
+
+def unflatten(buf, layout: FlatLayout):
+    """Exact inverse of ``flatten``: ``(K, N_pad)`` buffer -> stacked tree."""
+    leaves = [
+        buf[:, off:off + size].reshape(layout.k, *shape).astype(dt)
+        for off, size, shape, dt in zip(layout.offsets, layout.sizes,
+                                        layout.shapes, layout.dtypes)
+    ]
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def unflatten_mean(mean, layout: FlatLayout):
+    """``(N_pad,)`` averaged buffer -> stacked tree with the mean broadcast
+    to all K slots (the ``average_fn`` contract). Equivalent to
+    ``unflatten(broadcast_to(mean[None], (K, N_pad)))`` but lets XLA fuse
+    the per-leaf slice + reshape + broadcast straight from the small mean
+    buffer instead of materializing the broadcast first.
+    """
+    leaves = [
+        jnp.broadcast_to(
+            mean[off:off + size].reshape(shape)[None],
+            (layout.k, *shape)).astype(dt)
+        for off, size, shape, dt in zip(layout.offsets, layout.sizes,
+                                        layout.shapes, layout.dtypes)
+    ]
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def wire_bytes(layout: FlatLayout) -> int:
+    """Exact bytes one participant puts on the wire for this layout:
+    int8 payload for every (padded) element + one f32 scale per block row."""
+    return layout.n_pad + 4 * (layout.n_pad // layout.block)

@@ -1,0 +1,62 @@
+"""Fused quantize->average->dequantize — Pallas TPU kernel (Eq. 2 wire path).
+
+One blockwise pass over the flat-buffer wire codec's ``(K, N_pad)`` stacked
+participant buffer (``repro.core.flatbuf``): each grid step loads one
+``(K, ROWS, block)`` tile into VMEM, quantizes every participant row to int8
+with one f32 absmax scale per (participant, row) — the same wire format as
+``repro.kernels.quantize`` — widens the int8 codes through int32, scales
+them back to the exactly-dequantized f32 payloads (|q| <= 127, so each
+``q * scale`` product is exact in f32), and reduces them to the Eq. 2 mean
+in one shot. This replaces the leafwise path's ~2 pallas_call launches +
+host-side pad/reshape per parameter leaf plus a separate whole-tree mean
+with a single kernel over a single buffer.
+
+Scales are per participant (each participant quantizes its own upload
+before it ever sees the others), so the cross-participant accumulation
+happens on the dequantized payloads, not in the shared-integer domain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# one source of truth for the wire tile shape: the quantize kernel owns it
+# (flatbuf layouts and this kernel's grid must stay in lockstep with it)
+from repro.kernels.quantize import DEFAULT_BLOCK, ROWS
+
+
+def _qad_kernel(x_ref, o_ref, *, k):
+    x = x_ref[...]                                      # (K, ROWS, block) f32
+    amax = jnp.max(jnp.abs(x), axis=2, keepdims=True)   # (K, ROWS, 1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.int32).astype(jnp.float32) * scale
+    o_ref[...] = jnp.sum(dq, axis=0) / k                # Eq. 2 over K
+
+
+def quant_avg_dequant_fwd(buf, *, block=DEFAULT_BLOCK, interpret=False):
+    """buf: (K, n) f32 -> (n,) f32 mean of the int8-roundtripped rows.
+
+    ``n`` is padded up to whole ``(ROWS, block)`` tiles internally (the flat
+    codec's ``N_pad`` already is, so the pad is a no-op on the hot path);
+    zero pad quantizes and dequantizes to exactly zero.
+    """
+    K, n = buf.shape
+    tile = ROWS * block
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        buf = jnp.pad(buf, ((0, 0), (0, n_pad - n)))
+    nb = n_pad // block
+    xb = buf.reshape(K, nb, block)
+    out = pl.pallas_call(
+        functools.partial(_qad_kernel, k=K),
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((K, ROWS, block), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(n_pad)[:n]

@@ -14,6 +14,7 @@ import functools
 
 import jax
 
+from repro.kernels import comm as _comm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mlstm as _ml
 from repro.kernels import quantize as _qz
@@ -64,3 +65,12 @@ def dequantize_blockwise(q, scale, shape, *, impl="pallas", **kw):
         return _ref.dequantize_blockwise_ref(q, scale, shape)
     return _qz.dequantize_blockwise_fwd(q, scale, shape,
                                         interpret=_interp(impl), **kw)
+
+
+def quant_avg_dequant(buf, *, block=256, impl="pallas", **kw):
+    """Fused Eq. 2 wire pass over a (K, n) flat buffer: int8-quantize every
+    participant row blockwise, dequantize, mean -> (n,) f32."""
+    if impl == "ref":
+        return _ref.quant_avg_dequant_ref(buf, block=block)
+    return _comm.quant_avg_dequant_fwd(buf, block=block,
+                                       interpret=_interp(impl), **kw)

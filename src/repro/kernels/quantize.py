@@ -52,16 +52,27 @@ def quantize_blockwise_fwd(x, *, block=DEFAULT_BLOCK, interpret=False):
 
 def dequantize_blockwise_fwd(q, scale, shape, *, interpret=False):
     nb, block = q.shape
-    x = pl.pallas_call(
-        _dq_kernel,
-        grid=(nb // ROWS,),
-        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
-                  pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
-        interpret=interpret,
-    )(q, scale[:, None])
+    if scale.shape != (nb,):
+        raise ValueError(f"scale shape {scale.shape} != ({nb},)")
     n = 1
     for s in shape:
         n *= s
+    if n > nb * block:
+        raise ValueError(f"shape {shape} needs {n} elements; payload has "
+                         f"only {nb}x{block}")
+    # the quantizer pads its row count to ROWS, but accept any nb: a grid of
+    # nb // ROWS would silently drop the trailing nb % ROWS rows
+    nb_pad = -(-nb // ROWS) * ROWS
+    if nb_pad != nb:
+        q = jnp.pad(q, ((0, nb_pad - nb), (0, 0)))
+        scale = jnp.pad(scale, (0, nb_pad - nb))
+    x = pl.pallas_call(
+        _dq_kernel,
+        grid=(nb_pad // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+                  pl.BlockSpec((ROWS, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad, block), jnp.float32),
+        interpret=interpret,
+    )(q, scale[:, None])
     return x.reshape(-1)[:n].reshape(shape)

@@ -62,3 +62,16 @@ def dequantize_blockwise_ref(q, scale, shape):
     for s in shape:
         n *= s
     return flat[:n].reshape(shape)
+
+
+def quant_avg_dequant_ref(buf, block=256):
+    """buf: (K, n) f32 -> (n,) f32 — int8-roundtrip every participant row
+    blockwise (absmax scale per (participant, block)), then Eq. 2 mean."""
+    K, n = buf.shape
+    pad = (-n) % block
+    xb = jnp.pad(buf, ((0, 0), (0, pad))).reshape(K, -1, block)
+    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.int32).astype(jnp.float32) * scale
+    return (jnp.sum(dq, axis=0) / K).reshape(-1)[:n]

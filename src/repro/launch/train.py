@@ -23,7 +23,6 @@ from repro.checkpoint.io import save_round_state
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
 from repro.core.colearn import CoLearner
-from repro.core.compression import make_compress_fn
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
 from repro.data.synthetic import lm_examples
@@ -68,7 +67,11 @@ def main(argv=None):
     ap.add_argument("--n-examples", type=int, default=1280)
     ap.add_argument("--steps-per-epoch", type=int, default=0,
                     help="truncate each epoch to this many batches (0=full)")
-    ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "fused"],
+                    help="Eq. 2 upload emulation: int8 = leafwise "
+                         "quantize-roundtrip; fused = flat-buffer wire "
+                         "codec (one quant->avg->dequant kernel pass)")
     ap.add_argument("--engine", default="fused", choices=["fused", "python"],
                     help="round engine: fused = one executable per round "
                          "(repro.core.engine); python = reference loop")
@@ -92,8 +95,8 @@ def main(argv=None):
         return tr.loss_fn(params, cfg, {"tokens": x, "labels": y})
 
     learner = CoLearner(ccfg, loss_fn, optimizer_name=args.optimizer,
-                        compress_fn=(make_compress_fn() if
-                                     args.compress == "int8" else None),
+                        compress={"int8": "leafwise", "fused": "fused",
+                                  "none": None}[args.compress],
                         engine=args.engine)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)

@@ -1,0 +1,148 @@
+"""Flat-buffer wire codec (repro.core.flatbuf) + fused compressed average.
+
+The codec's contract: one static layout per tree structure, bit-exact
+flatten/unflatten inversion, no leaf exempt from the wire format, and exact
+bytes-on-the-wire accounting. The fused compressed average built on it must
+match the leafwise reference path exactly when the block boundaries align
+and stay within the int8 error bound of the exact mean always.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import averaging, engine as engine_mod, flatbuf
+from repro.core.compression import (compressed_bytes, flat_compressed_bytes,
+                                    quantize_roundtrip)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def mixed_tree(K=3):
+    """Odd shapes, a scalar leaf, mixed float dtypes."""
+    ks = jax.random.split(KEY, 5)
+    return {
+        "w": jax.random.normal(ks[0], (K, 7, 13)),
+        "b": jax.random.normal(ks[1], (K, 5)).astype(jnp.bfloat16),
+        "scale": jax.random.normal(ks[2], (K,)),                 # scalar leaf
+        "h": (jax.random.normal(ks[3], (K, 300)).astype(jnp.float16),
+              jax.random.normal(ks[4], (K, 2, 256))),
+    }
+
+
+def assert_bit_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def test_layout_static_and_padded():
+    tree = mixed_tree()
+    lo = flatbuf.make_layout(tree)
+    sizes = [5, 300, 512, 1, 7 * 13]      # dict keys flatten sorted: b,h,scale,w
+    assert list(lo.sizes) == sizes
+    # every leaf starts on a block boundary (blocks never straddle leaves)
+    assert list(lo.offsets) == [0, 256, 768, 1280, 1536]
+    assert all(off % lo.block == 0 for off in lo.offsets)
+    assert lo.n == 1792 and lo.k == 3     # block-aligned payload end
+    assert lo.n_pad % (lo.rows * lo.block) == 0 and lo.n_pad >= lo.n
+    # shapes-only: ShapeDtypeStructs produce the identical layout
+    abstract = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), tree)
+    lo2 = flatbuf.make_layout(abstract)
+    assert (lo.offsets, lo.sizes, lo.shapes, lo.dtypes, lo.n_pad) == \
+           (lo2.offsets, lo2.sizes, lo2.shapes, lo2.dtypes, lo2.n_pad)
+
+
+def test_flatten_unflatten_bit_exact():
+    tree = mixed_tree()
+    lo = flatbuf.make_layout(tree)
+    buf = flatbuf.flatten(tree, lo)
+    assert buf.shape == (lo.k, lo.n_pad) and buf.dtype == jnp.float32
+    assert_bit_equal(flatbuf.unflatten(buf, lo), tree)
+    # tail pad is zero-filled whole blocks (never shares a scale with data)
+    assert not np.asarray(buf[:, lo.n:]).any()
+
+
+def test_layout_rejects_mismatched_participant_dim():
+    with pytest.raises(ValueError):
+        flatbuf.make_layout({"a": jnp.zeros((2, 3)), "b": jnp.zeros((4, 3))})
+    with pytest.raises(ValueError):
+        flatbuf.make_layout({"a": jnp.zeros(())})
+
+
+def test_layout_rejects_dtypes_the_f32_container_corrupts():
+    """int32 > 2^24 (or f64) would silently lose bits in the f32 wire
+    buffer — the layout must refuse them instead. (f64 arrays can't exist
+    without x64 mode, so it's exercised via ShapeDtypeStruct.)"""
+    with pytest.raises(ValueError):
+        flatbuf.make_layout({"a": jnp.zeros((2, 8), dtype=jnp.int32)})
+    with pytest.raises(ValueError):
+        flatbuf.make_layout(
+            {"a": jax.ShapeDtypeStruct((2, 8), np.dtype("float64"))})
+
+
+def test_wire_bytes_exact_no_leaf_escapes():
+    """Every element of every leaf — including sub-block and scalar leaves
+    the leafwise path exempts — is on the int8+scale wire format."""
+    tree = mixed_tree()
+    lo = flatbuf.make_layout(tree)
+    wb = flatbuf.wire_bytes(lo)
+    assert wb == lo.n_pad + 4 * (lo.n_pad // lo.block)
+    assert flat_compressed_bytes(tree) == wb
+    # leafwise accounting now reports the bypassed leaves at raw rates
+    one = jax.tree.map(lambda t: t[0], tree)
+    lb = compressed_bytes(one)
+    expect = 0
+    for t in jax.tree.leaves(one):
+        if t.ndim == 0 or t.size < 256:
+            expect += t.size * t.dtype.itemsize
+        else:
+            expect += t.size + 4 * (-(-t.size // 256))
+    assert lb == expect
+
+
+def test_fused_average_within_quant_bound_and_broadcast():
+    tree = mixed_tree()
+    avg_fn = jax.jit(engine_mod.make_fused_compressed_average(impl="ref"))
+    out = avg_fn(tree)
+    exact = averaging.average_pjit(tree)
+    for a, b, t in zip(jax.tree.leaves(out), jax.tree.leaves(exact),
+                       jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        # the int8 step scales with the PARTICIPANT data's amax (the mean's
+        # own amplitude cancels); add the storage-dtype casts of the mean
+        amax = np.abs(np.asarray(t, np.float32)).max()
+        err = np.abs(np.asarray(a, np.float32)
+                     - np.asarray(b, np.float32)).max()
+        bound = amax / 127.0 + 2 * float(jnp.finfo(a.dtype).eps) * amax + 1e-6
+        assert err <= bound
+        # all K slots hold the same mean (average_fn contract)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(a[1]))
+
+
+def test_fused_average_pallas_matches_ref_impl():
+    tree = mixed_tree()
+    out_r = jax.jit(engine_mod.make_fused_compressed_average(impl="ref"))(tree)
+    out_p = jax.jit(
+        engine_mod.make_fused_compressed_average(impl="interpret"))(tree)
+    for a, b in zip(jax.tree.leaves(out_r), jax.tree.leaves(out_p)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_fused_average_matches_leafwise_when_blocks_align():
+    """With every per-participant leaf a whole number of f32 blocks, the
+    flat buffer reproduces the leafwise block boundaries exactly — the two
+    wire paths must then agree to well under 1e-6 (observed: bitwise)."""
+    ks = jax.random.split(KEY, 3)
+    K = 4
+    tree = {"a": jax.random.normal(ks[0], (K, 2, 256)),
+            "b": jax.random.normal(ks[1], (K, 512)),
+            "c": jax.random.normal(ks[2], (K, 256))}
+    out_f = jax.jit(engine_mod.make_fused_compressed_average(impl="ref"))(tree)
+    out_l = jax.jit(lambda t: averaging.average_pjit(
+        quantize_roundtrip(t)))(tree)
+    for a, b in zip(jax.tree.leaves(out_f), jax.tree.leaves(out_l)):
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() <= 1e-6

@@ -131,3 +131,62 @@ def test_quantize_roundtrip_and_match(shape, dtype):
     scale = float(jnp.abs(x.astype(jnp.float32)).max())
     err = float(jnp.abs(x.astype(jnp.float32) - x_back).max())
     assert err <= scale / 127.0 + 1e-6   # int8 quantization bound
+
+
+def test_dequantize_handles_row_counts_not_multiple_of_rows():
+    """Regression: the dequantizer grid used to silently drop trailing rows
+    when nb % ROWS != 0 (the ref quantizer pads only to whole blocks)."""
+    from repro.kernels.quantize import ROWS
+    n = 3 * 256                                   # nb=3, not a ROWS multiple
+    x = jax.random.normal(KEY, (n,)) * 4
+    q_r, s_r, shp = ref.quantize_blockwise_ref(x)
+    assert q_r.shape[0] % ROWS != 0
+    x_ref = ref.dequantize_blockwise_ref(q_r, s_r, shp)
+    x_pal = ops.dequantize_blockwise(q_r, s_r, shp, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(x_pal), np.asarray(x_ref))
+
+
+def test_dequantize_rejects_inconsistent_payload():
+    q = jnp.zeros((2, 256), jnp.int8)
+    with pytest.raises(ValueError):
+        ops.dequantize_blockwise(q, jnp.ones((3,)), (2, 256),
+                                 impl="interpret")
+    with pytest.raises(ValueError):
+        ops.dequantize_blockwise(q, jnp.ones((2,)), (10, 256),
+                                 impl="interpret")
+
+
+# ---------------------------------------------------------------------------
+# fused quantize->average->dequantize (Eq. 2 wire pass)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("K,n", [
+    (1, 8 * 256),        # single participant, exactly one (ROWS, block) tile
+    (3, 16 * 256),       # odd K, multiple tiles
+    (5, 8 * 256 + 300),  # ragged n: kernel pads to whole tiles internally
+])
+def test_quant_avg_dequant_matches_ref(K, n):
+    buf = jax.random.normal(KEY, (K, n)) * 3
+    m_ref = ref.quant_avg_dequant_ref(buf)
+    m_pal = ops.quant_avg_dequant(buf, impl="interpret")
+    assert m_pal.shape == (n,)
+    # one f32 ULP of slack: the cross-K accumulation order may differ
+    np.testing.assert_allclose(np.asarray(m_pal), np.asarray(m_ref),
+                               rtol=1e-7, atol=1e-6)
+
+
+def test_quant_avg_dequant_is_quantized_mean():
+    """The fused pass == mean of independently int8-roundtripped rows, and
+    sits within the int8 error bound of the exact mean."""
+    K, n = 4, 8 * 256
+    buf = jax.random.normal(KEY, (K, n)) * 2
+    rows = []
+    for k in range(K):
+        q, s, shp = ref.quantize_blockwise_ref(buf[k])
+        rows.append(ref.dequantize_blockwise_ref(q, s, shp))
+    expect = jnp.stack(rows).sum(0) / K
+    got = ops.quant_avg_dequant(buf, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-7, atol=1e-6)
+    exact = np.asarray(buf.mean(0))
+    bound = np.abs(np.asarray(buf)).max() / 127.0 + 1e-6
+    assert np.abs(np.asarray(got) - exact).max() <= bound

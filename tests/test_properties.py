@@ -12,12 +12,45 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import averaging
+from repro.core import averaging, flatbuf
 from repro.core.schedule import EpochController, clr_lr, relative_change
 from repro.data.partition import partition
 from repro.kernels import ref
 
 SETTINGS = dict(max_examples=25, deadline=None)
+
+# float dtypes the f32 wire container holds losslessly
+_WIRE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+# odd/irregular per-participant leaf shapes, () = scalar leaf
+_LEAF_SHAPES = ((), (1,), (3,), (7, 13), (257,), (2, 256), (5, 5, 3))
+
+
+@given(st.integers(1, 5),
+       st.lists(st.tuples(st.integers(0, len(_LEAF_SHAPES) - 1),
+                          st.integers(0, len(_WIRE_DTYPES) - 1)),
+                min_size=1, max_size=6),
+       st.integers(0, 99))
+@settings(**SETTINGS)
+def test_flatbuf_roundtrip_bit_exact(K, leaf_specs, seed):
+    """unflatten(flatten(tree)) == tree BIT-exactly for any stacked tree of
+    mixed float dtypes, odd shapes, and scalar leaves — no leaf escapes the
+    flat-buffer wire layout."""
+    rng = np.random.RandomState(seed)
+    tree = {}
+    for i, (si, di) in enumerate(leaf_specs):
+        shape, dt = _LEAF_SHAPES[si], _WIRE_DTYPES[di]
+        vals = rng.standard_normal((K, *shape)) * 10 ** rng.randint(-3, 4)
+        tree[f"leaf{i}"] = jnp.asarray(vals, dtype=dt)
+    layout = flatbuf.make_layout(tree)
+    buf = flatbuf.flatten(tree, layout)
+    assert buf.shape == (K, layout.n_pad)
+    assert layout.n >= sum(int(np.prod(_LEAF_SHAPES[si], dtype=np.int64))
+                           for si, _ in leaf_specs)
+    assert all(off % layout.block == 0 for off in layout.offsets)
+    back = flatbuf.unflatten(buf, layout)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
 
 
 @given(st.integers(10, 500), st.integers(1, 8), st.integers(0, 99))

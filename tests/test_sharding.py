@@ -90,6 +90,24 @@ out["fused_round_slots_equal"] = max(
     float(jnp.abs(t[0] - t[1]).max())
     for t in jax.tree.leaves(averaged)) < 1e-4
 
+# 4b) flat-buffer compressed average on the pod mesh: each pod int8-
+#     roundtrips its own row, ONE psum over 'pod' aggregates the payloads;
+#     result within the int8 error bound of the exact mean, slots equal
+from repro.core import engine as engine_mod
+flat_avg = engine_mod.make_fused_compressed_average(
+    impl="ref", mesh=mesh, axis="pod")
+with compat.use_mesh(mesh):
+    favg = jax.jit(flat_avg)(new_stacked)
+errs, bounds = [], []
+for f, e, s in zip(jax.tree.leaves(favg), jax.tree.leaves(avg_p),
+                   jax.tree.leaves(new_stacked)):
+    errs.append(float(jnp.abs(f.astype(jnp.float32)
+                              - e.astype(jnp.float32)).max()))
+    bounds.append(float(jnp.abs(s.astype(jnp.float32)).max()) / 127.0 + 1e-6)
+out["flat_avg_within_bound"] = all(e <= b for e, b in zip(errs, bounds))
+out["flat_avg_slots_equal"] = max(
+    float(jnp.abs(t[0] - t[1]).max()) for t in jax.tree.leaves(favg)) == 0.0
+
 # 5) decode step lowers on the mesh
 cache = tr.init_cache(cfg, 8, 16, jnp.float32)
 csh = sp.named(mesh, sp.cache_specs(
@@ -130,6 +148,11 @@ def test_colearn_replicas_independent(mesh_results):
 def test_average_pjit_matches_shard_map(mesh_results):
     assert mesh_results["avg_match"]
     assert mesh_results["avg_is_mean"]
+
+
+def test_flat_compressed_average_on_pod_mesh(mesh_results):
+    assert mesh_results["flat_avg_within_bound"]
+    assert mesh_results["flat_avg_slots_equal"]
 
 
 def test_fused_round_on_pod_mesh(mesh_results):
