@@ -39,9 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import averaging, engine as engine_mod, flatbuf
-from repro.core.compression import (compressed_bytes, flat_compressed_bytes,
-                                    quantize_roundtrip)
+from repro.core import api, averaging, flatbuf
+from repro.core.compression import compressed_bytes, flat_compressed_bytes
 from repro.launch.steps import params_shapes
 
 # smoke trees spanning few-leaf dense to many-leaf MoE/hybrid structures,
@@ -117,14 +116,17 @@ def _time_pair(fn_a, fn_b, arg, reps):
 def finalize_latency_rows(archs=LATENCY_ARCHS, K=4, reps=30, block=256,
                           impl="ref", quiet=False):
     """Jitted compressed-average latency, leafwise vs flat-buffer codec."""
+    leaf_codec = api.LeafwiseInt8(block=block, impl=impl)
+    flat_codec = api.FlatFusedInt8(block=block, impl=impl)
+    full = api.FullAverage()
     rows = []
     for arch in archs:
         stacked = _stacked_smoke_params(arch, K)
         leaves = jax.tree.leaves(stacked)
-        leaf_fn = jax.jit(lambda s: averaging.average_pjit(
-            quantize_roundtrip(s, block=block, impl=impl)))
-        flat_fn = jax.jit(engine_mod.make_fused_compressed_average(
-            block=block, impl=impl))
+        # FullAverage composes each codec its own way: leafwise = per-leaf
+        # roundtrip + separate mean, flat = the codec's fused-mean kernel
+        leaf_fn = jax.jit(full.make_aggregate_fn(leaf_codec))
+        flat_fn = jax.jit(full.make_aggregate_fn(flat_codec))
         (l_min, l_mean), (f_min, f_mean) = _time_pair(leaf_fn, flat_fn,
                                                       stacked, reps)
         layout = flatbuf.make_layout(stacked, block=block)
@@ -139,9 +141,8 @@ def finalize_latency_rows(archs=LATENCY_ARCHS, K=4, reps=30, block=256,
             "flat_buffer_ms_min": f_min * 1e3,
             "flat_buffer_ms_mean": f_mean * 1e3,
             "speedup_min": l_min / f_min,
-            "wire_bytes_leafwise": compressed_bytes(
-                jax.tree.map(lambda t: t[0], stacked), block=block),
-            "wire_bytes_flat": flatbuf.wire_bytes(layout),
+            "wire_bytes_leafwise": leaf_codec.wire_bytes(stacked),
+            "wire_bytes_flat": flat_codec.wire_bytes(stacked),
         })
         if not quiet:
             r = rows[-1]
@@ -201,8 +202,8 @@ def check():
         layout.n_pad // block)
 
     exact = averaging.average_pjit(stacked)
-    fused = jax.jit(engine_mod.make_fused_compressed_average(
-        block=block, impl="ref"))(stacked)
+    fused = jax.jit(api.FullAverage().make_aggregate_fn(
+        api.FlatFusedInt8(block=block, impl="ref")))(stacked)
     for a, b, t in zip(jax.tree.leaves(fused), jax.tree.leaves(exact),
                        jax.tree.leaves(stacked)):
         amax = np.abs(np.asarray(t, np.float32)).max()

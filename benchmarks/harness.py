@@ -38,22 +38,28 @@ def accuracy(apply_fn, params, x, y, bs=256):
 def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 eta0=0.02, epsilon=0.02, schedule="clr", epochs_rule="ile",
                 batch_size=32, seed=0, steps_cap=0, engine="python",
-                compress=None):
+                compress=None, codec=None, aggregator=None):
     """Returns dict with per-round accuracy, controller history, comm stats.
 
     engine: "python" (reference per-epoch loop) or "fused" (one compiled
     executable per round — see repro.core.engine); identical results.
-    compress: None | "leafwise" | "fused" — the Eq. 2 int8 upload emulation
-    (leafwise reference codec vs the flat-buffer wire codec).
+    codec / aggregator: round-strategy objects or registry names
+    (repro.core.api) — e.g. codec="leafwise" | "fused",
+    aggregator=PartialParticipation(m=2) | "ring". compress is the legacy
+    alias for codec (None | "leafwise" | "fused").
     """
+    if compress is not None:
+        if codec is not None:
+            raise ValueError("pass codec= or the legacy compress=, not both")
+        codec = compress
     x, y = train
     shards = partition_arrays([x, y], K, seed)
     data = ParticipantData(shards, batch_size, seed)
     ccfg = CoLearnConfig(n_participants=K, T0=T0, eta0=eta0, epsilon=epsilon,
                          schedule=schedule, epochs_rule=epochs_rule,
                          max_rounds=rounds)
-    learner = CoLearner(ccfg, cls_loss(apply_fn), engine=engine,
-                        compress=compress)
+    learner = CoLearner(ccfg, cls_loss(apply_fn), codec=codec,
+                        aggregator=aggregator, round_engine=engine)
     params = init_fn(jax.random.PRNGKey(seed))
     state = learner.init(params)
     accs, Ts, times = [], [], []

@@ -71,7 +71,7 @@ def dispatch_bound(engine, T, rounds, K=4, d=16, n_batches=2, B=4):
     # epsilon=0 keeps T_i fixed so every measured round runs the same work
     ccfg = CoLearnConfig(n_participants=K, T0=T, eta0=0.01, epsilon=0.0,
                          max_rounds=rounds + 1)
-    learner = CoLearner(ccfg, loss_fn, engine=engine)
+    learner = CoLearner(ccfg, loss_fn, round_engine=engine)
     state = learner.init(params)
     return _time_rounds(learner, state, lambda i, j: batches, rounds)
 
@@ -94,7 +94,7 @@ def compute_bound(engine, T, rounds, K=4, seq=32, n=512, batch=8):
 
     ccfg = CoLearnConfig(n_participants=K, T0=T, eta0=0.01, epsilon=0.0,
                          max_rounds=rounds + 1)
-    learner = CoLearner(ccfg, loss_fn, engine=engine)
+    learner = CoLearner(ccfg, loss_fn, round_engine=engine)
     state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg,
                                         jnp.float32))
     return _time_rounds(learner, state, eb, rounds)

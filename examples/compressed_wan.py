@@ -1,12 +1,16 @@
-"""Scenario (beyond-paper): int8-quantized WAN uploads.
+"""Scenario (beyond-paper): int8-quantized WAN uploads + round strategies.
 
 The paper notes it does NOT compress parameter exchange; this example shows
-the framework's beyond-paper option: participants upload int8 blockwise-
-quantized parameters, cutting per-round WAN volume ~2x vs bf16 / ~4x vs
-f32 at negligible accuracy cost. Both wire paths are exercised: the
-leafwise reference codec and the flat-buffer fast path (one fused
-quantize->average->dequantize pass over one contiguous buffer, exact
-byte accounting — see ROADMAP "Wire codec").
+the framework's beyond-paper wire codecs (``repro.core.api``): participants
+upload int8 blockwise-quantized parameters, cutting per-round WAN volume
+~2x vs bf16 / ~4x vs f32 at negligible accuracy cost. Both codec objects
+are exercised under full Eq. 2 averaging — LeafwiseInt8 (the per-leaf
+reference roundtrip) and FlatFusedInt8 (one fused quantize->average->
+dequantize pass over one contiguous buffer, exact byte accounting) — and
+the per-round wire bytes now come straight from ``RoundLog.comm_bytes``
+(codec-priced upload + f32 download). A final run swaps the aggregator for
+FedAvg-style partial participation: only m=2 of the K=4 data centers
+upload each round, and the comm accounting shrinks accordingly.
 
 Run:  PYTHONPATH=src python examples/compressed_wan.py
 """
@@ -16,8 +20,9 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
+from repro.core.api import (ExactF32, FlatFusedInt8, FullAverage,
+                            LeafwiseInt8, PartialParticipation)
 from repro.core.colearn import CoLearner
-from repro.core.compression import compressed_bytes, flat_compressed_bytes
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
 from repro.data.synthetic import lm_examples
@@ -27,14 +32,19 @@ cfg = get_smoke_config("phi4-mini-3.8b")
 x, y = lm_examples(seed=0, n=400, seq_len=32, vocab=cfg.vocab_size)
 shards = partition_arrays([x, y], K=4, seed=0)
 
-for label, compress in (("exact (paper)", None),
-                        ("int8 leafwise", "leafwise"),
-                        ("int8 flat-buffer", "fused")):
+RUNS = (
+    ("exact (paper)", ExactF32(), FullAverage()),
+    ("int8 leafwise", LeafwiseInt8(), FullAverage()),
+    ("int8 flat-buffer", FlatFusedInt8(), FullAverage()),
+    ("flat + partial m=2", FlatFusedInt8(), PartialParticipation(m=2)),
+)
+
+for label, codec, aggregator in RUNS:
     data = ParticipantData(shards, batch_size=8)
     learner = CoLearner(
         CoLearnConfig(n_participants=4, T0=1, max_rounds=3, eta0=0.05),
         loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
-        compress=compress)
+        codec=codec, aggregator=aggregator)
     state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
     for i in range(3):
         state = learner.run_round(
@@ -42,11 +52,7 @@ for label, compress in (("exact (paper)", None),
                                             data.epoch_batches(i_, j_))))
     params = learner.shared_model(state)
     raw = sum(t.size * 4 for t in jax.tree.leaves(params))
-    wire = raw
-    if compress == "leafwise":
-        wire = compressed_bytes(params)
-    elif compress == "fused":
-        wire = flat_compressed_bytes(state["params"])  # exact, incl. pad
-    print(f"{label:22s} final_loss={np.mean(state['log'][-1].local_losses):.4f}"
-          f"  wire_bytes/round={2*wire/2**20:.1f}MiB (f32 would be "
-          f"{2*raw/2**20:.1f}MiB)")
+    log = state["log"][-1]
+    print(f"{label:20s} final_loss={np.mean(log.local_losses):.4f}"
+          f"  comm/round={log.comm_bytes/2**20:.1f}MiB per participant "
+          f"(f32 full-avg would be {2*raw/2**20:.1f}MiB)")

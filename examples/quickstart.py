@@ -5,6 +5,15 @@ they train locally with the cyclical learning rate (Eq. 3), the server
 averages parameters (Eq. 2) and doubles local epochs when the shared model
 stabilizes (Eq. 4).
 
+The round strategy is composed explicitly from the three protocols in
+``repro.core.api`` — the wire codec (ExactF32: paper-faithful f32 uploads),
+the aggregator (FullAverage: Eq. 2), and the round engine (PythonEngine:
+the reference host loop). Swap any piece independently: e.g.
+``codec=FlatFusedInt8()`` for int8 flat-buffer uploads (see
+examples/compressed_wan.py), ``aggregator=PartialParticipation(m=2)`` for
+FedAvg-style sampled uploads, or ``round_engine=FusedEngine()`` for the
+one-executable-per-round fast path.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -13,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
+from repro.core.api import ExactF32, FullAverage, PythonEngine
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -27,6 +37,9 @@ learner = CoLearner(
     CoLearnConfig(n_participants=5, T0=1, eta0=0.05, epsilon=0.05,
                   schedule="clr", epochs_rule="ile", max_rounds=4),
     loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
+    codec=ExactF32(),                   # paper-faithful f32 wire
+    aggregator=FullAverage(),           # Eq. 2 over all K participants
+    round_engine=PythonEngine(),        # reference per-epoch host loop
 )
 state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
 

@@ -124,7 +124,8 @@ class CoLearnConfig:
     schedule: str = "clr"            # clr | elr  (cyclical vs exponential)
     epochs_rule: str = "ile"         # ile | fle  (increasing vs fixed)
     max_rounds: int = 10
-    compress: str = "none"           # none | int8 (beyond-paper)
+    compress: str = "none"           # wire-codec registry name (api.CODECS:
+                                     # none/exact | int8/leafwise | fused)
 
 
 # --- input shapes assigned to this paper (public pool) ---------------------

@@ -1,0 +1,705 @@
+"""Composable round-strategy API: WireCodec x Aggregator x RoundEngine.
+
+The paper's Algorithm 1 is one point in a family of decentralized-averaging
+protocols — FedAvg-style partial participation (McMahan et al., 1602.05629)
+and dynamic/partial model averaging (Kamp et al., 1807.03210) differ from it
+only in *who aggregates what, over which wire, with which engine*. This
+module factors those three axes into small protocols so a new aggregation
+scheme is a new class, not another constructor flag plus an ``if`` in three
+files:
+
+* :class:`WireCodec` — how one participant's stacked parameters travel:
+  ``encode``/``decode`` (whose composition is the in-sim wire-roundtrip
+  emulation) plus exact per-participant ``wire_bytes`` accounting.
+  Instances: :class:`ExactF32` (the paper-faithful f32 wire),
+  :class:`LeafwiseInt8` (per-leaf int8 roundtrip, ``core.compression``;
+  sub-block leaves bypass the codec and are billed at raw rates),
+  :class:`FlatFusedInt8` (the flat-buffer wire format, ``core.flatbuf`` +
+  ``kernels.comm`` — every element on the wire format, bytes exact by
+  construction).
+
+* :class:`Aggregator` — who averages what. Each aggregator is a row-
+  stochastic ``(K, K)`` *mixing matrix* per round applied over the
+  participant axis of the codec-roundtripped params (the classic gossip-
+  matrix formulation). Instances: :class:`FullAverage` (paper Eq. 2 —
+  uniform matrix, routed through the codec's fused-mean kernel when it has
+  one), :class:`PartialParticipation` (FedAvg-style: ``m <= K`` sampled
+  participants per round, weighted by shard size, broadcast back to all),
+  :class:`RingGossip` (one neighbor-exchange step over a fixed ring; no
+  central server, the rows stay distinct). Aggregators also own the
+  per-round comm-byte accounting, priced through the codec.
+
+* :class:`RoundEngine` — how the round executes. :class:`PythonEngine`
+  (reference host loop, one jit dispatch per epoch) and
+  :class:`FusedEngine` (one donated executable per round via
+  ``repro.core.engine``, chunked past ``chunk`` staged epochs). Engines
+  ``bind(learner)`` into runners holding the compiled artifacts.
+
+``CoLearner(codec=..., aggregator=..., round_engine=...)`` composes the
+three; string registry names ("leafwise", "partial", "fused", ...) resolve
+through :data:`CODECS` / :data:`AGGREGATORS` / :data:`ENGINES`. The legacy
+flag surface lives on in ``CoLearner.from_flags`` (see the migration table
+in ROADMAP.md §Round strategy API).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import averaging, compression, engine as engine_mod, flatbuf
+from repro.core.schedule import relative_change, round_lr
+from repro.kernels import ops as kops
+from repro.kernels.quantize import DEFAULT_BLOCK
+
+
+def participant_bytes(stacked) -> int:
+    """Raw per-participant bytes of a stacked ``(K, ...)`` params tree at
+    its native dtypes — the f32/bf16 download side of the accounting."""
+    total = 0
+    for t in jax.tree.leaves(stacked):
+        total += (t.size // t.shape[0]) * jnp.dtype(t.dtype).itemsize
+    return total
+
+
+def _one_participant_shapes(stacked):
+    """ShapeDtypeStruct tree of ONE participant (leading K stripped)."""
+    return jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape[1:], t.dtype), stacked)
+
+
+# ---------------------------------------------------------------------------
+# WireCodec
+# ---------------------------------------------------------------------------
+class WireCodec(abc.ABC):
+    """What one participant's upload looks like on the wire.
+
+    ``decode(encode(stacked))`` is the in-sim wire emulation (identity for
+    the exact codec, an int8 quantization roundtrip otherwise);
+    ``roundtrip`` is that composition and is what aggregators trace into
+    the round executable. ``wire_bytes`` is the exact per-participant
+    upload byte count, bypasses and padding included.
+    """
+
+    name: str = "codec"
+
+    @abc.abstractmethod
+    def encode(self, stacked):
+        """Stacked ``(K, ...)`` params tree -> wire representation."""
+
+    @abc.abstractmethod
+    def decode(self, wire):
+        """Wire representation -> stacked params tree (original dtypes)."""
+
+    def roundtrip(self, stacked):
+        """The wire emulation the aggregator applies before mixing."""
+        return self.decode(self.encode(stacked))
+
+    @abc.abstractmethod
+    def wire_bytes(self, stacked) -> int:
+        """Exact bytes ONE participant uploads for this stacked tree."""
+
+    def make_fused_mean(self, mesh=None, axis="pod"):
+        """Optional codec-owned Eq. 2 fast path (wire roundtrip + uniform
+        mean as one fused pass). ``None`` means the aggregator composes
+        ``roundtrip`` with a generic mean instead. ``FullAverage`` consults
+        this so the flat-buffer kernel keeps owning its pod shard_map."""
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactF32(WireCodec):
+    """The paper-faithful wire: parameters travel at their raw dtypes."""
+
+    name = "exact"
+
+    def encode(self, stacked):
+        return stacked
+
+    def decode(self, wire):
+        return wire
+
+    def wire_bytes(self, stacked) -> int:
+        return participant_bytes(stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafwiseInt8(WireCodec):
+    """Per-leaf int8 blockwise roundtrip (the tested reference wire path).
+
+    Leaves smaller than one quantization ``block`` (and scalars) bypass the
+    codec and travel uncompressed; ``wire_bytes`` bills them at raw-dtype
+    rates (``compression.compressed_bytes``). Note the emulation runs on
+    the STACKED tree, so the bypass threshold sees ``K * size`` — see
+    ``core.compression`` for the accounting caveat at small K.
+    """
+
+    block: int = DEFAULT_BLOCK
+    impl: str = "ref"
+    name = "leafwise"
+
+    def encode(self, stacked):
+        leaves, treedef = jax.tree.flatten(stacked)
+        enc = []
+        for t in leaves:
+            if t.ndim == 0 or t.size < self.block:
+                enc.append(("raw", t, None))
+            else:
+                enc.append(("q8", kops.quantize_blockwise(
+                    t, block=self.block, impl=self.impl), t.dtype))
+        return (treedef, tuple(enc))
+
+    def decode(self, wire):
+        treedef, enc = wire
+        leaves = []
+        for kind, payload, dtype in enc:
+            if kind == "raw":
+                leaves.append(payload)
+            else:
+                q, scale, shape = payload
+                leaves.append(kops.dequantize_blockwise(
+                    q, scale, shape, impl=self.impl).astype(dtype))
+        return jax.tree.unflatten(treedef, leaves)
+
+    # roundtrip = decode(encode(x)) — the inherited default. It applies the
+    # identical per-leaf branch + kernels as the PR-2 reference
+    # ``compression.quantize_roundtrip``; tests/test_api.py pins the two
+    # bitwise so the bypass threshold can never drift between them.
+
+    def wire_bytes(self, stacked) -> int:
+        return compression.compressed_bytes(_one_participant_shapes(stacked),
+                                            block=self.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatFusedInt8(WireCodec):
+    """The flat-buffer wire format: one contiguous ``(K, N_pad)`` buffer,
+    every leaf on the int8 + per-block-scale format, bytes exact by
+    construction (``core.flatbuf``). Under :class:`FullAverage` the whole
+    quantize->average->dequantize pass runs as ONE kernel
+    (``kernels.comm.quant_avg_dequant``), on the pod mesh as one shard_map
+    psum of one buffer."""
+
+    block: int = DEFAULT_BLOCK
+    impl: str = "ref"
+    name = "fused"
+
+    def encode(self, stacked):
+        layout = flatbuf.make_layout(stacked, block=self.block)
+        buf = flatbuf.flatten(stacked, layout)
+        q, scale, shape = kops.quantize_blockwise(buf, block=self.block,
+                                                  impl=self.impl)
+        return (layout, q, scale, shape)
+
+    def decode(self, wire):
+        layout, q, scale, shape = wire
+        buf = kops.dequantize_blockwise(q, scale, shape, impl=self.impl)
+        return flatbuf.unflatten(buf, layout)
+
+    def wire_bytes(self, stacked) -> int:
+        return compression.flat_compressed_bytes(stacked, block=self.block)
+
+    def make_fused_mean(self, mesh=None, axis="pod"):
+        return engine_mod.make_fused_compressed_average(
+            block=self.block, impl=self.impl, mesh=mesh, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class CustomFn(WireCodec):
+    """Escape hatch wrapping an arbitrary stacked->stacked wire transform
+    (the legacy ``CoLearner(compress_fn=...)``). The encoding is opaque, so
+    ``wire_bytes`` conservatively bills raw-dtype bytes."""
+
+    fn: Callable
+    name = "custom"
+
+    def encode(self, stacked):
+        return self.fn(stacked)
+
+    def decode(self, wire):
+        return wire
+
+    def wire_bytes(self, stacked) -> int:
+        return participant_bytes(stacked)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator
+# ---------------------------------------------------------------------------
+def mix_participants(stacked, weights):
+    """Apply a row-stochastic ``(K, K)`` mixing matrix over the participant
+    axis: slot k receives ``sum_j W[k, j] * w_j``. Uniform rows give Eq. 2;
+    a circulant gives ring gossip; broadcast sampled rows give FedAvg-style
+    partial participation."""
+    W = weights.astype(jnp.float32)
+
+    def one(t):
+        mixed = jnp.einsum("kj,j...->k...", W, t.astype(jnp.float32))
+        return mixed.astype(t.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def _check_one_row_per_pod(aggregator, stacked, mesh, axis):
+    """The weighted pod specializations permute/scale whole local blocks,
+    so they are only correct with exactly one participant row per pod —
+    fail loudly instead of silently mixing the wrong rows."""
+    k_rows = jax.tree.leaves(stacked)[0].shape[0]
+    k_pods = mesh.shape[axis]
+    if k_rows != k_pods:
+        raise ValueError(
+            f"pod-path {aggregator.name!r} aggregation requires one "
+            f"participant row per pod: params have K={k_rows}, mesh axis "
+            f"{axis!r} has {k_pods} pods")
+
+
+class Aggregator(abc.ABC):
+    """Who aggregates what: a per-round mixing matrix + byte accounting.
+
+    ``make_aggregate_fn(codec, ...)`` returns ``aggregate(stacked, weights)``
+    — traced into the round executable; ``weights`` is the ``(K, K)``
+    matrix from ``mixing_matrix`` (or ``None`` when ``uses_weights`` is
+    False and the matrix is statically known, e.g. Eq. 2's uniform mean).
+    ``comm_bytes`` prices the round per participant through the codec.
+    """
+
+    name: str = "aggregator"
+    #: False => the aggregate fn ignores the weights argument (statically
+    #: known matrix); the driver then passes None and avoids the transfer.
+    uses_weights: bool = True
+    #: True => ``comm_bytes`` is round-independent for fixed param shapes,
+    #: so the driver computes it once per learner instead of per round.
+    #: Aggregators whose accounting varies per round must set this False.
+    static_comm: bool = True
+
+    @abc.abstractmethod
+    def mixing_matrix(self, round_index: int, K: int) -> np.ndarray:
+        """Row-stochastic (K, K) f32 matrix for this round (host-side)."""
+
+    def make_aggregate_fn(self, codec: WireCodec, *, mesh=None,
+                          param_specs=None, axis="pod"):
+        """Build ``aggregate(stacked, weights)``. Dispatches to the pod-path
+        specialization hook when a mesh is given; subclasses customize via
+        ``_make_mesh_aggregate_fn`` / ``_make_host_aggregate_fn`` so the
+        mesh dispatch cannot be accidentally bypassed."""
+        if mesh is not None and param_specs is not None:
+            fn = self._make_mesh_aggregate_fn(codec, mesh, param_specs, axis)
+            if fn is not None:
+                return fn
+        return self._make_host_aggregate_fn(codec)
+
+    def _make_host_aggregate_fn(self, codec):
+        """Simulation-path aggregation (single host, all K rows visible)."""
+        def aggregate(stacked, weights):
+            return mix_participants(codec.roundtrip(stacked), weights)
+        return aggregate
+
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+        """Pod-path specialization hook: return an aggregate fn whose only
+        cross-pod traffic is the aggregator's actual wire pattern (a psum,
+        a permute, ...). None falls back to the dense mixing einsum — which
+        under GSPMD gathers every pod's replica across ``axis``, so any
+        aggregator meant for the pod path should override this."""
+        return None
+
+    @abc.abstractmethod
+    def comm_bytes(self, codec: WireCodec, stacked, round_index: int) -> int:
+        """Per-participant wire bytes for this round (upload + download)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FullAverage(Aggregator):
+    """Paper Eq. 2: every participant uploads, the server averages, everyone
+    downloads the shared model. Routed through the codec's fused-mean
+    kernel when it has one (flat-buffer path: one quant->avg->dequant pass;
+    on a pod mesh one shard_map psum of one buffer), else through
+    ``averaging.average_pjit`` / ``make_average_shard_map`` over the
+    codec-roundtripped params — bit-for-bit the PR-2 behavior."""
+
+    name = "full"
+    uses_weights = False
+
+    def mixing_matrix(self, round_index, K):
+        return np.full((K, K), 1.0 / K, np.float32)
+
+    def make_aggregate_fn(self, codec, *, mesh=None, param_specs=None,
+                          axis="pod"):
+        fused = codec.make_fused_mean(mesh=mesh, axis=axis)
+        if fused is not None:
+            return lambda stacked, weights=None: fused(stacked)
+        if mesh is not None and param_specs is not None:
+            sm = averaging.make_average_shard_map(mesh, param_specs, axis)
+            return lambda stacked, weights=None: sm(codec.roundtrip(stacked))
+        return lambda stacked, weights=None: averaging.average_pjit(
+            codec.roundtrip(stacked))
+
+    def comm_bytes(self, codec, stacked, round_index):
+        # upload on the codec's wire + f32/raw download of the shared model
+        return codec.wire_bytes(stacked) + participant_bytes(stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(Aggregator):
+    """FedAvg-style partial participation (McMahan et al., 1602.05629):
+    each round samples ``m <= K`` participants without replacement and the
+    new shared model is their shard-size-weighted average, broadcast back
+    to every participant (all K keep training locally; only the sampled
+    uploads cross the WAN).
+
+    ``weights``: optional length-K per-participant weights (shard sizes);
+    uniform when omitted. Sampling is deterministic in (seed, round) so the
+    python and fused engines see identical rounds.
+    """
+
+    m: int = 2
+    weights: Optional[tuple] = None
+    seed: int = 0
+    name = "partial"
+
+    def mixing_matrix(self, round_index, K):
+        if not 1 <= self.m <= K:
+            raise ValueError(f"need 1 <= m <= K, got m={self.m} K={K}")
+        base = (np.asarray(self.weights, np.float64) if self.weights
+                is not None else np.ones(K))
+        if base.shape != (K,):
+            raise ValueError(f"weights must have length K={K}")
+        if not np.isfinite(base).all() or (base < 0).any():
+            raise ValueError(f"weights must be finite and >= 0; got {base}")
+        # only participants with weight can be sampled — a zero-weight-only
+        # sample would otherwise normalize 0/0 into a NaN mixing matrix
+        eligible = np.nonzero(base > 0)[0]
+        if len(eligible) < self.m:
+            raise ValueError(
+                f"need m={self.m} participants with positive weight; "
+                f"only {len(eligible)} of K={K} have one")
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, round_index]))
+        sel = rng.choice(eligible, size=self.m, replace=False)
+        w = np.zeros(K, np.float64)
+        w[sel] = base[sel]
+        w /= w.sum()
+        # every row identical: all K download the same new shared model
+        return np.broadcast_to(w, (K, K)).astype(np.float32)
+
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+        # rows of the mixing matrix are identical (everyone downloads the
+        # same weighted mean), so the pod path psums each pod's weight-
+        # scaled, codec-roundtripped local row (one psum per leaf, f32
+        # payloads, combinable by XLA) — O(model) cross-pod traffic and
+        # never a K-way gather; the single-buffer int8 collective remains
+        # the FullAverage x FlatFusedInt8 fast path
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import compat
+
+        def aggregate(stacked, weights):
+            _check_one_row_per_pod(self, stacked, mesh, axis)
+
+            def local_mix(local, wrow):
+                rt = codec.roundtrip(local)     # local row only: the upload
+                k = jax.lax.axis_index(axis)
+
+                def one(t):
+                    s = jax.lax.psum(wrow[k] * t.astype(jnp.float32), axis)
+                    return s.astype(t.dtype)
+                return jax.tree.map(one, rt)
+
+            return compat.shard_map(
+                local_mix, mesh=mesh, in_specs=(param_specs, P()),
+                out_specs=param_specs, check_vma=False)(stacked, weights[0])
+        return aggregate
+
+    def comm_bytes(self, codec, stacked, round_index):
+        K = jax.tree.leaves(stacked)[0].shape[0]
+        up = codec.wire_bytes(stacked)          # only m of K pay the upload
+        return math.ceil(self.m * up / K) + participant_bytes(stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingGossip(Aggregator):
+    """One neighbor-exchange step over a fixed ring (decentralized, no
+    server): participant k averages its model with its ring predecessor's,
+    ``w_k' = (w_k + w_{(k-1) mod K}) / 2``. The mixing matrix is doubly
+    stochastic, so repeated rounds contract toward consensus while models
+    stay distinct within a round (``shared_model`` tracks slot 0)."""
+
+    name = "ring"
+
+    def mixing_matrix(self, round_index, K):
+        W = np.zeros((K, K), np.float32)
+        for k in range(K):
+            W[k, k] += 0.5
+            W[k, (k - 1) % K] += 0.5
+        return W
+
+    def _make_host_aggregate_fn(self, codec):
+        # serverless: a participant's OWN model never crosses the wire, so
+        # only the received (off-diagonal) leg goes through the codec —
+        # quantizing the diagonal too would overstate compression error
+        def aggregate(stacked, weights):
+            W = weights.astype(jnp.float32)
+            d = jnp.diagonal(W)
+            off = W - jnp.diag(d)
+            rt = codec.roundtrip(stacked)
+
+            def one(t, q):
+                local = d.reshape((-1,) + (1,) * (t.ndim - 1)) \
+                    * t.astype(jnp.float32)
+                recv = jnp.einsum("kj,j...->k...", off,
+                                  q.astype(jnp.float32))
+                return (local + recv).astype(t.dtype)
+
+            return jax.tree.map(one, stacked, rt)
+        return aggregate
+
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+        # the ring's wire pattern is a collective permute: each pod codec-
+        # roundtrips its own row (the send leg) and receives exactly one
+        # neighbor row (one ppermute per leaf, f32 payloads, combinable by
+        # XLA) — O(model) point-to-point traffic, no all-gather, and the
+        # local half stays exact
+        from repro.sharding import compat
+        K = mesh.shape[axis]
+        perm = [(j, (j + 1) % K) for j in range(K)]
+
+        def aggregate(stacked, weights):
+            del weights                         # the ring matrix is static
+            _check_one_row_per_pod(self, stacked, mesh, axis)
+
+            def local_mix(local):
+                rt = codec.roundtrip(local)
+
+                def one(t, q):
+                    recv = jax.lax.ppermute(q.astype(jnp.float32), axis,
+                                            perm)
+                    return (0.5 * t.astype(jnp.float32)
+                            + 0.5 * recv).astype(t.dtype)
+                return jax.tree.map(one, local, rt)
+
+            return compat.shard_map(
+                local_mix, mesh=mesh, in_specs=(param_specs,),
+                out_specs=param_specs, check_vma=False)(stacked)
+        return aggregate
+
+    def comm_bytes(self, codec, stacked, round_index):
+        # each participant sends its encoded model to one neighbor and
+        # receives one encoded model back — both legs on the wire format
+        return 2 * codec.wire_bytes(stacked)
+
+
+# ---------------------------------------------------------------------------
+# RoundEngine
+# ---------------------------------------------------------------------------
+class RoundEngine(abc.ABC):
+    """How a round executes. ``bind(learner)`` compiles the engine's
+    artifacts against the learner's loss/opt/aggregate and returns a runner
+    with ``run_round(state, epoch_batches_fn) -> state``. Both engines
+    apply the identical state transition (``CoLearner._finish_round``)."""
+
+    name: str = "engine"
+
+    @abc.abstractmethod
+    def bind(self, learner):
+        """Return a runner object for this learner."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PythonEngine(RoundEngine):
+    """Reference path: a host loop dispatching one jitted epoch at a time,
+    host-side Eq. 3 learning rates and Eq. 4 metric."""
+
+    name = "python"
+
+    def bind(self, learner):
+        return _PythonRunner(learner)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedEngine(RoundEngine):
+    """One donated XLA executable per round (``repro.core.engine``): T_i-
+    epoch scan with the Eq. 3 schedule traced in-scan, aggregation, and the
+    on-device Eq. 4 metric, one host sync. Rounds longer than ``chunk``
+    epochs chain traced-offset chunk executables + a finalize executable to
+    bound staged-batch memory (still one final sync)."""
+
+    chunk: int = 32
+    name = "fused"
+
+    def bind(self, learner):
+        return _FusedRunner(learner, self.chunk)
+
+
+class _PythonRunner:
+    def __init__(self, learner):
+        self.learner = learner
+        self._jit_agg = jax.jit(learner._aggregate_fn)
+
+    def run_round(self, state, epoch_batches_fn):
+        learner = self.learner
+        cfg = learner.cfg
+        i = state["round"]
+        T_i = state["ctrl"].T
+        ge0 = state["global_epoch"]
+        lrs, losses = [], []
+        for j in range(T_i):
+            lr = float(round_lr(cfg, i, j, T_i, ge0 + j,
+                                learner.total_epochs_budget()))
+            lrs.append(lr)
+            batches = epoch_batches_fn(i, j)
+            params, opt, l = learner._jit_epoch(
+                state["params"], state["opt"], batches, lr)
+            state["params"], state["opt"] = params, opt
+            losses.append(jax.device_get(l))
+
+        # aggregate (Eq. 2 / partial / gossip) over the codec's wire
+        averaged = self._jit_agg(state["params"], learner.round_weights(i))
+        new_avg = averaging.unstack_participant(averaged, 0)
+        rel = (float("inf") if state["prev_avg"] is None
+               else relative_change(new_avg, state["prev_avg"]))
+        fresh_opt = jax.vmap(learner.opt.init)(averaged)
+        return learner._finish_round(state, i, T_i, rel,
+                                     [float(x.mean()) for x in losses],
+                                     lrs[0], lrs[-1], averaged, fresh_opt,
+                                     new_avg)
+
+
+class _FusedRunner:
+    def __init__(self, learner, chunk):
+        self.learner = learner
+        self.chunk = chunk
+        total = learner.total_epochs_budget()
+        self._round = engine_mod.make_fused_round(
+            learner.loss_fn, learner.opt, learner.cfg,
+            aggregate_fn=learner._aggregate_fn, total_epochs=total)
+        self._epochs = engine_mod.make_fused_epochs(
+            learner.loss_fn, learner.opt, learner.cfg, total_epochs=total)
+        self._finalize = engine_mod.make_fused_finalize(
+            learner.opt, aggregate_fn=learner._aggregate_fn)
+
+    def run_round(self, state, epoch_batches_fn):
+        """One round as one (or, past ``chunk`` epochs, a few chained)
+        donated executables — zero host syncs until the final aux fetch."""
+        learner = self.learner
+        i = state["round"]
+        T_i = state["ctrl"].T
+        ge0 = jnp.int32(state["global_epoch"])
+        agg_w = learner.round_weights(i)
+        # state["params"]/["opt"] are reassigned immediately after every
+        # donating call below, so an exception mid-round (e.g. from
+        # epoch_batches_fn) can never leave state holding deleted buffers.
+        if T_i <= self.chunk:
+            batches = engine_mod.stack_epoch_batches(
+                [epoch_batches_fn(i, j) for j in range(T_i)])
+            averaged, fresh_opt, aux = self._round(
+                state["params"], state["opt"], batches, ge0, agg_w)
+            state["params"], state["opt"] = averaged, fresh_opt
+            new_avg = aux["new_avg"]
+            # the round's single host sync (scalars/loss curves only — the
+            # aggregated model itself stays on device)
+            losses, lrs, rel_dev = jax.device_get(
+                (aux["losses"], aux["lrs"], aux["rel"]))
+        else:
+            # staging all T_i epochs at once would cost device memory linear
+            # in T_i (which ILE doubles); chain chunk executables instead.
+            # j0/T_i/ge0 are traced, so chunks reuse one compiled program.
+            old_avg = averaging.unstack_participant(state["params"], 0)
+            lparts, rparts, j0 = [], [], 0
+            while j0 < T_i:
+                C = min(self.chunk, T_i - j0)
+                batches = engine_mod.stack_epoch_batches(
+                    [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
+                params, opt_st, l, r = self._epochs(
+                    state["params"], state["opt"], batches, jnp.int32(j0),
+                    jnp.int32(T_i), ge0)
+                state["params"], state["opt"] = params, opt_st
+                lparts.append(l)
+                rparts.append(r)
+                j0 += C
+            averaged, fresh_opt, rel_t, new_avg = self._finalize(
+                state["params"], old_avg, agg_w)
+            state["params"], state["opt"] = averaged, fresh_opt
+            lparts, rparts, rel_dev = jax.device_get((lparts, rparts, rel_t))
+            losses = np.concatenate(lparts)
+            lrs = np.concatenate(rparts)
+        rel = float("inf") if state["prev_avg"] is None else float(rel_dev)
+        return learner._finish_round(state, i, T_i, rel,
+                                     [float(l.mean()) for l in losses],
+                                     float(lrs[0]), float(lrs[-1]),
+                                     averaged, fresh_opt, new_avg)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+#: name -> factory(**kw) -> WireCodec. Codec factories accept block=/impl=.
+CODECS: dict = {}
+#: name -> factory(**kw) -> Aggregator.
+AGGREGATORS: dict = {}
+#: name -> factory(**kw) -> RoundEngine. Engine factories accept chunk=.
+ENGINES: dict = {}
+
+
+def register_codec(name, factory):
+    CODECS[name] = factory
+    return factory
+
+
+def register_aggregator(name, factory):
+    AGGREGATORS[name] = factory
+    return factory
+
+
+def register_engine(name, factory):
+    ENGINES[name] = factory
+    return factory
+
+
+register_codec("exact", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
+register_codec("none", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
+register_codec("leafwise", LeafwiseInt8)
+register_codec("int8", LeafwiseInt8)           # legacy CLI alias
+register_codec("fused", FlatFusedInt8)
+register_codec("flat", FlatFusedInt8)          # alias
+register_aggregator("full", FullAverage)
+register_aggregator("partial", PartialParticipation)
+register_aggregator("ring", RingGossip)
+register_engine("python", lambda chunk=32: PythonEngine())
+register_engine("fused", FusedEngine)
+
+
+def _resolve(spec, registry, default, proto, kind, **kw):
+    if spec is None:
+        return default()
+    if isinstance(spec, proto):
+        return spec
+    if isinstance(spec, str):
+        try:
+            factory = registry[spec]
+        except KeyError:
+            raise KeyError(f"unknown {kind} {spec!r}; registered: "
+                           f"{sorted(registry)}") from None
+        return factory(**kw)
+    raise TypeError(f"{kind} must be None, a registry name, or a "
+                    f"{proto.__name__}; got {spec!r}")
+
+
+def get_codec(spec=None, *, block=DEFAULT_BLOCK, impl="ref") -> WireCodec:
+    """None | registry name | WireCodec instance -> WireCodec."""
+    return _resolve(spec, CODECS, ExactF32, WireCodec, "codec",
+                    block=block, impl=impl)
+
+
+def get_aggregator(spec=None, **kw) -> Aggregator:
+    """None | registry name | Aggregator instance -> Aggregator."""
+    return _resolve(spec, AGGREGATORS, FullAverage, Aggregator,
+                    "aggregator", **kw)
+
+
+def get_engine(spec=None, *, chunk=32) -> RoundEngine:
+    """None | registry name | RoundEngine instance -> RoundEngine."""
+    return _resolve(spec, ENGINES, PythonEngine, RoundEngine, "engine",
+                    chunk=chunk)

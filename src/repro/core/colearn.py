@@ -1,36 +1,45 @@
-"""Algorithm 1 — the co-learning protocol.
+"""Algorithm 1 — the co-learning protocol, as a thin round-strategy driver.
 
 The global-server logic (round state, Eq. 4 T_i control, failure restarts)
-is plain Python; the heavy steps (K-participant local SGD epochs, Eq. 2
-averaging) are jitted JAX. The same `CoLearner` drives both the simulation
-path (K participants vmapped on one host — used by every paper-claims
-experiment) and the production path (K = pods, `spmd_axis_name='pod'`).
+is plain Python; the heavy steps (K-participant local SGD epochs, the
+aggregation step) are jitted JAX. The same `CoLearner` drives both the
+simulation path (K participants vmapped on one host — used by every
+paper-claims experiment) and the production path (K = pods,
+`spmd_axis_name='pod'`).
 
-Two round engines sit behind ``CoLearner(engine=...)``:
+A learner composes three strategy objects (``repro.core.api``):
 
-  * ``"python"`` — the reference path: a host loop dispatching one jitted
-    epoch at a time, host-side Eq. 3 learning rates and Eq. 4 metric.
-  * ``"fused"``  — ``repro.core.engine``: the whole round (T_i-epoch scan
-    with the CLR computed traced in-graph, Eq. 2 averaging, on-device
-    Eq. 4 relative_change) is one donated XLA executable with a single
-    host sync; rounds longer than ``fused_chunk`` epochs chain chunk
-    executables to bound staged-batch memory (still one final sync).
-    Same state transitions and RoundLog; equivalence is asserted in
-    tests/test_engine.py.
+  * ``codec`` — the wire format of one participant's upload. ``ExactF32()``
+    (paper-faithful), ``LeafwiseInt8(block, impl)`` (per-leaf int8
+    reference roundtrip), ``FlatFusedInt8(block, impl)`` (flat-buffer wire
+    format, one fused quantize->average->dequantize kernel under full
+    averaging, exact byte accounting).
+  * ``aggregator`` — who averages what: ``FullAverage()`` (paper Eq. 2),
+    ``PartialParticipation(m=...)`` (FedAvg-style sampled uploads),
+    ``RingGossip()`` (serverless neighbor exchange on a fixed ring).
+  * ``round_engine`` — ``PythonEngine()`` (reference host loop, one jit
+    dispatch per epoch) or ``FusedEngine(chunk=...)`` (the whole round as
+    one donated executable, ``repro.core.engine``; long rounds chain chunk
+    executables, still one host sync).
+
+Registry names resolve too: ``CoLearner(ccfg, loss_fn, codec="leafwise",
+aggregator="partial", round_engine="fused")``. The pre-PR-3 flag surface
+(``engine=``, ``compress=``, ``compress_impl=``, ``compress_fn=``,
+``compress_block=``, ``fused_chunk=``) lives on, bit-for-bit, as
+``CoLearner.from_flags`` — see ROADMAP.md §Round strategy API for the
+flag -> object migration table. Engine equivalence and flag/object parity
+are asserted in tests/test_engine.py and tests/test_api.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import averaging, compression, engine as engine_mod
-from repro.core.schedule import EpochController, relative_change, round_lr
+from repro.core import api, averaging, engine as engine_mod
+from repro.core.schedule import EpochController
 from repro.optim.optimizers import get_optimizer
 
 
@@ -47,74 +56,82 @@ class RoundLog:
 
 @dataclass
 class CoLearner:
-    """K-participant co-learning driver.
+    """K-participant co-learning driver over (codec, aggregator, engine).
 
     loss_fn(params, batch) -> (loss, metrics) for ONE participant.
     data: per-participant iterables of epochs; see ``run_round``.
 
-    compress selects the beyond-paper int8 upload emulation for Eq. 2:
-      * None       — exact f32 averaging (the paper-faithful default);
-      * "leafwise" — per-leaf quantize-roundtrip then average (reference
-        wire path; leaves smaller than ``compress_block`` bypass the codec);
-      * "fused"    — the flat-buffer wire codec: one contiguous buffer, one
-        quantize->average->dequantize kernel pass, every leaf on the wire
-        format (``core.flatbuf`` + ``kernels.comm``).
-    ``compress_impl`` picks the kernel backend ("ref" jnp oracle on CPU,
-    "pallas" on TPU); ``compress_fn`` remains the low-level escape hatch
-    (mutually exclusive with compress="fused").
+    codec / aggregator / round_engine each accept a strategy object from
+    ``repro.core.api``, a registry name ("exact" | "leafwise" | "fused",
+    "full" | "partial" | "ring", "python" | "fused"), or None for the
+    paper-faithful default (exact f32 wire, full Eq. 2 averaging, python
+    reference engine). Use ``CoLearner.from_flags(...)`` for the legacy
+    keyword surface.
     """
     cfg: Any                                  # CoLearnConfig
     loss_fn: Callable
     optimizer_name: str = "sgd"
-    compress_fn: Optional[Callable] = None    # stacked params -> stacked params
-    engine: str = "python"                    # python (reference) | fused
-    fused_chunk: int = 32                     # max epochs staged on device
-    compress: Optional[str] = None            # None | leafwise | fused
-    compress_block: int = 256                 # int8 quantization block
-    compress_impl: str = "ref"                # ref | pallas | interpret
+    codec: Any = None                         # WireCodec | name | None
+    aggregator: Any = None                    # Aggregator | name | None
+    round_engine: Any = None                  # RoundEngine | name | None
 
     def __post_init__(self):
-        if self.engine not in ("python", "fused"):
-            raise ValueError(f"unknown engine {self.engine!r}")
-        if self.compress not in (None, "leafwise", "fused"):
-            raise ValueError(f"unknown compress {self.compress!r}")
-        # Eq. 2 upload emulation: "leafwise" quantize-roundtrips each leaf
-        # then averages (the tested reference wire path); "fused" collapses
-        # codec + averaging into one flat-buffer kernel pass (same wire
-        # format, exact byte accounting, no small-leaf bypass).
-        self._average_fn = averaging.average_pjit
-        if self.compress == "leafwise":
-            if self.compress_fn is None:
-                self.compress_fn = compression.make_compress_fn(
-                    self.compress_block, self.compress_impl)
-        elif self.compress == "fused":
-            if self.compress_fn is not None:
+        self.codec = api.get_codec(self.codec)
+        self.aggregator = api.get_aggregator(self.aggregator)
+        self.round_engine = api.get_engine(self.round_engine)
+        self.opt = get_optimizer(self.optimizer_name)
+        # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
+        # the python engine jits it per-epoch, the fused engine scans over
+        # it, so the SGD semantics cannot diverge
+        self._jit_epoch = jax.jit(
+            engine_mod.make_epoch_fn(self.loss_fn, self.opt))
+        # aggregate(stacked, weights): codec roundtrip + participant mixing
+        self._aggregate_fn = self.aggregator.make_aggregate_fn(self.codec)
+        self._comm_cache = None
+        self._runner = self.round_engine.bind(self)
+
+    @classmethod
+    def from_flags(cls, cfg, loss_fn, *, optimizer_name: str = "sgd",
+                   compress_fn: Optional[Callable] = None,
+                   engine: str = "python", fused_chunk: int = 32,
+                   compress: Optional[str] = None, compress_block: int = 256,
+                   compress_impl: str = "ref", aggregator=None):
+        """The pre-PR-3 flag surface, mapped onto strategy objects.
+
+        engine="python"|"fused" (+ fused_chunk) -> round_engine;
+        compress=None|"leafwise"|"fused" (+ compress_block/compress_impl)
+        -> codec; compress_fn stays the low-level escape hatch (an opaque
+        stacked->stacked wire transform, mutually exclusive with
+        compress="fused"). Behavior is flag-for-flag identical to the old
+        constructor; parity is asserted in tests/test_api.py.
+        """
+        if engine not in ("python", "fused"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if compress not in (None, "leafwise", "fused"):
+            raise ValueError(f"unknown compress {compress!r}")
+        if compress == "fused":
+            if compress_fn is not None:
                 raise ValueError(
                     "compress='fused' replaces compress_fn entirely; "
                     "pass one or the other")
-            self._average_fn = engine_mod.make_fused_compressed_average(
-                block=self.compress_block, impl=self.compress_impl)
-        self.opt = get_optimizer(self.optimizer_name)
-        # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
-        # the python path jits it per-epoch, the fused paths scan over it
-        self._jit_epoch = jax.jit(
-            engine_mod.make_epoch_fn(self.loss_fn, self.opt))
-        self._jit_avg = jax.jit(self._average_fn)
-        kw = dict(compress_fn=self.compress_fn,
-                  average_fn=self._average_fn,
-                  total_epochs=self.total_epochs_budget())
-        self._fused_round = engine_mod.make_fused_round(
-            self.loss_fn, self.opt, self.cfg, **kw)
-        self._fused_epochs = engine_mod.make_fused_epochs(
-            self.loss_fn, self.opt, self.cfg,
-            total_epochs=self.total_epochs_budget())
-        self._fused_finalize = engine_mod.make_fused_finalize(
-            self.opt, compress_fn=self.compress_fn,
-            average_fn=self._average_fn)
+            codec = api.FlatFusedInt8(block=compress_block,
+                                      impl=compress_impl)
+        elif compress_fn is not None:
+            codec = api.CustomFn(compress_fn)
+        elif compress == "leafwise":
+            codec = api.LeafwiseInt8(block=compress_block,
+                                     impl=compress_impl)
+        else:
+            codec = api.ExactF32()
+        round_engine = (api.FusedEngine(chunk=fused_chunk)
+                        if engine == "fused" else api.PythonEngine())
+        return cls(cfg, loss_fn, optimizer_name=optimizer_name, codec=codec,
+                   aggregator=aggregator, round_engine=round_engine)
 
     # -- Algorithm 1 ---------------------------------------------------------
     def init(self, params):
         K = self.cfg.n_participants
+        self._comm_cache = None      # params shapes may differ from last init
         stacked = averaging.stack_participants(params, K)
         opt_state = jax.vmap(self.opt.init)(stacked)
         ctrl = EpochController(self.cfg.T0, self.cfg.epsilon,
@@ -130,6 +147,14 @@ class CoLearner:
         one = averaging.unstack_participant(state["params"], 0)
         return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(one))
 
+    def round_weights(self, round_index):
+        """The aggregator's (K, K) mixing matrix for this round as a device
+        array (None for statically-known schemes, e.g. Eq. 2)."""
+        if not self.aggregator.uses_weights:
+            return None
+        return jnp.asarray(self.aggregator.mixing_matrix(
+            round_index, self.cfg.n_participants), jnp.float32)
+
     def run_round(self, state, epoch_batches_fn):
         """One communication round.
 
@@ -137,12 +162,10 @@ class CoLearner:
         that local epoch (each participant sees only its own disjoint shard —
         the data never crosses participants, only parameters do).
 
-        Dispatches to the configured round engine; both engines apply the
+        Dispatches to the bound round engine; both engines apply the
         identical state transition (params, opt reset, controller, log).
         """
-        if self.engine == "fused":
-            return self._run_round_fused(state, epoch_batches_fn)
-        return self._run_round_python(state, epoch_batches_fn)
+        return self._runner.run_round(state, epoch_batches_fn)
 
     def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
                       lr_last, averaged, fresh_opt, new_avg):
@@ -157,102 +180,57 @@ class CoLearner:
         state["prev_avg"] = new_avg
         state["ctrl"] = state["ctrl"].update(rel)
         state["global_epoch"] += T_i
-        # comm volume: each participant uploads + downloads the full model
-        comm = 2 * self.param_bytes(state)
+        # comm volume per participant, priced by the aggregator through the
+        # codec (compressed upload + raw download; gossip pays wire both
+        # ways); round-independent accounting (all built-in aggregators) is
+        # computed once — flat-codec pricing rebuilds a host-side layout
+        # table, which must stay off the per-round path
+        if self.aggregator.static_comm:
+            if self._comm_cache is None:
+                self._comm_cache = self.aggregator.comm_bytes(
+                    self.codec, state["params"], i)
+            comm = self._comm_cache
+        else:
+            comm = self.aggregator.comm_bytes(self.codec, state["params"], i)
         state["round"] = i + 1
         state["log"].append(RoundLog(i, T_i, lr_first, lr_last, rel,
                                      local_losses, comm))
         return state
 
-    def _run_round_fused(self, state, epoch_batches_fn):
-        """One round as one (or, past ``fused_chunk`` epochs, a few chained)
-        donated executables — zero host syncs until the final aux fetch."""
-        i = state["round"]
-        T_i = state["ctrl"].T
-        ge0 = jnp.int32(state["global_epoch"])
-        # state["params"]/["opt"] are reassigned immediately after every
-        # donating call below, so an exception mid-round (e.g. from
-        # epoch_batches_fn) can never leave state holding deleted buffers.
-        if T_i <= self.fused_chunk:
-            batches = engine_mod.stack_epoch_batches(
-                [epoch_batches_fn(i, j) for j in range(T_i)])
-            averaged, fresh_opt, aux = self._fused_round(
-                state["params"], state["opt"], batches, ge0)
-            state["params"], state["opt"] = averaged, fresh_opt
-            new_avg = aux["new_avg"]
-            # the round's single host sync (scalars/loss curves only — the
-            # averaged model itself stays on device)
-            losses, lrs, rel_dev = jax.device_get(
-                (aux["losses"], aux["lrs"], aux["rel"]))
-        else:
-            # staging all T_i epochs at once would cost device memory linear
-            # in T_i (which ILE doubles); chain chunk executables instead.
-            # j0/T_i/ge0 are traced, so chunks reuse one compiled program.
-            old_avg = averaging.unstack_participant(state["params"], 0)
-            lparts, rparts, j0 = [], [], 0
-            while j0 < T_i:
-                C = min(self.fused_chunk, T_i - j0)
-                batches = engine_mod.stack_epoch_batches(
-                    [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
-                params, opt_st, l, r = self._fused_epochs(
-                    state["params"], state["opt"], batches, jnp.int32(j0),
-                    jnp.int32(T_i), ge0)
-                state["params"], state["opt"] = params, opt_st
-                lparts.append(l)
-                rparts.append(r)
-                j0 += C
-            averaged, fresh_opt, rel_t, new_avg = self._fused_finalize(
-                state["params"], old_avg)
-            state["params"], state["opt"] = averaged, fresh_opt
-            lparts, rparts, rel_dev = jax.device_get((lparts, rparts, rel_t))
-            losses = np.concatenate(lparts)
-            lrs = np.concatenate(rparts)
-        rel = float("inf") if state["prev_avg"] is None else float(rel_dev)
-        return self._finish_round(state, i, T_i, rel,
-                                  [float(l.mean()) for l in losses],
-                                  float(lrs[0]), float(lrs[-1]),
-                                  averaged, fresh_opt, new_avg)
+    # legacy handles used by tests/benchmarks to poke at the fused
+    # executables' compilation caches
+    def _fused_handle(self, attr):
+        if not hasattr(self._runner, attr):
+            raise AttributeError(
+                f"_fused{attr} is only available with "
+                f"round_engine=FusedEngine(); this learner runs "
+                f"{self.round_engine.name!r}")
+        return getattr(self._runner, attr)
 
-    def _run_round_python(self, state, epoch_batches_fn):
-        """Reference path: one jit dispatch + host sync per local epoch."""
-        cfg = self.cfg
-        i = state["round"]
-        T_i = state["ctrl"].T
-        ge0 = state["global_epoch"]
-        lrs = []
-        losses = []
-        for j in range(T_i):
-            lr = float(round_lr(cfg, i, j, T_i, ge0 + j,
-                                self.total_epochs_budget()))
-            lrs.append(lr)
-            batches = epoch_batches_fn(i, j)
-            params, opt, l = self._jit_epoch(
-                state["params"], state["opt"], batches, lr)
-            state["params"], state["opt"] = params, opt
-            losses.append(jax.device_get(l))
+    @property
+    def _fused_round(self):
+        return self._fused_handle("_round")
 
-        # -- upload + aggregate (Eq. 2); optional beyond-paper compression --
-        uploaded = state["params"]
-        if self.compress_fn is not None:
-            uploaded = self.compress_fn(uploaded)
-        averaged = self._jit_avg(uploaded)
-        new_avg = averaging.unstack_participant(averaged, 0)
-        rel = (float("inf") if state["prev_avg"] is None
-               else relative_change(new_avg, state["prev_avg"]))
-        fresh_opt = jax.vmap(self.opt.init)(averaged)
-        return self._finish_round(state, i, T_i, rel,
-                                  [float(x.mean()) for x in losses],
-                                  lrs[0], lrs[-1], averaged, fresh_opt,
-                                  new_avg)
+    @property
+    def _fused_epochs(self):
+        return self._fused_handle("_epochs")
 
     def shared_model(self, state):
         return averaging.unstack_participant(state["params"], 0)
 
     # -- failure handling (paper: restart the participant's local training) --
     def restart_participant(self, state, k):
-        """Reset participant k's replica to the current shared model."""
+        """Reset participant k's replica to the current shared model.
+
+        Both the parameters AND the optimizer state row are reset (a stale
+        momentum/Adam moment would keep pushing the restarted replica along
+        its pre-failure trajectory — the paper's failure semantics restart
+        local training from the shared model outright).
+        """
         shared = self.shared_model(state)
-        def put(t, s):
-            return t.at[k].set(s)
-        state["params"] = jax.tree.map(put, state["params"], shared)
+        state["params"] = jax.tree.map(
+            lambda t, s: t.at[k].set(s), state["params"], shared)
+        fresh = self.opt.init(shared)
+        state["opt"] = jax.tree.map(
+            lambda o, f: o.at[k].set(f), state["opt"], fresh)
         return state

@@ -17,7 +17,8 @@ same int8 + per-block f32 absmax scale format:
   physical wire could not do that; the flat-buffer path quantizes strict
   per-participant rows).
 * **flat-buffer** (``repro.core.flatbuf`` + ``repro.kernels.comm``,
-  selected by ``CoLearner(compress="fused")``): the whole stacked tree is
+  selected by ``CoLearner(codec=FlatFusedInt8(...))`` or the legacy
+  ``from_flags(compress="fused")``): the whole stacked tree is
   flattened into one contiguous ``(K, N_pad)`` f32 buffer and a single
   fused quantize->average->dequantize kernel performs Eq. 2 in one
   blockwise pass. No leaf escapes the wire format and

@@ -41,13 +41,18 @@ Backend API — shared by the simulation and pod paths:
     Eq. 2 to an explicit shard_map psum over that axis
     (``launch/steps.make_fused_round_step`` wires this for the dry-run).
 
-``CoLearner(engine="fused"|"python")`` selects between this engine and the
-reference loop; both produce the same ``RoundLog``/state transitions and
-are asserted equivalent to <=1e-5 in ``tests/test_engine.py``.
+``CoLearner(round_engine=FusedEngine(chunk)|PythonEngine())`` (or the
+legacy ``CoLearner.from_flags(engine=...)``) selects between this engine
+and the reference loop; both produce the same ``RoundLog``/state
+transitions and are asserted equivalent to <=1e-5 in
+``tests/test_engine.py``. The aggregation step is supplied as
+``aggregate_fn(stacked, weights)`` by a ``repro.core.api`` aggregator
+(codec roundtrip + participant mixing; ``weights`` is the traced per-round
+mixing matrix, None for statically-uniform Eq. 2).
 
 The end-of-round Eq. 2 step has its own fast path:
-``make_fused_compressed_average`` (selected by ``CoLearner(compress=
-"fused")``) replaces the leafwise int8 roundtrip + separate mean with the
+``make_fused_compressed_average`` (owned by ``api.FlatFusedInt8`` as its
+fused mean) replaces the leafwise int8 roundtrip + separate mean with the
 flat-buffer wire codec (``core.flatbuf``) and one fused
 quantize->average->dequantize kernel (``kernels.comm``) over one
 contiguous buffer.
@@ -177,11 +182,36 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
     return average
 
 
-def _make_finalize(opt, compress_fn, average_fn):
-    """Eq. 2 averaging + Eq. 4 metric + per-participant opt reset."""
-    def finalize(params, old_avg):
-        uploaded = compress_fn(params) if compress_fn is not None else params
-        averaged = average_fn(uploaded)
+def as_aggregate_fn(aggregate_fn=None, compress_fn=None, average_fn=None):
+    """Normalize the aggregation surface to ``aggregate(stacked, weights)``.
+
+    New callers (``repro.core.api`` aggregators) pass ``aggregate_fn``
+    directly — ``weights`` is the traced per-round mixing matrix (or None).
+    Legacy callers keep the PR-2 pair: an optional stacked->stacked
+    ``compress_fn`` upload transform followed by a one-argument
+    ``average_fn`` (default ``averaging.average_pjit``); the pair is
+    wrapped, ignoring weights. Passing both surfaces is an error.
+    """
+    if aggregate_fn is not None:
+        if compress_fn is not None or average_fn is not None:
+            raise ValueError(
+                "pass aggregate_fn OR compress_fn/average_fn, not both")
+        return aggregate_fn
+    if average_fn is None:
+        average_fn = averaging.average_pjit
+
+    def aggregate(stacked, weights=None):
+        del weights                     # legacy pair: statically uniform
+        uploaded = compress_fn(stacked) if compress_fn is not None else stacked
+        return average_fn(uploaded)
+    return aggregate
+
+
+def _make_finalize(opt, aggregate_fn):
+    """Aggregation (Eq. 2 / mixing) + Eq. 4 metric + per-participant opt
+    reset; ``agg_weights`` is the aggregator's traced mixing matrix."""
+    def finalize(params, old_avg, agg_weights=None):
+        averaged = aggregate_fn(params, agg_weights)
         new_avg = averaging.unstack_participant(averaged, 0)
         rel = relative_change_traced(new_avg, old_avg)
         # paper: local opt state is discarded; restart from the shared model
@@ -190,50 +220,54 @@ def _make_finalize(opt, compress_fn, average_fn):
     return finalize
 
 
-def _resolve(cfg, total_epochs, average_fn):
+def _resolve_epochs(cfg, total_epochs):
     if total_epochs is None:
         total_epochs = max(cfg.T0 * cfg.max_rounds, 1)
-    if average_fn is None:
-        average_fn = averaging.average_pjit
-    return total_epochs, average_fn
+    return total_epochs
 
 
 def make_fused_round(loss_fn, opt, cfg, *, compress_fn=None,
                      total_epochs=None, spmd_axis_name=None,
-                     average_fn=None, donate=True):
-    """Build the single-executable round: epoch scan + Eq. 2 + Eq. 4.
+                     average_fn=None, aggregate_fn=None, donate=True):
+    """Build the single-executable round: epoch scan + aggregation + Eq. 4.
 
     loss_fn(params, batch) -> (loss, aux) for ONE participant.
     opt: optimizer triple (init/update) from ``repro.optim.optimizers``.
     cfg: CoLearnConfig — supplies schedule kind, eta0, decay_rate.
-    compress_fn: optional stacked->stacked upload transform, traced into
-        the same executable (wire-format emulation stays on device).
     total_epochs: ELR anneal denominator (default T0 * max_rounds).
     spmd_axis_name: e.g. "pod" to pin the participant vmap to a mesh axis.
-    average_fn: Eq. 2 implementation over stacked params (default
-        ``averaging.average_pjit``); inlines into the round executable.
+    aggregate_fn(stacked, weights): the round-strategy aggregation (codec
+        roundtrip + mixing, see ``repro.core.api``), traced into the same
+        executable. Legacy alternative: ``compress_fn`` (optional stacked->
+        stacked upload transform) + ``average_fn`` (one-arg Eq. 2 over
+        stacked params, default ``averaging.average_pjit``).
 
-    Returns round_fn(stacked_params, opt_state, batches, global_epoch0)
-      -> (averaged_params, fresh_opt_state, aux) with aux = {losses (T,K),
-         lrs (T,), rel (scalar), new_avg (unstacked averaged model)}.
-    ``batches`` is a (T_i, K, n_batches, ...) pytree; ``global_epoch0`` a
-    traced int32 so ELR never retriggers compilation. stacked_params and
-    opt_state are donated.
+    Returns round_fn(stacked_params, opt_state, batches, global_epoch0,
+    agg_weights=None) -> (aggregated_params, fresh_opt_state, aux) with
+    aux = {losses (T,K), lrs (T,), rel (scalar), new_avg (unstacked slot-0
+    model)}. ``batches`` is a (T_i, K, n_batches, ...) pytree;
+    ``global_epoch0`` a traced int32 so ELR never retriggers compilation;
+    ``agg_weights`` the aggregator's traced (K, K) mixing matrix (None for
+    statically-known schemes like Eq. 2). stacked_params and opt_state are
+    donated.
     """
-    total_epochs, average_fn = _resolve(cfg, total_epochs, average_fn)
+    total_epochs = _resolve_epochs(cfg, total_epochs)
     scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
                                                  spmd_axis_name),
                                    cfg, total_epochs)
-    finalize = _make_finalize(opt, compress_fn, average_fn)
+    finalize = _make_finalize(opt, as_aggregate_fn(aggregate_fn, compress_fn,
+                                                   average_fn))
 
-    def round_fn(stacked_params, opt_state, batches, global_epoch0):
+    def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                 agg_weights=None):
         T_i = jax.tree.leaves(batches)[0].shape[0]
         # round entry: every slot holds the shared model w̄^{i-1}
         old_avg = averaging.unstack_participant(stacked_params, 0)
         (params, opt_out), (losses, lrs) = scan_epochs(
             stacked_params, opt_state, batches, 0, T_i, global_epoch0)
         del opt_out  # paper: local opt state is discarded at aggregation
-        averaged, fresh_opt, rel, new_avg = finalize(params, old_avg)
+        averaged, fresh_opt, rel, new_avg = finalize(params, old_avg,
+                                                     agg_weights)
         return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
                                      "rel": rel, "new_avg": new_avg}
 
@@ -250,7 +284,7 @@ def make_fused_epochs(loss_fn, opt, cfg, *, total_epochs=None,
     j0/T_i/ge0 are traced, so the executable is shared across chunks and
     across T_i doublings; only a distinct chunk length C recompiles.
     """
-    total_epochs, _ = _resolve(cfg, total_epochs, None)
+    total_epochs = _resolve_epochs(cfg, total_epochs)
     scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
                                                  spmd_axis_name),
                                    cfg, total_epochs)
@@ -266,11 +300,12 @@ def make_fused_epochs(loss_fn, opt, cfg, *, total_epochs=None,
 
 
 def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
-                        donate=True):
-    """End-of-round executable for the chunked path: Eq. 2 + Eq. 4 + opt
-    reset. finalize_fn(params, old_avg) -> (averaged, fresh_opt, rel,
-    new_avg); ``params`` is donated."""
-    if average_fn is None:
-        average_fn = averaging.average_pjit
-    finalize = _make_finalize(opt, compress_fn, average_fn)
+                        aggregate_fn=None, donate=True):
+    """End-of-round executable for the chunked path: aggregation + Eq. 4 +
+    opt reset. finalize_fn(params, old_avg, agg_weights=None) ->
+    (aggregated, fresh_opt, rel, new_avg); ``params`` is donated. The
+    aggregation surface matches ``make_fused_round`` (aggregate_fn or the
+    legacy compress_fn/average_fn pair)."""
+    finalize = _make_finalize(opt, as_aggregate_fn(aggregate_fn, compress_fn,
+                                                   average_fn))
     return jax.jit(finalize, donate_argnums=(0,) if donate else ())

@@ -135,8 +135,9 @@ def make_average_step():
 
 def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
                           impl="ref", remat=True, mesh=None,
-                          param_specs=None, compress=None,
-                          compress_block=256, compress_impl="ref"):
+                          param_specs=None, codec=None, aggregator=None,
+                          compress=None, compress_block=256,
+                          compress_impl="ref"):
     """Pod-path fused round: the whole communication round as one program.
 
     Shares ``repro.core.engine`` with the simulation path, but pins the
@@ -144,46 +145,56 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     ``mesh``/``param_specs`` are given — Eq. 2 to an explicit shard_map psum
     over that axis instead of an inferred all-reduce.
 
-    compress="fused" swaps Eq. 2 for the flat-buffer wire codec: each pod
-    int8-roundtrips its own upload and ONE psum over the ``pod`` axis
-    aggregates the dequantized block payloads of one contiguous buffer
-    (``engine.make_fused_compressed_average(mesh=...)``), instead of L
-    per-leaf collectives. compress="leafwise" keeps the per-leaf reference
-    codec in front of the shard_map average.
+    codec / aggregator take ``repro.core.api`` strategy objects or registry
+    names. Under ``FullAverage`` (the default) the codec keeps its pod fast
+    path: ``FlatFusedInt8`` runs each pod's int8 roundtrip locally and ONE
+    psum over the ``pod`` axis aggregates the dequantized block payloads of
+    one contiguous buffer, instead of L per-leaf collectives;
+    ``LeafwiseInt8`` keeps the per-leaf reference roundtrip in front of the
+    shard_map average. ``compress=None|"leafwise"|"fused"`` remains the
+    legacy spelling of the codec choice (mutually exclusive with codec=).
 
-    Returns round_fn(stacked_params, opt_state, batches, global_epoch0);
+    Returns round_fn(stacked_params, opt_state, batches, global_epoch0)
+    for weight-free aggregators (Eq. 2), or round_fn(..., agg_weights) when
+    the aggregator mixes with a per-round (K, K) matrix (partial
+    participation / gossip — build it with ``aggregator.mixing_matrix``).
     ``batches`` is the (T_i, K, n_batches, ...) stacked-epoch batch dict.
     """
-    from repro.core import engine as engine_mod
-    from repro.core.averaging import make_average_shard_map
-    from repro.core.compression import make_compress_fn
+    from repro.core import api, engine as engine_mod
     from repro.optim.optimizers import get_optimizer as _get_opt
     from repro.sharding.constrain import batch_axes
 
     def loss_fn(params, batch):
         return tr.loss_fn(params, cfg, batch, lowering, impl, remat)
 
-    if compress not in (None, "leafwise", "fused"):
-        raise ValueError(f"unknown compress {compress!r}")
-    average_fn, compress_fn = None, None
-    if compress == "fused":
-        average_fn = engine_mod.make_fused_compressed_average(
-            block=compress_block, impl=compress_impl, mesh=mesh)
-    else:
-        if compress == "leafwise":
-            compress_fn = make_compress_fn(compress_block, compress_impl)
-        if mesh is not None and param_specs is not None:
-            average_fn = make_average_shard_map(mesh, param_specs)
+    if compress is not None:
+        if codec is not None:
+            raise ValueError("pass codec= or the legacy compress=, not both")
+        if compress not in ("leafwise", "fused"):
+            raise ValueError(f"unknown compress {compress!r}")
+        codec = compress
+    codec = api.get_codec(codec, block=compress_block, impl=compress_impl)
+    aggregator = api.get_aggregator(aggregator)
+    aggregate_fn = aggregator.make_aggregate_fn(
+        codec, mesh=mesh, param_specs=param_specs)
 
     fused = engine_mod.make_fused_round(
         loss_fn, _get_opt(optimizer), ccfg, spmd_axis_name="pod",
-        average_fn=average_fn, compress_fn=compress_fn, donate=False)
+        aggregate_fn=aggregate_fn, donate=False)
 
-    def round_fn(stacked_params, opt_state, batches, global_epoch0):
-        # the engine's vmap consumes the pod axis; in-model "dp" hints must
-        # then resolve to data only (same contract as the colearn step)
-        with batch_axes(("data",)):
-            return fused(stacked_params, opt_state, batches, global_epoch0)
+    # the engine's vmap consumes the pod axis; in-model "dp" hints must
+    # then resolve to data only (same contract as the colearn step)
+    if aggregator.uses_weights:
+        def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                     agg_weights):
+            with batch_axes(("data",)):
+                return fused(stacked_params, opt_state, batches,
+                             global_epoch0, agg_weights)
+    else:
+        def round_fn(stacked_params, opt_state, batches, global_epoch0):
+            with batch_axes(("data",)):
+                return fused(stacked_params, opt_state, batches,
+                             global_epoch0)
     return round_fn
 
 

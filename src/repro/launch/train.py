@@ -8,6 +8,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --participants 5 --rounds 6 --t0 2 --steps-per-epoch 8
   ... --vanilla     # centralized baseline (same total data, K=1)
+
+Round strategy (see repro.core.api): --codec picks the wire format of the
+uploads (exact f32 | leafwise int8 | fused flat-buffer), --aggregator picks
+who averages what (full Eq. 2 | FedAvg-style partial participation with
+--partial-m sampled uploads per round | ring gossip), --engine picks the
+round executor. --compress remains the legacy spelling of --codec.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import numpy as np
 from repro.checkpoint.io import save_round_state
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
+from repro.core import api
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -69,22 +76,39 @@ def main(argv=None):
                     help="truncate each epoch to this many batches (0=full)")
     ap.add_argument("--compress", default="none",
                     choices=["none", "int8", "fused"],
-                    help="Eq. 2 upload emulation: int8 = leafwise "
-                         "quantize-roundtrip; fused = flat-buffer wire "
-                         "codec (one quant->avg->dequant kernel pass)")
+                    help="legacy alias for --codec: int8 = leafwise, "
+                         "fused = flat-buffer")
+    ap.add_argument("--codec", default="",
+                    choices=["", "exact", "leafwise", "fused"],
+                    help="wire codec for uploads: exact f32 | leafwise "
+                         "int8 quantize-roundtrip | fused flat-buffer "
+                         "(one quant->avg->dequant kernel pass)")
+    ap.add_argument("--aggregator", default="full",
+                    choices=["full", "partial", "ring"],
+                    help="aggregation strategy: full = paper Eq. 2; "
+                         "partial = FedAvg-style sampled uploads "
+                         "(--partial-m per round); ring = one neighbor-"
+                         "exchange gossip step over a fixed ring")
+    ap.add_argument("--partial-m", type=int, default=2,
+                    help="participants sampled per round (partial only)")
     ap.add_argument("--engine", default="fused", choices=["fused", "python"],
                     help="round engine: fused = one executable per round "
                          "(repro.core.engine); python = reference loop")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.codec and args.compress != "none":
+        ap.error("pass --codec or the legacy --compress, not both")
+    codec = args.codec or {"int8": "leafwise", "fused": "fused",
+                           "none": "exact"}[args.compress]
 
     cfg = get_smoke_config(args.arch)
     K = args.participants
+    # record the RESOLVED codec so checkpointed configs describe the run
     ccfg = CoLearnConfig(
         n_participants=K, T0=args.t0, eta0=args.eta0, epsilon=args.epsilon,
         schedule=args.schedule, epochs_rule=args.epochs_rule,
-        max_rounds=args.rounds, compress=args.compress)
+        max_rounds=args.rounds, compress=codec)
 
     data = build_data(cfg, K, args.batch_size, args.seq_len,
                       args.n_examples, args.seed)
@@ -94,15 +118,18 @@ def main(argv=None):
         x, y = batch
         return tr.loss_fn(params, cfg, {"tokens": x, "labels": y})
 
+    aggregator = (api.PartialParticipation(m=args.partial_m, seed=args.seed)
+                  if args.aggregator == "partial"
+                  else api.get_aggregator(args.aggregator))
     learner = CoLearner(ccfg, loss_fn, optimizer_name=args.optimizer,
-                        compress={"int8": "leafwise", "fused": "fused",
-                                  "none": None}[args.compress],
-                        engine=args.engine)
+                        codec=codec, aggregator=aggregator,
+                        round_engine=args.engine)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)
     print(f"co-learning {cfg.name}: K={K} params="
           f"{tr.count_params(params):,} rounds={args.rounds} T0={args.t0} "
-          f"{args.schedule}+{args.epochs_rule} engine={args.engine}",
+          f"{args.schedule}+{args.epochs_rule} engine={args.engine} "
+          f"codec={learner.codec.name} aggregator={learner.aggregator.name}",
           flush=True)
 
     for i in range(args.rounds):

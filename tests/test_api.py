@@ -1,0 +1,384 @@
+"""Round-strategy API (repro.core.api): protocol conformance, flag/object
+parity, the new aggregation scenarios, and the comm-byte accounting fix."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import api, averaging
+from repro.core.colearn import CoLearner
+from repro.core.compression import compressed_bytes, flat_compressed_bytes
+
+
+def tiny_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {"loss": loss}
+
+
+def tiny_params(key=0, d=4):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, 1)), "b": jnp.zeros((1,))}
+
+
+def tiny_batches(K, n_batches, B, d=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (K, n_batches, B, d))
+    w_true = jnp.arange(1.0, d + 1)[:, None]
+    return (x, x @ w_true)
+
+
+def mixed_tree(K=3, seed=7):
+    """Stacked tree spanning block-aligned, odd-size, sub-block leaves."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"w": jax.random.normal(ks[0], (K, 2, 256)),
+            "odd": jax.random.normal(ks[1], (K, 300)),
+            "tiny": jax.random.normal(ks[2], (K, 5)),
+            "vec": jax.random.normal(ks[3], (K,))}
+
+
+def max_abs_diff(a, b):
+    return max(float(jnp.abs(jnp.asarray(x, jnp.float32)
+                             - jnp.asarray(y, jnp.float32)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# WireCodec conformance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["exact", "leafwise", "fused"])
+def test_codec_conformance(name):
+    codec = api.get_codec(name)
+    stacked = mixed_tree()
+    rt = codec.roundtrip(stacked)
+    # structure preserved
+    assert jax.tree.structure(rt) == jax.tree.structure(stacked)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(stacked)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        # int8 wire error bound (exact codec: identity)
+        amax = float(jnp.abs(b).max())
+        bound = 0.0 if name == "exact" else amax / 127.0 + 1e-6
+        assert float(jnp.abs(a - b).max()) <= bound
+    # encode/decode compose to the same wire emulation
+    assert max_abs_diff(codec.decode(codec.encode(stacked)), rt) == 0.0
+    if name == "leafwise":
+        # pinned bitwise to the PR-2 reference path (same bypass threshold,
+        # same kernels) so the two implementations can never drift
+        from repro.core.compression import quantize_roundtrip
+        assert max_abs_diff(rt, quantize_roundtrip(stacked)) == 0.0
+    # exact per-participant byte accounting
+    wb = codec.wire_bytes(stacked)
+    assert isinstance(wb, int) and wb > 0
+    one = jax.tree.map(lambda t: t[0], stacked)
+    raw = sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(one))
+    if name == "exact":
+        assert wb == raw
+    elif name == "leafwise":
+        assert wb == compressed_bytes(one)
+    else:
+        assert wb == flat_compressed_bytes(stacked)
+        n = sum(t.size for t in jax.tree.leaves(one))
+        assert wb >= n          # every element on the int8 + scale format
+
+
+def test_codec_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        api.get_codec("nope")
+    with pytest.raises(KeyError):
+        api.get_aggregator("nope")
+    assert api.get_engine("fused", chunk=7).chunk == 7
+    # instances pass through untouched
+    c = api.LeafwiseInt8(block=128)
+    assert api.get_codec(c) is c
+    # legacy registry aliases (CoLearnConfig.compress / old CLI spellings)
+    assert isinstance(api.get_codec("none"), api.ExactF32)
+    assert isinstance(api.get_codec("int8"), api.LeafwiseInt8)
+    assert isinstance(api.get_codec("flat"), api.FlatFusedInt8)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator conformance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["full", "partial", "ring"])
+def test_aggregator_mixing_matrix_row_stochastic(name):
+    agg = api.get_aggregator(name)
+    for i in range(3):
+        W = agg.mixing_matrix(i, 4)
+        assert W.shape == (4, 4) and W.dtype == np.float32
+        assert (W >= 0).all()
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, rtol=1e-6)
+
+
+def test_full_average_matches_average_pjit():
+    stacked = mixed_tree()
+    fn = api.FullAverage().make_aggregate_fn(api.ExactF32())
+    assert max_abs_diff(fn(stacked, None),
+                        averaging.average_pjit(stacked)) == 0.0
+
+
+def test_partial_participation_samples_m_and_weights():
+    agg = api.PartialParticipation(m=2, weights=(1.0, 2.0, 3.0, 4.0), seed=3)
+    W = agg.mixing_matrix(0, 4)
+    sel = np.nonzero(W[0])[0]
+    assert len(sel) == 2                      # exactly m active columns
+    np.testing.assert_allclose(W, np.broadcast_to(W[0], (4, 4)))
+    base = np.array([1.0, 2.0, 3.0, 4.0])
+    np.testing.assert_allclose(W[0, sel], base[sel] / base[sel].sum(),
+                               rtol=1e-6)
+    # deterministic in (seed, round); varies across rounds
+    np.testing.assert_array_equal(W, agg.mixing_matrix(0, 4))
+    assert any(not np.array_equal(W, agg.mixing_matrix(i, 4))
+               for i in range(1, 8))
+    # the aggregate ignores unsampled participants entirely
+    stacked = mixed_tree(K=4)
+    out = api.PartialParticipation(m=2, seed=3).make_aggregate_fn(
+        api.ExactF32())(stacked, jnp.asarray(W))
+    unsampled = [k for k in range(4) if k not in sel]
+    perturbed = jax.tree.map(lambda t: t.at[unsampled[0]].add(100.0), stacked)
+    out2 = api.PartialParticipation(m=2, seed=3).make_aggregate_fn(
+        api.ExactF32())(perturbed, jnp.asarray(W))
+    assert max_abs_diff(out, out2) == 0.0
+    with pytest.raises(ValueError):
+        api.PartialParticipation(m=9).mixing_matrix(0, 4)
+
+
+def test_partial_participation_never_samples_zero_weight():
+    """Regression: a sample landing only on zero-weight participants used
+    to normalize 0/0 into an all-NaN mixing matrix."""
+    agg = api.PartialParticipation(m=1, weights=(0.0, 1.0, 1.0), seed=0)
+    for i in range(16):
+        W = agg.mixing_matrix(i, 3)
+        assert np.isfinite(W).all()
+        assert W[0, 0] == 0.0                 # weightless participant 0
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, rtol=1e-6)
+    with pytest.raises(ValueError, match="positive weight"):
+        api.PartialParticipation(m=2, weights=(0.0, 0.0, 1.0)).mixing_matrix(
+            0, 3)
+    with pytest.raises(ValueError, match="finite"):
+        api.PartialParticipation(m=1, weights=(-1.0, 1.0, 1.0)).mixing_matrix(
+            0, 3)
+
+
+def test_ring_gossip_neighbor_average():
+    K = 4
+    stacked = mixed_tree(K=K)
+    agg = api.RingGossip()
+    W = agg.mixing_matrix(0, K)
+    out = agg.make_aggregate_fn(api.ExactF32())(stacked, jnp.asarray(W))
+    for got, t in zip(jax.tree.leaves(out), jax.tree.leaves(stacked)):
+        want = 0.5 * (t + jnp.roll(t, 1, axis=0))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_ring_gossip_quantizes_only_the_received_leg():
+    """A participant's own model never crosses the wire in gossip: under a
+    lossy codec, only the neighbor's (received) half may carry int8 error —
+    the local half must stay bit-exact."""
+    K = 3
+    codec = api.LeafwiseInt8()
+    stacked = mixed_tree(K=K)
+    agg = api.RingGossip()
+    out = agg.make_aggregate_fn(codec)(
+        stacked, jnp.asarray(agg.mixing_matrix(0, K)))
+    rt = codec.roundtrip(stacked)
+    for got, t, q in zip(jax.tree.leaves(out), jax.tree.leaves(stacked),
+                         jax.tree.leaves(rt)):
+        want = 0.5 * t + 0.5 * jnp.roll(q, 1, axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    # and the codec does perturb the received leg (the test has teeth)
+    assert max_abs_diff(rt, stacked) > 0
+
+
+# ---------------------------------------------------------------------------
+# from_flags <-> explicit objects parity (the PR-2 surface, bit-for-bit)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["python", "fused"])
+@pytest.mark.parametrize("compress", [None, "leafwise", "fused"])
+def test_from_flags_matches_explicit_objects(engine, compress):
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=0.5,
+                        max_rounds=3)
+    b = tiny_batches(3, 2, 8, d=8)
+    codec = {None: api.ExactF32(), "leafwise": api.LeafwiseInt8(),
+             "fused": api.FlatFusedInt8()}[compress]
+    eng = (api.FusedEngine() if engine == "fused" else api.PythonEngine())
+    out = {}
+    for label, learner in (
+            ("flags", CoLearner.from_flags(cfg, tiny_loss, engine=engine,
+                                           compress=compress)),
+            ("objects", CoLearner(cfg, tiny_loss, codec=codec,
+                                  aggregator=api.FullAverage(),
+                                  round_engine=eng))):
+        state = learner.init(tiny_params(d=8))
+        for _ in range(3):
+            state = learner.run_round(state, lambda i, j: b)
+        out[label] = (learner.shared_model(state), state)
+    assert max_abs_diff(out["flags"][0], out["objects"][0]) <= 1e-6
+    for lf, lo in zip(out["flags"][1]["log"], out["objects"][1]["log"]):
+        assert (lf.T, lf.comm_bytes) == (lo.T, lo.comm_bytes)
+        np.testing.assert_allclose(lf.local_losses, lo.local_losses,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# New scenarios: convergence smoke + engine equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("aggregator", [api.PartialParticipation(m=2),
+                                        api.RingGossip()])
+def test_new_aggregators_converge_on_synthetic_task(aggregator):
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=0.5,
+                        max_rounds=5)
+    b = tiny_batches(3, 4, 8)
+    learner = CoLearner(cfg, tiny_loss, aggregator=aggregator)
+    state = learner.init(tiny_params())
+    for _ in range(5):
+        state = learner.run_round(state, lambda i, j: b)
+    losses = [np.mean(l.local_losses) for l in state["log"]]
+    assert losses[-1] < 0.5 * losses[0], losses
+
+
+@pytest.mark.parametrize("aggregator", [api.PartialParticipation(m=2),
+                                        api.RingGossip()])
+def test_new_aggregators_engine_equivalence(aggregator):
+    """Python and fused engines see the identical (seed, round)-deterministic
+    mixing matrix, so trajectories must agree like they do for Eq. 2."""
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=0.5,
+                        max_rounds=3)
+    b = tiny_batches(3, 2, 8)
+    out = {}
+    for eng in ("python", "fused"):
+        learner = CoLearner(cfg, tiny_loss, aggregator=aggregator,
+                            round_engine=eng)
+        state = learner.init(tiny_params())
+        for _ in range(3):
+            state = learner.run_round(state, lambda i, j: b)
+        out[eng] = (learner.shared_model(state), state)
+    assert max_abs_diff(out["python"][0], out["fused"][0]) <= 1e-5
+    assert ([l.comm_bytes for l in out["python"][1]["log"]]
+            == [l.comm_bytes for l in out["fused"][1]["log"]])
+
+
+def test_mesh_specializations_reject_multiple_rows_per_pod():
+    """The weighted pod paths permute/scale whole local blocks, so K must
+    equal the pod count — a mismatch must fail loudly, not mix wrong rows."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("pod",))
+    stacked = mixed_tree(K=3)
+    specs = jax.tree.map(lambda t: P("pod"), stacked)
+    for agg in (api.PartialParticipation(m=2), api.RingGossip()):
+        fn = agg.make_aggregate_fn(api.ExactF32(), mesh=mesh,
+                                   param_specs=specs)
+        with pytest.raises(ValueError, match="one participant row per pod"):
+            fn(stacked, jnp.asarray(agg.mixing_matrix(0, 3)))
+
+
+def test_weighted_aggregator_through_chunked_fused_path():
+    """T_i > chunk exercises the chained-chunk finalize with a mixing
+    matrix; must match the python engine."""
+    cfg = CoLearnConfig(n_participants=3, T0=5, eta0=0.05, epsilon=0.0,
+                        schedule="clr", epochs_rule="fle", max_rounds=2)
+    b = tiny_batches(3, 2, 8)
+    out = {}
+    for label, eng in (("python", api.PythonEngine()),
+                       ("chunked", api.FusedEngine(chunk=2))):
+        learner = CoLearner(cfg, tiny_loss, aggregator=api.RingGossip(),
+                            round_engine=eng)
+        state = learner.init(tiny_params())
+        for _ in range(2):
+            state = learner.run_round(state, lambda i, j: b)
+        out[label] = learner.shared_model(state)
+    assert max_abs_diff(out["python"], out["chunked"]) <= 1e-5
+
+
+def test_flat_codec_partial_participation_fused_engine_acceptance():
+    """The ISSUE 3 acceptance bar: flat-buffer codec x partial participation
+    x fused engine runs a 3-round sim with correct per-round comm bytes."""
+    K, m = 3, 2
+    cfg = CoLearnConfig(n_participants=K, T0=1, eta0=0.05, epsilon=0.5,
+                        max_rounds=3)
+    d = 256                 # >= one quantization block per participant
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (K, 3, 8, d))
+    w_true = jax.random.normal(jax.random.PRNGKey(1), (d, 1)) / np.sqrt(d)
+    b = (x, x @ w_true)
+    codec = api.FlatFusedInt8()
+    learner = CoLearner(cfg, tiny_loss, codec=codec,
+                        aggregator=api.PartialParticipation(m=m),
+                        round_engine=api.FusedEngine())
+    state = learner.init(tiny_params(d=256))
+    for _ in range(3):
+        state = learner.run_round(state, lambda i, j: b)
+    assert len(state["log"]) == 3
+    losses = [np.mean(l.local_losses) for l in state["log"]]
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]
+    wire = codec.wire_bytes(state["params"])
+    down = learner.param_bytes(state)
+    for log in state["log"]:
+        assert log.comm_bytes == math.ceil(m * wire / K) + down
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: comm accounting + restart semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["exact", "leafwise", "fused"])
+def test_round_log_comm_bytes_priced_by_codec(name):
+    """Regression (ISSUE 3): compressed runs must report the compressed
+    upload + f32 download, not 2 x raw param bytes."""
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.001, max_rounds=1)
+    # d >= one quantization block so the leafwise codec engages; the flat
+    # codec needs a larger tree to amortize its whole-tile padding (which
+    # the accounting must include — that's the point of the regression)
+    d = {"exact": 4, "leafwise": 256, "fused": 16384}[name]
+    b = tiny_batches(3, 2, 8, d=d)
+    learner = CoLearner(cfg, tiny_loss, codec=name)
+    state = learner.init(tiny_params(d=d))
+    state = learner.run_round(state, lambda i, j: b)
+    raw = learner.param_bytes(state)
+    wire = learner.codec.wire_bytes(state["params"])
+    assert state["log"][0].comm_bytes == wire + raw
+    if name == "exact":
+        assert wire + raw == 2 * raw         # the paper-faithful accounting
+    else:
+        assert wire + raw < 2 * raw          # int8 upload, f32 download
+        # upload leg compressed at least ~3x (int8 + scales vs f32)
+        assert wire < 0.35 * raw
+
+
+def test_comm_bytes_cache_reset_on_reinit():
+    """Reusing one learner across init() calls with different param shapes
+    must re-price the comm accounting, not serve the stale cached value."""
+    cfg = CoLearnConfig(n_participants=2, T0=1, eta0=0.01, max_rounds=1)
+    learner = CoLearner(cfg, tiny_loss)
+    for d in (4, 16):
+        b = tiny_batches(2, 1, 4, d=d)
+        state = learner.init(tiny_params(d=d))
+        state = learner.run_round(state, lambda i, j: b)
+        assert state["log"][0].comm_bytes == 2 * learner.param_bytes(state)
+
+
+def test_restart_participant_resets_params_and_opt_state():
+    """Regression (ISSUE 3): restart must also clear the participant's
+    optimizer state (stale momentum would keep pushing the restarted
+    replica along its pre-failure trajectory)."""
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.05, max_rounds=2)
+    learner = CoLearner(cfg, tiny_loss, optimizer_name="momentum")
+    state = learner.init(tiny_params())
+    # advance one local epoch so momentum is nonzero, then fail replica 1
+    b = tiny_batches(3, 2, 8)
+    state["params"], state["opt"], _ = learner._jit_epoch(
+        state["params"], state["opt"], b, 0.05)
+    assert max(float(jnp.abs(m).max())
+               for m in jax.tree.leaves(state["opt"])) > 0
+    state["params"] = jax.tree.map(lambda t: t.at[1].add(100.0),
+                                   state["params"])
+    state = learner.restart_participant(state, 1)
+    shared = learner.shared_model(state)
+    for t, s in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(shared)):
+        np.testing.assert_allclose(t[1], s)
+    for m in jax.tree.leaves(state["opt"]):
+        np.testing.assert_array_equal(m[1], jnp.zeros_like(m[1]))
+        assert float(jnp.abs(m[0]).max()) > 0     # others keep their state

@@ -39,7 +39,7 @@ def tiny_batches(K, n_batches, B, d=4, seed=0):
 def run_both(cfg, loss_fn, params, batches_fn, rounds, **kw):
     out = {}
     for eng in ("python", "fused"):
-        learner = CoLearner(cfg, loss_fn, engine=eng, **kw)
+        learner = CoLearner.from_flags(cfg, loss_fn, engine=eng, **kw)
         state = learner.init(params)
         for _ in range(rounds):
             state = learner.run_round(state, batches_fn)
@@ -188,7 +188,7 @@ def test_clr_restart_traced_in_scan():
     cfg = CoLearnConfig(n_participants=2, T0=4, eta0=0.02, epsilon=0.0,
                         schedule="clr", epochs_rule="fle", max_rounds=3)
     b = tiny_batches(2, 2, 8)
-    learner = CoLearner(cfg, tiny_loss, engine="fused")
+    learner = CoLearner.from_flags(cfg, tiny_loss, engine="fused")
     state = learner.init(tiny_params())
     for _ in range(3):
         state = learner.run_round(state, lambda i, j: b)
@@ -216,7 +216,8 @@ def test_fused_chunked_matches_python_and_single_shot():
     ref = None
     for eng, chunk in (("python", 32), ("fused", 32), ("fused", 2),
                        ("fused", 5)):
-        learner = CoLearner(cfg, tiny_loss, engine=eng, fused_chunk=chunk)
+        learner = CoLearner.from_flags(cfg, tiny_loss, engine=eng,
+                                        fused_chunk=chunk)
         state = learner.init(tiny_params())
         for _ in range(2):
             state = learner.run_round(state, lambda i, j: b)
@@ -240,7 +241,8 @@ def test_fused_chunk_executable_reused_across_T_doubling():
         return jnp.zeros(()), {}
     cfg = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
                         epochs_rule="ile", max_rounds=4)
-    learner = CoLearner(cfg, zero_loss, engine="fused", fused_chunk=2)
+    learner = CoLearner.from_flags(cfg, zero_loss, engine="fused",
+                                    fused_chunk=2)
     state = learner.init(tiny_params())
     b = tiny_batches(2, 1, 2)
     for _ in range(4):
@@ -255,7 +257,7 @@ def test_fused_single_round_recompiles_only_on_T_change():
     repeated rounds at the same T reuse the cache."""
     cfg = CoLearnConfig(n_participants=2, T0=2, eta0=0.01, epsilon=0.0,
                         max_rounds=4)
-    learner = CoLearner(cfg, tiny_loss, engine="fused")
+    learner = CoLearner.from_flags(cfg, tiny_loss, engine="fused")
     state = learner.init(tiny_params())
     b = tiny_batches(2, 2, 4)
     for _ in range(3):

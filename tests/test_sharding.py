@@ -90,12 +90,13 @@ out["fused_round_slots_equal"] = max(
     float(jnp.abs(t[0] - t[1]).max())
     for t in jax.tree.leaves(averaged)) < 1e-4
 
-# 4b) flat-buffer compressed average on the pod mesh: each pod int8-
-#     roundtrips its own row, ONE psum over 'pod' aggregates the payloads;
-#     result within the int8 error bound of the exact mean, slots equal
-from repro.core import engine as engine_mod
-flat_avg = engine_mod.make_fused_compressed_average(
-    impl="ref", mesh=mesh, axis="pod")
+# 4b) FullAverage x FlatFusedInt8 on the pod mesh (via the round-strategy
+#     API): each pod int8-roundtrips its own row, ONE psum over 'pod'
+#     aggregates the payloads; result within the int8 error bound of the
+#     exact mean, slots equal
+from repro.core import api
+flat_avg = api.FullAverage().make_aggregate_fn(
+    api.FlatFusedInt8(impl="ref"), mesh=mesh)
 with compat.use_mesh(mesh):
     favg = jax.jit(flat_avg)(new_stacked)
 errs, bounds = [], []
@@ -107,6 +108,38 @@ for f, e, s in zip(jax.tree.leaves(favg), jax.tree.leaves(avg_p),
 out["flat_avg_within_bound"] = all(e <= b for e, b in zip(errs, bounds))
 out["flat_avg_slots_equal"] = max(
     float(jnp.abs(t[0] - t[1]).max()) for t in jax.tree.leaves(favg)) == 0.0
+
+# 4c) FullAverage x LeafwiseInt8 on the pod mesh: per-leaf reference
+#     roundtrip in front of the shard_map psum (the third codec of the
+#     pod-path acceptance matrix; exact f32 is covered by 3/4 above)
+leaf_avg = api.FullAverage().make_aggregate_fn(
+    api.LeafwiseInt8(impl="ref"), mesh=mesh,
+    param_specs=sp.param_specs(spshapes, cfg, mesh, participant=True))
+with compat.use_mesh(mesh):
+    lavg = jax.jit(leaf_avg)(new_stacked)
+errs = [float(jnp.abs(f.astype(jnp.float32) - e.astype(jnp.float32)).max())
+        for f, e in zip(jax.tree.leaves(lavg), jax.tree.leaves(avg_p))]
+out["leafwise_avg_within_bound"] = all(
+    e <= b for e, b in zip(errs, bounds))
+out["leafwise_avg_slots_equal"] = max(
+    float(jnp.abs(t[0] - t[1]).max()) for t in jax.tree.leaves(lavg)) == 0.0
+
+# 4d) weighted aggregators on the pod mesh: the psum (partial) and
+#     collective-permute (ring) specializations must match the host-side
+#     dense-mixing reference — without the all-gather the fallback pays
+pspecs_part = sp.param_specs(spshapes, cfg, mesh, participant=True)
+for nm, agg in (("partial", api.PartialParticipation(m=2, seed=0)),
+                ("ring", api.RingGossip())):
+    W = jnp.asarray(agg.mixing_matrix(0, K))
+    mesh_fn = agg.make_aggregate_fn(api.ExactF32(), mesh=mesh,
+                                    param_specs=pspecs_part)
+    host_fn = agg.make_aggregate_fn(api.ExactF32())
+    with compat.use_mesh(mesh):
+        got = jax.jit(mesh_fn)(new_stacked, W)
+    want = host_fn(new_stacked, W)
+    out[f"{nm}_mesh_matches_host"] = max(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want))) < 1e-5
 
 # 5) decode step lowers on the mesh
 cache = tr.init_cache(cfg, 8, 16, jnp.float32)
@@ -153,6 +186,16 @@ def test_average_pjit_matches_shard_map(mesh_results):
 def test_flat_compressed_average_on_pod_mesh(mesh_results):
     assert mesh_results["flat_avg_within_bound"]
     assert mesh_results["flat_avg_slots_equal"]
+
+
+def test_leafwise_compressed_average_on_pod_mesh(mesh_results):
+    assert mesh_results["leafwise_avg_within_bound"]
+    assert mesh_results["leafwise_avg_slots_equal"]
+
+
+def test_weighted_aggregators_on_pod_mesh(mesh_results):
+    assert mesh_results["partial_mesh_matches_host"]
+    assert mesh_results["ring_mesh_matches_host"]
 
 
 def test_fused_round_on_pod_mesh(mesh_results):

@@ -32,7 +32,7 @@ def run_colearn(rounds=3, compress=None, **kw):
     cfg, data, loss_fn, params = setup(**kw)
     ccfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.05, epsilon=1e-6,
                          max_rounds=rounds)
-    learner = CoLearner(ccfg, loss_fn, compress_fn=compress)
+    learner = CoLearner.from_flags(ccfg, loss_fn, compress_fn=compress)
     state = learner.init(params)
     for _ in range(rounds):
         state = learner.run_round(
@@ -72,6 +72,13 @@ def test_train_driver_cli_runs():
                "--batch-size", "4", "--seq-len", "16",
                "--steps-per-epoch", "2"])
     assert rc == 0
+
+
+def test_train_driver_cli_rejects_codec_plus_compress():
+    from repro.launch.train import main
+    with pytest.raises(SystemExit) as e:
+        main(["--codec", "exact", "--compress", "fused"])
+    assert e.value.code == 2
 
 
 def test_serve_driver_cli_runs():
