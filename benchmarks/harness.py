@@ -38,15 +38,19 @@ def accuracy(apply_fn, params, x, y, bs=256):
 def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 eta0=0.02, epsilon=0.02, schedule="clr", epochs_rule="ile",
                 batch_size=32, seed=0, steps_cap=0, engine="python",
-                compress=None, codec=None, aggregator=None):
+                compress=None, codec=None, aggregator=None,
+                lr_schedule=None, sync_policy=None):
     """Returns dict with per-round accuracy, controller history, comm stats.
 
     engine: "python" (reference per-epoch loop) or "fused" (one compiled
     executable per round — see repro.core.engine); identical results.
-    codec / aggregator: round-strategy objects or registry names
-    (repro.core.api) — e.g. codec="leafwise" | "fused",
-    aggregator=PartialParticipation(m=2) | "ring". compress is the legacy
-    alias for codec (None | "leafwise" | "fused").
+    codec / aggregator / lr_schedule / sync_policy: round-strategy objects
+    or registry names (repro.core.api) — e.g. codec="leafwise" | "fused",
+    aggregator=PartialParticipation(m=2) | "ring",
+    sync_policy=DivergenceTrigger(delta=0.1). lr_schedule/sync_policy left
+    as None resolve the schedule/epochs_rule strings through the same
+    registries. compress is the legacy alias for codec (None | "leafwise"
+    | "fused").
     """
     if compress is not None:
         if codec is not None:
@@ -59,7 +63,8 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                          schedule=schedule, epochs_rule=epochs_rule,
                          max_rounds=rounds)
     learner = CoLearner(ccfg, cls_loss(apply_fn), codec=codec,
-                        aggregator=aggregator, round_engine=engine)
+                        aggregator=aggregator, round_engine=engine,
+                        schedule=lr_schedule, sync_policy=sync_policy)
     params = init_fn(jax.random.PRNGKey(seed))
     state = learner.init(params)
     accs, Ts, times = [], [], []
@@ -76,8 +81,13 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
         times.append(time.time() - t0)
         Ts.append(state["log"][-1].T)
         accs.append(accuracy(apply_fn, learner.shared_model(state), *test))
+    # per-round wire cost of a SYNCED round (round 0 may be quiet and bill
+    # 0 under a divergence-gated policy); totals cover the whole run
+    per_round = next((l.comm_bytes for l in state["log"] if l.synced), 0)
     return {"acc": accs, "T": Ts, "round_s": times,
-            "comm_bytes": state["log"][0].comm_bytes,
+            "comm_bytes": per_round,
+            "total_comm_bytes": sum(l.comm_bytes for l in state["log"]),
+            "synced_rounds": sum(1 for l in state["log"] if l.synced),
             "history": state["ctrl"].history,
             "final_params": learner.shared_model(state), "state": state,
             "learner": learner}

@@ -20,9 +20,17 @@ benchmarks/BENCH_round_latency.json):
 Per-round times are min-of-N (robust against shared-machine noise); the
 first round of each engine (compile) is reported separately.
 
+``--check-retrace`` (the CI smoke, no timings) asserts the ISSUE 4
+hot-path invariant instead: the schedule rides into the fused executables
+as traced data (``repro.core.engine``), so an ILE doubling of T_i, a
+built-in schedule swap (CLR -> ELR -> cosine -> warmup), and the per-round
+warmup/budget re-parameterizations all reuse ONE compiled program per
+chunk shape — the compile count must stay flat.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.round_latency \
-      [--rounds 5] [--out benchmarks/BENCH_round_latency.json]
+      [--rounds 5] [--out benchmarks/BENCH_round_latency.json] \
+      [--check-retrace]
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
+from repro.core import api
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -139,11 +148,71 @@ def run(rounds=5, quiet=False):
     return rec
 
 
+def check_retrace():
+    """CI smoke: fused-engine compile counts stay flat across an ILE
+    doubling of T_i AND built-in schedule swaps/re-parameterizations."""
+    def zero_loss(params, batch):
+        return jnp.zeros(()), {}
+
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (4, 1)), "b": jnp.zeros((1,))}
+    x = jax.random.normal(k, (2, 1, 2, 4))
+    batches = (x, x @ jnp.ones((4, 1)))
+
+    # 1) chunked path: zero gradients => rel=0 => Eq. 4 doubles T every
+    #    round (2,2,4,8 with chunk=2 => every chunk is the same C=2 shape);
+    #    then swap the schedule mid-run, three times
+    cfg = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                        epochs_rule="ile", max_rounds=8)
+    learner = CoLearner(cfg, zero_loss,
+                        round_engine=api.FusedEngine(chunk=2))
+    state = learner.init(params)
+    for _ in range(4):
+        state = learner.run_round(state, lambda i, j: batches)
+    assert [l.T for l in state["log"]] == [2, 2, 4, 8], \
+        [l.T for l in state["log"]]
+    for spec in ("elr", "cosine",
+                 api.WarmupCLR(eta0=0.02, warmup_rounds=16)):
+        learner.set_schedule(spec)
+        state = learner.run_round(state, lambda i, j: batches)
+    n_epochs = learner._fused_epochs._cache_size()
+    n_final = learner._fused_finalize._cache_size()
+    assert n_epochs == 1, f"chunk executable retraced: {n_epochs} compiles"
+    assert n_final == 1, f"finalize retraced: {n_final} compiles"
+
+    # 2) single-shot path at fixed T: schedule swaps + a warmup ramping
+    #    eta^i per round must reuse the one round executable
+    cfg2 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.0, max_rounds=8,
+                         epochs_rule="fle")
+    learner2 = CoLearner(cfg2, zero_loss, round_engine="fused",
+                         schedule=api.WarmupCLR(eta0=0.04, warmup_rounds=4))
+    state2 = learner2.init(params)
+    for _ in range(3):
+        state2 = learner2.run_round(state2, lambda i, j: batches)
+    learner2.set_schedule("elr")
+    state2 = learner2.run_round(state2, lambda i, j: batches)
+    n_round = learner2._fused_round._cache_size()
+    assert n_round == 1, f"round executable retraced: {n_round} compiles"
+    # the warmup actually ramped (the traced eta^i changed per round)
+    lrs = [l.lr_first for l in state2["log"][:3]]
+    assert lrs[0] < lrs[1] < lrs[2], lrs
+    print("check-retrace OK: chunk/finalize/round executables compiled "
+          "once across an ILE doubling, 4 schedule swaps, and a warmup "
+          "ramp")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--out", default="benchmarks/BENCH_round_latency.json")
+    ap.add_argument("--check-retrace", action="store_true",
+                    help="assert fused compile counts stay flat across an "
+                         "ILE doubling and schedule swaps (CI smoke, no "
+                         "timings)")
     args = ap.parse_args(argv)
+    if args.check_retrace:
+        return check_retrace()
     rec = run(rounds=args.rounds)
     if args.out:
         with open(args.out, "w") as f:

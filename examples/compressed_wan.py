@@ -8,9 +8,13 @@ are exercised under full Eq. 2 averaging — LeafwiseInt8 (the per-leaf
 reference roundtrip) and FlatFusedInt8 (one fused quantize->average->
 dequantize pass over one contiguous buffer, exact byte accounting) — and
 the per-round wire bytes now come straight from ``RoundLog.comm_bytes``
-(codec-priced upload + f32 download). A final run swaps the aggregator for
-FedAvg-style partial participation: only m=2 of the K=4 data centers
-upload each round, and the comm accounting shrinks accordingly.
+(codec-priced upload + f32 download). A fourth run swaps the aggregator
+for FedAvg-style partial participation: only m=2 of the K=4 data centers
+upload each round, and the comm accounting shrinks accordingly. The final
+run keeps full averaging but gates it behind a Kamp-style
+``DivergenceTrigger`` sync policy: rounds where the local models haven't
+drifted past delta skip the wire entirely and bill ZERO bytes — the
+cheapest upload is the one never sent.
 
 Run:  PYTHONPATH=src python examples/compressed_wan.py
 """
@@ -20,8 +24,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
-from repro.core.api import (ExactF32, FlatFusedInt8, FullAverage,
-                            LeafwiseInt8, PartialParticipation)
+from repro.core.api import (DivergenceTrigger, ExactF32, FlatFusedInt8,
+                            FullAverage, LeafwiseInt8, PartialParticipation)
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -33,18 +37,20 @@ x, y = lm_examples(seed=0, n=400, seq_len=32, vocab=cfg.vocab_size)
 shards = partition_arrays([x, y], K=4, seed=0)
 
 RUNS = (
-    ("exact (paper)", ExactF32(), FullAverage()),
-    ("int8 leafwise", LeafwiseInt8(), FullAverage()),
-    ("int8 flat-buffer", FlatFusedInt8(), FullAverage()),
-    ("flat + partial m=2", FlatFusedInt8(), PartialParticipation(m=2)),
+    ("exact (paper)", ExactF32(), FullAverage(), None),
+    ("int8 leafwise", LeafwiseInt8(), FullAverage(), None),
+    ("int8 flat-buffer", FlatFusedInt8(), FullAverage(), None),
+    ("flat + partial m=2", FlatFusedInt8(), PartialParticipation(m=2), None),
+    ("flat + div-trigger", FlatFusedInt8(), FullAverage(),
+     DivergenceTrigger(delta=0.01)),
 )
 
-for label, codec, aggregator in RUNS:
+for label, codec, aggregator, sync_policy in RUNS:
     data = ParticipantData(shards, batch_size=8)
     learner = CoLearner(
         CoLearnConfig(n_participants=4, T0=1, max_rounds=3, eta0=0.05),
         loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
-        codec=codec, aggregator=aggregator)
+        codec=codec, aggregator=aggregator, sync_policy=sync_policy)
     state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
     for i in range(3):
         state = learner.run_round(
@@ -53,6 +59,11 @@ for label, codec, aggregator in RUNS:
     params = learner.shared_model(state)
     raw = sum(t.size * 4 for t in jax.tree.leaves(params))
     log = state["log"][-1]
+    synced = sum(1 for l in state["log"] if l.synced)
+    total = sum(l.comm_bytes for l in state["log"])
+    # per-round cost of a SYNCED round (quiet rounds bill 0 by design)
+    per_round = next((l.comm_bytes for l in state["log"] if l.synced), 0)
     print(f"{label:20s} final_loss={np.mean(log.local_losses):.4f}"
-          f"  comm/round={log.comm_bytes/2**20:.1f}MiB per participant "
-          f"(f32 full-avg would be {2*raw/2**20:.1f}MiB)")
+          f"  comm/round={per_round/2**20:.1f}MiB per participant, "
+          f"3-round total={total/2**20:.1f}MiB over {synced}/3 synced "
+          f"rounds (f32 full-avg would be {2*raw/2**20:.1f}MiB/round)")

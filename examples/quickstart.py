@@ -5,14 +5,18 @@ they train locally with the cyclical learning rate (Eq. 3), the server
 averages parameters (Eq. 2) and doubles local epochs when the shared model
 stabilizes (Eq. 4).
 
-The round strategy is composed explicitly from the three protocols in
+The round strategy is composed explicitly from the five protocols in
 ``repro.core.api`` — the wire codec (ExactF32: paper-faithful f32 uploads),
-the aggregator (FullAverage: Eq. 2), and the round engine (PythonEngine:
-the reference host loop). Swap any piece independently: e.g.
-``codec=FlatFusedInt8()`` for int8 flat-buffer uploads (see
+the aggregator (FullAverage: Eq. 2), the round engine (PythonEngine: the
+reference host loop), the learning-rate schedule (CLR: Eq. 3, restarting
+at η^i every round), and the sync policy (ILE: Eq. 4, doubling local
+epochs once the shared model stabilizes). Swap any piece independently:
+e.g. ``codec=FlatFusedInt8()`` for int8 flat-buffer uploads (see
 examples/compressed_wan.py), ``aggregator=PartialParticipation(m=2)`` for
-FedAvg-style sampled uploads, or ``round_engine=FusedEngine()`` for the
-one-executable-per-round fast path.
+FedAvg-style sampled uploads, ``round_engine=FusedEngine()`` for the
+one-executable-per-round fast path, ``schedule=WarmupCLR()`` to ramp η^i
+over the first rounds, or ``sync_policy=DivergenceTrigger(delta=...)`` to
+communicate only when the local models have diverged (Kamp et al.).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -22,7 +26,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
-from repro.core.api import ExactF32, FullAverage, PythonEngine
+from repro.core.api import CLR, ILE, ExactF32, FullAverage, PythonEngine
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -35,11 +39,13 @@ data = ParticipantData(partition_arrays([x, y], K=5, seed=0), batch_size=8)
 
 learner = CoLearner(
     CoLearnConfig(n_participants=5, T0=1, eta0=0.05, epsilon=0.05,
-                  schedule="clr", epochs_rule="ile", max_rounds=4),
+                  max_rounds=4),
     loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
     codec=ExactF32(),                   # paper-faithful f32 wire
     aggregator=FullAverage(),           # Eq. 2 over all K participants
     round_engine=PythonEngine(),        # reference per-epoch host loop
+    schedule=CLR(eta0=0.05),            # Eq. 3: restart at eta^i each round
+    sync_policy=ILE(epsilon=0.05),      # Eq. 4: double T_i on stabilization
 )
 state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
 

@@ -63,24 +63,47 @@ def restore_pytree(path: str, like):
 
 
 def save_round_state(path: str, state):
-    """Persist the co-learning server state (params + controller)."""
+    """Persist the co-learning server state (params + sync-policy state).
+
+    ``prev_avg`` — the last *synced* shared model — is persisted too: under
+    a divergence-gated sync policy the participant slots may hold divergent
+    local models after a quiet round, so the reference cannot be recovered
+    from ``params`` alone.
+    """
     save_pytree(path + ".params.npz", state["params"])
+    if state.get("prev_avg") is not None:
+        save_pytree(path + ".prev_avg.npz", state["prev_avg"])
+    ctrl = state["ctrl"]
     meta = {"round": state["round"], "global_epoch": state["global_epoch"],
-            "T": state["ctrl"].T, "epsilon": state["ctrl"].epsilon,
-            "rule": state["ctrl"].rule,
-            "history": list(state["ctrl"].history)}
+            "T": ctrl.T, "history": list(ctrl.history),
+            "skipped": list(getattr(ctrl, "skipped", ())),
+            "has_prev_avg": state.get("prev_avg") is not None}
     with open(path + ".meta.json", "w") as f:
         json.dump(meta, f)
 
 
 def restore_round_state(path: str, state):
-    from repro.core.schedule import EpochController
+    from repro.core.api import SyncState
     state["params"] = restore_pytree(path + ".params.npz", state["params"])
     with open(path + ".meta.json") as f:
         meta = json.load(f)
     state["round"] = meta["round"]
     state["global_epoch"] = meta["global_epoch"]
-    state["ctrl"] = EpochController(
-        meta["T"], meta["epsilon"], meta["rule"],
-        tuple(tuple(h) for h in meta["history"]))
+    # the policy itself lives on the learner; checkpoints carry its state.
+    # Pre-PR-4 checkpoints stored (rel, T) history pairs — pad them to the
+    # (round, rel, T) triples every current consumer unpacks (one update
+    # per round from round 0, so the index is the position).
+    history = tuple(
+        h if len(h) == 3 else (idx, *h)
+        for idx, h in enumerate(tuple(h) for h in meta["history"]))
+    state["ctrl"] = SyncState(meta["T"], history,
+                              tuple(meta.get("skipped", ())))
+    if meta.get("has_prev_avg"):
+        like = jax.tree.map(lambda t: t[0], state["params"])
+        state["prev_avg"] = restore_pytree(path + ".prev_avg.npz", like)
+    else:
+        # pre-PR-4 / pre-first-sync checkpoints carry no reference: reset
+        # it (the target state may be mid-run) to the legacy semantics —
+        # next round's rel is inf and the sync reference is slot 0
+        state["prev_avg"] = None
     return state

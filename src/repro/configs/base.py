@@ -115,7 +115,16 @@ class TrainConfig:
 
 @dataclass(frozen=True)
 class CoLearnConfig:
-    """The paper's Algorithm 1 knobs (Eqs. 3, 4)."""
+    """The paper's Algorithm 1 knobs (Eqs. 3, 4).
+
+    ``schedule``/``epochs_rule`` are the legacy string spellings of the
+    ``api.LRSchedule``/``api.SyncPolicy`` strategy objects — a ``CoLearner``
+    built without explicit ``schedule=``/``sync_policy=`` arguments
+    resolves them through ``api.SCHEDULES``/``api.SYNC_POLICIES``. (The
+    old ``compress`` field is gone: wire codecs are objects/registry names
+    passed to ``CoLearner(codec=...)`` — see ROADMAP.md §Round strategy
+    API migration table.)
+    """
     n_participants: int = 5          # paper: 5 data centers
     T0: int = 5                      # initial local epochs (paper: 5 or 20)
     eta0: float = 0.01               # paper: constant shared eta^i
@@ -124,8 +133,6 @@ class CoLearnConfig:
     schedule: str = "clr"            # clr | elr  (cyclical vs exponential)
     epochs_rule: str = "ile"         # ile | fle  (increasing vs fixed)
     max_rounds: int = 10
-    compress: str = "none"           # wire-codec registry name (api.CODECS:
-                                     # none/exact | int8/leafwise | fused)
 
 
 # --- input shapes assigned to this paper (public pool) ---------------------

@@ -1,12 +1,13 @@
-"""Composable round-strategy API: WireCodec x Aggregator x RoundEngine.
+"""Composable round-strategy API:
+WireCodec x Aggregator x RoundEngine x LRSchedule x SyncPolicy.
 
 The paper's Algorithm 1 is one point in a family of decentralized-averaging
 protocols — FedAvg-style partial participation (McMahan et al., 1602.05629)
 and dynamic/partial model averaging (Kamp et al., 1807.03210) differ from it
-only in *who aggregates what, over which wire, with which engine*. This
-module factors those three axes into small protocols so a new aggregation
-scheme is a new class, not another constructor flag plus an ``if`` in three
-files:
+only in *who aggregates what, over which wire, with which engine, under
+which local-training policy*. This module factors those five axes into
+small protocols so a new aggregation scheme or local-training rule is a new
+class, not another constructor flag plus an ``if`` in three files:
 
 * :class:`WireCodec` — how one participant's stacked parameters travel:
   ``encode``/``decode`` (whose composition is the in-sim wire-roundtrip
@@ -35,11 +36,33 @@ files:
   ``repro.core.engine``, chunked past ``chunk`` staged epochs). Engines
   ``bind(learner)`` into runners holding the compiled artifacts.
 
-``CoLearner(codec=..., aggregator=..., round_engine=...)`` composes the
-three; string registry names ("leafwise", "partial", "fused", ...) resolve
-through :data:`CODECS` / :data:`AGGREGATORS` / :data:`ENGINES`. The legacy
-flag surface lives on in ``CoLearner.from_flags`` (see the migration table
-in ROADMAP.md §Round strategy API).
+* :class:`LRSchedule` — the Eq. 3 family: the per-epoch learning rate as a
+  traced function of (round, epoch_j, T_i, global_epoch, total_budget),
+  plus a per-round *host hook* (``round_params``) producing the scalar
+  parameter pack (η^i, decay, ...) that rides into the round executable as
+  a traced argument. Instances: :class:`CLR` (paper Eq. 3 — per-round
+  exponential restart), :class:`ELR` (the non-cyclical anneal baseline),
+  :class:`WarmupCLR` (η^i ramped over the first rounds — the host hook in
+  action: the ramp never recompiles), :class:`CosineCyclical` (SGDR-style
+  per-round cosine). All built-ins share ONE traced body
+  (``schedule.switch_lr``), so swapping them reuses the fused executables.
+
+* :class:`SyncPolicy` — Eq. 4 generalized: decides next round's T_i *and*
+  whether the round communicates at all, owning the host-side
+  :class:`SyncState` (T, (round, rel, T) history, skipped rounds).
+  Instances: :class:`ILE` (paper Eq. 4 — double T_i once the shared model
+  stabilizes), :class:`FLE` (fixed T_i), :class:`DivergenceTrigger`
+  (Kamp et al., 1807.03210: sync only while the local models' divergence
+  from the last synced model exceeds δ — quiet rounds skip the averaging
+  step and bill zero wire bytes).
+
+``CoLearner(codec=..., aggregator=..., round_engine=..., schedule=...,
+sync_policy=...)`` composes the five; string registry names ("leafwise",
+"partial", "fused", "clr", "divtrigger", ...) resolve through
+:data:`CODECS` / :data:`AGGREGATORS` / :data:`ENGINES` / :data:`SCHEDULES`
+/ :data:`SYNC_POLICIES`. The legacy flag surface lives on in
+``CoLearner.from_flags`` and the ``CoLearnConfig.schedule``/``epochs_rule``
+strings (see the migration table in ROADMAP.md §Round strategy API).
 """
 from __future__ import annotations
 
@@ -53,7 +76,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import averaging, compression, engine as engine_mod, flatbuf
-from repro.core.schedule import relative_change, round_lr
+from repro.core import schedule as sched_mod
+from repro.core.schedule import (LR_COS_ROUND, LR_EXP_GLOBAL, LR_EXP_ROUND,
+                                 N_SCHED_PARAMS, clr_lr, cosine_lr, elr_lr,
+                                 relative_change, switch_lr)
 from repro.kernels import ops as kops
 from repro.kernels.quantize import DEFAULT_BLOCK
 
@@ -492,6 +518,268 @@ class RingGossip(Aggregator):
 
 
 # ---------------------------------------------------------------------------
+# LRSchedule (Eq. 3 family)
+# ---------------------------------------------------------------------------
+class LRSchedule(abc.ABC):
+    """The per-epoch learning rate policy (the Eq. 3 axis).
+
+    Two surfaces, one semantics:
+
+    * ``lr(round_i, epoch_j, T_i, global_epoch, total_budget)`` — the
+      reference rate, host-evaluable with plain scalars (the python engine
+      calls it once per epoch). Implementations keep the math compatible
+      with traced inputs where the formula allows.
+    * ``round_params(round_i)`` — the per-round HOST hook: returns
+      ``(kind, p)``, the branch index and scalar pack that
+      ``schedule.switch_lr`` (the shared traced body, :attr:`traced_lr`)
+      consumes *as traced arguments* inside the fused round executable. A
+      schedule whose parameters move per round (a warmup ramping η^i, a
+      policy-aware budget) therefore never retriggers compilation, and
+      swapping between built-ins reuses the same executable outright.
+
+    Custom subclasses may override :attr:`traced_lr` with their own traced
+    function — at the cost of one retrace when swapping to/from it
+    (``CoLearner.set_schedule`` rebinds the engine in that case).
+    """
+
+    name: str = "schedule"
+    #: the traced body the fused engine embeds; shared by every built-in
+    #: (one lax.switch over the ``schedule.LR_*`` branch family)
+    traced_lr = staticmethod(switch_lr)
+
+    @abc.abstractmethod
+    def lr(self, round_i, epoch_j, T_i, global_epoch, total_budget):
+        """The epoch's learning rate (reference/host form)."""
+
+    @abc.abstractmethod
+    def round_params(self, round_i):
+        """Host hook: ``(kind, (p0, p1, p2, p3))`` for ``switch_lr``."""
+
+    def device_round_params(self, round_i):
+        """``round_params`` as the traced argument pack the engine takes."""
+        kind, p = self.round_params(round_i)
+        p = tuple(p) + (0.0,) * (N_SCHED_PARAMS - len(p))
+        return {"kind": jnp.int32(kind), "p": jnp.asarray(p, jnp.float32)}
+
+
+def traced_body(schedule: LRSchedule):
+    """The schedule's traced lr function as a plain callable.
+
+    Unwraps the bound-method descriptor a subclass gets when it overrides
+    ``traced_lr`` with a plain function instead of a ``staticmethod`` —
+    both so identity comparison (the hot-swap check) works and so the
+    engine calls it as ``lr_fn(sched, j, T_i, ge, total)`` without the
+    instance sneaking in as the first argument."""
+    fn = schedule.traced_lr
+    return getattr(fn, "__func__", fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class CLR(LRSchedule):
+    """Paper Eq. 3: η_j^i = η^i · r^(j/T_i), restarting at η^i every round
+    (the cycle period is the communication round itself)."""
+
+    eta0: float = 0.01
+    decay_rate: float = 0.25
+    name = "clr"
+
+    def round_eta(self, round_i) -> float:
+        """The round's shared base rate η^i (constant for plain CLR)."""
+        return self.eta0
+
+    def lr(self, round_i, epoch_j, T_i, global_epoch, total_budget):
+        return clr_lr(self.round_eta(round_i), self.decay_rate, epoch_j, T_i)
+
+    def round_params(self, round_i):
+        return LR_EXP_ROUND, (self.round_eta(round_i), self.decay_rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class ELR(LRSchedule):
+    """The non-cyclical ablation baseline: one exponential anneal over the
+    run's whole epoch budget, never restarting. The budget arrives traced
+    each round (``SyncPolicy.epochs_budget``), so ILE doublings of T_i
+    stretch the anneal correctly instead of stranding it short."""
+
+    eta0: float = 0.01
+    decay_rate: float = 0.25
+    name = "elr"
+
+    def lr(self, round_i, epoch_j, T_i, global_epoch, total_budget):
+        return elr_lr(self.eta0, self.decay_rate, global_epoch,
+                      max(total_budget, 1))
+
+    def round_params(self, round_i):
+        return LR_EXP_GLOBAL, (self.eta0, self.decay_rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupCLR(CLR):
+    """CLR with η^i linearly ramped over the first ``warmup_rounds``
+    communication rounds: η^i = η0 · min(1, (i+1)/warmup_rounds). The ramp
+    lives entirely in the per-round host hook — the fused executable sees
+    only a different traced η^i each round, so warmup costs zero retraces.
+    """
+
+    warmup_rounds: int = 3
+    name = "warmup_clr"
+
+    def round_eta(self, round_i) -> float:
+        ramp = min(1.0, (round_i + 1) / max(self.warmup_rounds, 1))
+        return self.eta0 * ramp
+
+
+@dataclasses.dataclass(frozen=True)
+class CosineCyclical(LRSchedule):
+    """SGDR-style cyclical cosine: within round i the rate anneals from
+    η^i to ``eta_min`` on a half-cosine over the round's T_i epochs and
+    restarts at η^i at the next round boundary (same cycle structure as
+    Eq. 3, smoother tail)."""
+
+    eta0: float = 0.01
+    eta_min: float = 0.0
+    name = "cosine"
+
+    def lr(self, round_i, epoch_j, T_i, global_epoch, total_budget):
+        return cosine_lr(self.eta0, self.eta_min, epoch_j, T_i)
+
+    def round_params(self, round_i):
+        return LR_COS_ROUND, (self.eta0, 0.0, self.eta_min)
+
+
+# ---------------------------------------------------------------------------
+# SyncPolicy (Eq. 4 generalized)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SyncState:
+    """Host-side per-run state owned by a :class:`SyncPolicy`.
+
+    ``history`` logs one ``(round, rel_change, next_T)`` triple per
+    completed round; ``skipped`` lists the rounds a divergence-gated
+    policy decided not to communicate.
+    """
+
+    T: int
+    history: tuple = ()
+    skipped: tuple = ()
+
+
+class SyncPolicy(abc.ABC):
+    """Who syncs when: next round's T_i + the communicate-at-all decision.
+
+    Absorbs the legacy ``EpochController``: the policy owns a
+    :class:`SyncState` (created by ``init_state``, advanced by ``update``
+    after every round) and, for divergence-gated policies, the per-round
+    ``should_sync`` decision plus the traced threshold ``delta`` the fused
+    engine embeds. ``epochs_budget`` is the policy-aware total-epoch
+    estimate the ELR anneal divides by — it rides into the executables as
+    a traced argument, so the per-round re-estimate (after an ILE
+    doubling) is free.
+    """
+
+    name: str = "sync"
+    #: True => the round executable is built with the divergence gate and
+    #: quiet rounds skip the aggregation/wire step (Kamp et al.).
+    divergence_gated: bool = False
+    #: the traced divergence threshold (gated policies only)
+    delta: float = float("inf")
+
+    def init_state(self, T0: int) -> SyncState:
+        return SyncState(T=int(T0))
+
+    @abc.abstractmethod
+    def update(self, state: SyncState, round_i: int, rel_change: float,
+               synced: bool = True) -> SyncState:
+        """Post-round host hook: fold the round's Eq. 4 metric (or, on a
+        skipped round, the divergence) into the state; returns the state
+        whose ``T`` drives round ``round_i + 1``."""
+
+    def should_sync(self, div: float, round_i: int) -> bool:
+        """Host-side gate decision (python engine). Must implement the
+        same decision as :meth:`traced_should_sync`."""
+        return True
+
+    def traced_should_sync(self, div, delta):
+        """The gate as the fused engine embeds it on-device: ``div`` is
+        the traced divergence, ``delta`` the traced threshold. Override
+        together with :meth:`should_sync` (the engines' equivalence
+        depends on the two agreeing); swaps between policies with
+        different traced gates go through ``CoLearner.set_sync_policy``
+        so the engine can rebind."""
+        return div > delta
+
+    def epochs_budget(self, T: int, round_i: int, global_epoch: int,
+                      max_rounds: int) -> int:
+        """Policy-aware total-epoch estimate at the start of ``round_i``:
+        epochs already run plus the current T_i extrapolated over the
+        remaining rounds. Exact for fixed-T policies (= T0·max_rounds);
+        re-estimated after every ILE doubling — which the old static
+        ``T0 * max_rounds`` budget ignored, stranding the ELR anneal far
+        from its floor."""
+        return max(global_epoch + T * max(max_rounds - round_i, 1), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ILE(SyncPolicy):
+    """Paper Eq. 4: double T_i when the relative change of the averaged
+    model falls to <= ε; always communicates."""
+
+    epsilon: float = 0.01
+    name = "ile"
+
+    def update(self, state, round_i, rel_change, synced=True):
+        T = 2 * state.T if rel_change <= self.epsilon else state.T
+        return dataclasses.replace(
+            state, T=T, history=state.history + ((round_i, rel_change, T),))
+
+
+@dataclasses.dataclass(frozen=True)
+class FLE(SyncPolicy):
+    """Fixed local epochs (the FedAvg-style ablation baseline): T_i = T0
+    forever; always communicates."""
+
+    name = "fle"
+
+    def update(self, state, round_i, rel_change, synced=True):
+        return dataclasses.replace(
+            state,
+            history=state.history + ((round_i, rel_change, state.T),))
+
+
+@dataclasses.dataclass(frozen=True)
+class DivergenceTrigger(SyncPolicy):
+    """Dynamic model averaging (Kamp et al., 1807.03210): communicate only
+    while the local models diverge.
+
+    After the round's local epochs, the engines compute the participants'
+    RMS relative drift from the last *synced* shared model
+    (``schedule.divergence_traced``). While that stays <= δ the round is
+    *quiet*: the averaging/wire step is skipped outright, the participants
+    keep their local params and optimizer state, and the round bills ZERO
+    comm bytes. Once accumulated drift exceeds δ the next round syncs as
+    usual. ``epsilon`` optionally adds the Eq. 4 doubling on synced rounds
+    (None = keep T fixed, the equal-budget baseline).
+    """
+
+    delta: float = 0.05
+    epsilon: Optional[float] = None
+    name = "divtrigger"
+    divergence_gated = True
+
+    def should_sync(self, div, round_i):
+        return div > self.delta
+
+    def update(self, state, round_i, rel_change, synced=True):
+        T = state.T
+        if synced and self.epsilon is not None and rel_change <= self.epsilon:
+            T = 2 * state.T
+        skipped = state.skipped if synced else state.skipped + (round_i,)
+        return dataclasses.replace(
+            state, T=T, skipped=skipped,
+            history=state.history + ((round_i, rel_change, T),))
+
+
+# ---------------------------------------------------------------------------
 # RoundEngine
 # ---------------------------------------------------------------------------
 class RoundEngine(abc.ABC):
@@ -540,14 +828,15 @@ class _PythonRunner:
 
     def run_round(self, state, epoch_batches_fn):
         learner = self.learner
-        cfg = learner.cfg
+        policy = learner.sync_policy
         i = state["round"]
         T_i = state["ctrl"].T
         ge0 = state["global_epoch"]
+        total = learner.epochs_budget(state)
+        sync_ref = learner._sync_ref(state)
         lrs, losses = [], []
         for j in range(T_i):
-            lr = float(round_lr(cfg, i, j, T_i, ge0 + j,
-                                learner.total_epochs_budget()))
+            lr = float(learner.schedule.lr(i, j, T_i, ge0 + j, total))
             lrs.append(lr)
             batches = epoch_batches_fn(i, j)
             params, opt, l = learner._jit_epoch(
@@ -555,58 +844,110 @@ class _PythonRunner:
             state["params"], state["opt"] = params, opt
             losses.append(jax.device_get(l))
 
-        # aggregate (Eq. 2 / partial / gossip) over the codec's wire
-        averaged = self._jit_agg(state["params"], learner.round_weights(i))
-        new_avg = averaging.unstack_participant(averaged, 0)
-        rel = (float("inf") if state["prev_avg"] is None
-               else relative_change(new_avg, state["prev_avg"]))
-        fresh_opt = jax.vmap(learner.opt.init)(averaged)
+        if policy.divergence_gated:
+            div = sched_mod.divergence(state["params"], sync_ref)
+            synced = bool(policy.should_sync(div, i))
+        else:
+            div, synced = None, True
+        if synced:
+            # aggregate (Eq. 2 / partial / gossip) over the codec's wire
+            averaged = self._jit_agg(state["params"],
+                                     learner.round_weights(i))
+            new_avg = averaging.unstack_participant(averaged, 0)
+            rel = (float("inf") if state["prev_avg"] is None
+                   else relative_change(new_avg, state["prev_avg"]))
+            fresh_opt = jax.vmap(learner.opt.init)(averaged)
+        else:
+            # quiet round (Kamp): keep local params AND optimizer state,
+            # reference unchanged, nothing crosses the wire
+            averaged, fresh_opt = state["params"], state["opt"]
+            new_avg, rel = sync_ref, div
         return learner._finish_round(state, i, T_i, rel,
                                      [float(x.mean()) for x in losses],
                                      lrs[0], lrs[-1], averaged, fresh_opt,
-                                     new_avg)
+                                     new_avg, synced=synced)
 
 
 class _FusedRunner:
     def __init__(self, learner, chunk):
         self.learner = learner
         self.chunk = chunk
-        total = learner.total_epochs_budget()
+        self._gated = learner.sync_policy.divergence_gated
+        # the traced schedule body / sync gate the executables were
+        # compiled against; every built-in LRSchedule shares
+        # schedule.switch_lr (and built-in policies the default gate), so
+        # CoLearner.set_schedule/set_sync_policy hot-swap without
+        # touching the caches
+        self._traced_lr = traced_body(learner.schedule)
+        self._traced_gate = type(learner.sync_policy).traced_should_sync
+        gate_fn = learner.sync_policy.traced_should_sync
         self._round = engine_mod.make_fused_round(
-            learner.loss_fn, learner.opt, learner.cfg,
-            aggregate_fn=learner._aggregate_fn, total_epochs=total)
+            learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
+            aggregate_fn=learner._aggregate_fn, gated=self._gated,
+            gate_fn=gate_fn)
         self._epochs = engine_mod.make_fused_epochs(
-            learner.loss_fn, learner.opt, learner.cfg, total_epochs=total)
+            learner.loss_fn, learner.opt, lr_fn=self._traced_lr)
         self._finalize = engine_mod.make_fused_finalize(
-            learner.opt, aggregate_fn=learner._aggregate_fn)
+            learner.opt, aggregate_fn=learner._aggregate_fn,
+            gated=self._gated, gate_fn=gate_fn)
 
     def run_round(self, state, epoch_batches_fn):
         """One round as one (or, past ``chunk`` epochs, a few chained)
         donated executables — zero host syncs until the final aux fetch."""
         learner = self.learner
+        if traced_body(learner.schedule) is not self._traced_lr:
+            raise RuntimeError(
+                "the learner's schedule carries a different traced_lr than "
+                "the compiled round executables; swap schedules with "
+                "CoLearner.set_schedule(...) so the engine can rebind")
+        if (learner.sync_policy.divergence_gated != self._gated
+                or type(learner.sync_policy).traced_should_sync
+                is not self._traced_gate):
+            raise RuntimeError(
+                "the learner's sync policy gating does not match the "
+                "compiled round executables; swap policies with "
+                "CoLearner.set_sync_policy(...) so the engine can rebind")
+        gated = self._gated
         i = state["round"]
         T_i = state["ctrl"].T
         ge0 = jnp.int32(state["global_epoch"])
+        sched = learner.schedule.device_round_params(i)
+        total = jnp.int32(learner.epochs_budget(state))
         agg_w = learner.round_weights(i)
+        if gated:
+            sync_ref = learner._sync_ref(state)
+            delta = jnp.float32(learner.sync_policy.delta)
+        div_dev, sync_dev = None, True
         # state["params"]/["opt"] are reassigned immediately after every
         # donating call below, so an exception mid-round (e.g. from
         # epoch_batches_fn) can never leave state holding deleted buffers.
         if T_i <= self.chunk:
             batches = engine_mod.stack_epoch_batches(
                 [epoch_batches_fn(i, j) for j in range(T_i)])
-            averaged, fresh_opt, aux = self._round(
-                state["params"], state["opt"], batches, ge0, agg_w)
-            state["params"], state["opt"] = averaged, fresh_opt
+            if gated:
+                out_p, out_o, aux = self._round(
+                    state["params"], state["opt"], batches, ge0, sched,
+                    total, sync_ref, delta, agg_w)
+            else:
+                out_p, out_o, aux = self._round(
+                    state["params"], state["opt"], batches, ge0, sched,
+                    total, agg_w)
+            state["params"], state["opt"] = out_p, out_o
             new_avg = aux["new_avg"]
             # the round's single host sync (scalars/loss curves only — the
             # aggregated model itself stays on device)
             losses, lrs, rel_dev = jax.device_get(
                 (aux["losses"], aux["lrs"], aux["rel"]))
+            if gated:
+                div_dev, sync_dev = jax.device_get(
+                    (aux["div"], aux["synced"]))
         else:
             # staging all T_i epochs at once would cost device memory linear
             # in T_i (which ILE doubles); chain chunk executables instead.
-            # j0/T_i/ge0 are traced, so chunks reuse one compiled program.
-            old_avg = averaging.unstack_participant(state["params"], 0)
+            # j0/T_i/ge0/sched/total are traced, so chunks reuse one
+            # compiled program across doublings AND schedule swaps.
+            if not gated:
+                old_avg = averaging.unstack_participant(state["params"], 0)
             lparts, rparts, j0 = [], [], 0
             while j0 < T_i:
                 C = min(self.chunk, T_i - j0)
@@ -614,22 +955,37 @@ class _FusedRunner:
                     [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
                 params, opt_st, l, r = self._epochs(
                     state["params"], state["opt"], batches, jnp.int32(j0),
-                    jnp.int32(T_i), ge0)
+                    jnp.int32(T_i), ge0, sched, total)
                 state["params"], state["opt"] = params, opt_st
                 lparts.append(l)
                 rparts.append(r)
                 j0 += C
-            averaged, fresh_opt, rel_t, new_avg = self._finalize(
-                state["params"], old_avg, agg_w)
-            state["params"], state["opt"] = averaged, fresh_opt
-            lparts, rparts, rel_dev = jax.device_get((lparts, rparts, rel_t))
+            if gated:
+                out_p, out_o, rel_t, div_t, sync_t, new_avg = \
+                    self._finalize(state["params"], state["opt"], sync_ref,
+                                   delta, agg_w)
+                state["params"], state["opt"] = out_p, out_o
+                lparts, rparts, rel_dev, div_dev, sync_dev = jax.device_get(
+                    (lparts, rparts, rel_t, div_t, sync_t))
+            else:
+                out_p, out_o, rel_t, new_avg = self._finalize(
+                    state["params"], old_avg, agg_w)
+                state["params"], state["opt"] = out_p, out_o
+                lparts, rparts, rel_dev = jax.device_get(
+                    (lparts, rparts, rel_t))
             losses = np.concatenate(lparts)
             lrs = np.concatenate(rparts)
-        rel = float("inf") if state["prev_avg"] is None else float(rel_dev)
+        synced = bool(sync_dev)
+        if not synced:
+            rel = float(div_dev)
+        elif state["prev_avg"] is None:
+            rel = float("inf")
+        else:
+            rel = float(rel_dev)
         return learner._finish_round(state, i, T_i, rel,
                                      [float(l.mean()) for l in losses],
                                      float(lrs[0]), float(lrs[-1]),
-                                     averaged, fresh_opt, new_avg)
+                                     out_p, out_o, new_avg, synced=synced)
 
 
 # ---------------------------------------------------------------------------
@@ -641,6 +997,10 @@ CODECS: dict = {}
 AGGREGATORS: dict = {}
 #: name -> factory(**kw) -> RoundEngine. Engine factories accept chunk=.
 ENGINES: dict = {}
+#: name -> factory(**kw) -> LRSchedule. Factories accept eta0=/decay_rate=.
+SCHEDULES: dict = {}
+#: name -> factory(**kw) -> SyncPolicy. Factories accept epsilon=/delta=.
+SYNC_POLICIES: dict = {}
 
 
 def register_codec(name, factory):
@@ -658,6 +1018,16 @@ def register_engine(name, factory):
     return factory
 
 
+def register_schedule(name, factory):
+    SCHEDULES[name] = factory
+    return factory
+
+
+def register_sync_policy(name, factory):
+    SYNC_POLICIES[name] = factory
+    return factory
+
+
 register_codec("exact", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
 register_codec("none", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
 register_codec("leafwise", LeafwiseInt8)
@@ -669,6 +1039,31 @@ register_aggregator("partial", PartialParticipation)
 register_aggregator("ring", RingGossip)
 register_engine("python", lambda chunk=32: PythonEngine())
 register_engine("fused", FusedEngine)
+register_schedule("clr", lambda eta0=0.01, decay_rate=0.25:
+                  CLR(eta0, decay_rate))
+register_schedule("elr", lambda eta0=0.01, decay_rate=0.25:
+                  ELR(eta0, decay_rate))
+register_schedule("warmup_clr", lambda eta0=0.01, decay_rate=0.25:
+                  WarmupCLR(eta0, decay_rate))
+register_schedule("warmup", SCHEDULES["warmup_clr"])       # alias
+register_schedule("cosine", lambda eta0=0.01, decay_rate=0.25:
+                  CosineCyclical(eta0))
+# Sync-policy factories take (epsilon, delta, cfg_epsilon): ``epsilon`` is
+# an EXPLICIT caller value, ``cfg_epsilon`` the CoLearnConfig fallback —
+# split so divtrigger's optional Eq. 4 doubling engages only when asked
+# for (the cfg's ε parameterizes ILE, not the trigger).
+register_sync_policy("ile", lambda epsilon=None, delta=None,
+                     cfg_epsilon=None:
+                     ILE(epsilon=next(e for e in (epsilon, cfg_epsilon,
+                                                  0.01) if e is not None)))
+register_sync_policy("fle", lambda epsilon=None, delta=None,
+                     cfg_epsilon=None: FLE())
+register_sync_policy("divtrigger", lambda epsilon=None, delta=None,
+                     cfg_epsilon=None:
+                     DivergenceTrigger(
+                         delta=0.05 if delta is None else delta,
+                         epsilon=epsilon))
+register_sync_policy("divergence", SYNC_POLICIES["divtrigger"])  # alias
 
 
 def _resolve(spec, registry, default, proto, kind, **kw):
@@ -703,3 +1098,38 @@ def get_engine(spec=None, *, chunk=32) -> RoundEngine:
     """None | registry name | RoundEngine instance -> RoundEngine."""
     return _resolve(spec, ENGINES, PythonEngine, RoundEngine, "engine",
                     chunk=chunk)
+
+
+def get_schedule(spec=None, cfg=None, *, eta0=None,
+                 decay_rate=None) -> LRSchedule:
+    """None | registry name | LRSchedule instance -> LRSchedule.
+
+    ``None`` resolves the legacy ``cfg.schedule`` string ("clr" | "elr");
+    registry names take η0/decay from ``cfg`` (or the explicit keywords),
+    so ``CoLearner(schedule="clr")`` is the flag surface, object-shaped.
+    """
+    if spec is None:
+        spec = cfg.schedule if cfg is not None else "clr"
+    if eta0 is None:
+        eta0 = cfg.eta0 if cfg is not None else 0.01
+    if decay_rate is None:
+        decay_rate = cfg.decay_rate if cfg is not None else 0.25
+    return _resolve(spec, SCHEDULES, CLR, LRSchedule, "schedule",
+                    eta0=eta0, decay_rate=decay_rate)
+
+
+def get_sync_policy(spec=None, cfg=None, *, epsilon=None,
+                    delta=None) -> SyncPolicy:
+    """None | registry name | SyncPolicy instance -> SyncPolicy.
+
+    ``None`` resolves the legacy ``cfg.epochs_rule`` string ("ile" |
+    "fle"). "ile" takes ε from the explicit keyword, else from ``cfg``;
+    "divtrigger" takes ``delta`` plus an optional EXPLICIT ``epsilon`` to
+    enable Eq. 4 doubling on synced rounds (the cfg's ε does NOT leak into
+    the trigger — its default is fixed-T, the equal-budget baseline).
+    """
+    if spec is None:
+        spec = cfg.epochs_rule if cfg is not None else "ile"
+    return _resolve(spec, SYNC_POLICIES, ILE, SyncPolicy, "sync policy",
+                    epsilon=epsilon, delta=delta,
+                    cfg_epsilon=cfg.epsilon if cfg is not None else None)

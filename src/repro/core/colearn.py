@@ -7,7 +7,7 @@ simulation path (K participants vmapped on one host — used by every
 paper-claims experiment) and the production path (K = pods,
 `spmd_axis_name='pod'`).
 
-A learner composes three strategy objects (``repro.core.api``):
+A learner composes five strategy objects (``repro.core.api``):
 
   * ``codec`` — the wire format of one participant's upload. ``ExactF32()``
     (paper-faithful), ``LeafwiseInt8(block, impl)`` (per-leaf int8
@@ -21,14 +21,27 @@ A learner composes three strategy objects (``repro.core.api``):
     dispatch per epoch) or ``FusedEngine(chunk=...)`` (the whole round as
     one donated executable, ``repro.core.engine``; long rounds chain chunk
     executables, still one host sync).
+  * ``schedule`` — the Eq. 3 family: ``CLR()`` (paper per-round restart),
+    ``ELR()`` (global anneal), ``WarmupCLR(warmup_rounds=...)``,
+    ``CosineCyclical()``. Per-round parameters (η^i, decay, the epoch
+    budget) ride into the fused executables as traced arguments, so
+    warmups, budget updates, and built-in swaps
+    (``set_schedule``) never recompile.
+  * ``sync_policy`` — Eq. 4 generalized: ``ILE(epsilon=...)`` (paper
+    doubling), ``FLE()`` (fixed T), ``DivergenceTrigger(delta=...)``
+    (Kamp-style: skip the averaging/wire step — and its comm bill — on
+    rounds where the local models haven't diverged past δ).
 
 Registry names resolve too: ``CoLearner(ccfg, loss_fn, codec="leafwise",
-aggregator="partial", round_engine="fused")``. The pre-PR-3 flag surface
-(``engine=``, ``compress=``, ``compress_impl=``, ``compress_fn=``,
-``compress_block=``, ``fused_chunk=``) lives on, bit-for-bit, as
-``CoLearner.from_flags`` — see ROADMAP.md §Round strategy API for the
-flag -> object migration table. Engine equivalence and flag/object parity
-are asserted in tests/test_engine.py and tests/test_api.py.
+aggregator="partial", round_engine="fused", schedule="clr",
+sync_policy="ile")``; leaving ``schedule``/``sync_policy`` as None resolves
+the legacy ``CoLearnConfig.schedule``/``epochs_rule`` strings through the
+same registries, bit-for-bit. The pre-PR-3 flag surface (``engine=``,
+``compress=``, ``compress_impl=``, ``compress_fn=``, ``compress_block=``,
+``fused_chunk=``) lives on as ``CoLearner.from_flags`` — see ROADMAP.md
+§Round strategy API for the flag -> object migration table. Engine
+equivalence and flag/object parity are asserted in tests/test_engine.py,
+tests/test_api.py, and tests/test_policies.py.
 """
 from __future__ import annotations
 
@@ -39,7 +52,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api, averaging, engine as engine_mod
-from repro.core.schedule import EpochController
 from repro.optim.optimizers import get_optimizer
 
 
@@ -49,9 +61,10 @@ class RoundLog:
     T: int
     lr_first: float
     lr_last: float
-    rel_change: float
+    rel_change: float        # Eq. 4 metric; the divergence on skipped rounds
     local_losses: list
-    comm_bytes: int
+    comm_bytes: int          # 0 on rounds a gated sync policy skipped
+    synced: bool = True
 
 
 @dataclass
@@ -61,12 +74,14 @@ class CoLearner:
     loss_fn(params, batch) -> (loss, metrics) for ONE participant.
     data: per-participant iterables of epochs; see ``run_round``.
 
-    codec / aggregator / round_engine each accept a strategy object from
-    ``repro.core.api``, a registry name ("exact" | "leafwise" | "fused",
-    "full" | "partial" | "ring", "python" | "fused"), or None for the
-    paper-faithful default (exact f32 wire, full Eq. 2 averaging, python
-    reference engine). Use ``CoLearner.from_flags(...)`` for the legacy
-    keyword surface.
+    codec / aggregator / round_engine / schedule / sync_policy each accept
+    a strategy object from ``repro.core.api``, a registry name ("exact" |
+    "leafwise" | "fused", "full" | "partial" | "ring", "python" | "fused",
+    "clr" | "elr" | "warmup_clr" | "cosine", "ile" | "fle" | "divtrigger"),
+    or None for the paper-faithful default (exact f32 wire, full Eq. 2
+    averaging, python reference engine, and the ``cfg.schedule``/
+    ``cfg.epochs_rule`` strings resolved through the registries). Use
+    ``CoLearner.from_flags(...)`` for the legacy keyword surface.
     """
     cfg: Any                                  # CoLearnConfig
     loss_fn: Callable
@@ -74,11 +89,17 @@ class CoLearner:
     codec: Any = None                         # WireCodec | name | None
     aggregator: Any = None                    # Aggregator | name | None
     round_engine: Any = None                  # RoundEngine | name | None
+    schedule: Any = None                      # LRSchedule | name | None
+    sync_policy: Any = None                   # SyncPolicy | name | None
 
     def __post_init__(self):
         self.codec = api.get_codec(self.codec)
         self.aggregator = api.get_aggregator(self.aggregator)
         self.round_engine = api.get_engine(self.round_engine)
+        # None resolves the legacy cfg.schedule / cfg.epochs_rule strings
+        # through the same registries the names go through
+        self.schedule = api.get_schedule(self.schedule, self.cfg)
+        self.sync_policy = api.get_sync_policy(self.sync_policy, self.cfg)
         self.opt = get_optimizer(self.optimizer_name)
         # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
         # the python engine jits it per-epoch, the fused engine scans over
@@ -134,14 +155,54 @@ class CoLearner:
         self._comm_cache = None      # params shapes may differ from last init
         stacked = averaging.stack_participants(params, K)
         opt_state = jax.vmap(self.opt.init)(stacked)
-        ctrl = EpochController(self.cfg.T0, self.cfg.epsilon,
-                               self.cfg.epochs_rule)
+        ctrl = self.sync_policy.init_state(self.cfg.T0)
         return {"params": stacked, "opt": opt_state, "ctrl": ctrl,
                 "round": 0, "global_epoch": 0, "prev_avg": None, "log": []}
 
-    def total_epochs_budget(self):
-        # used by the ELR baseline's anneal denominator
-        return max(self.cfg.T0 * self.cfg.max_rounds, 1)
+    def epochs_budget(self, state):
+        """The ELR anneal denominator for the round about to run: epochs
+        already run + the policy's extrapolation over the remaining rounds
+        (= T0·max_rounds for fixed-T policies; re-estimated after every
+        ILE doubling — the old static budget stranded the ELR anneal short
+        once T_i doubled). Rides into the fused executables traced, so the
+        per-round update is free."""
+        return self.sync_policy.epochs_budget(
+            state["ctrl"].T, state["round"], state["global_epoch"],
+            self.cfg.max_rounds)
+
+    def set_schedule(self, spec):
+        """Swap the learning-rate schedule mid-run.
+
+        All built-in schedules share one traced body, so swapping among
+        them (or re-parameterizing one) reuses the fused engine's compiled
+        executables — the new parameters simply ride in as the next
+        round's traced arguments. A custom schedule with its own
+        ``traced_lr`` rebinds the engine (one-time retrace)."""
+        self.schedule = api.get_schedule(spec, self.cfg)
+        # compare against the runner's COMPILED body (not the previous
+        # schedule attribute) so a swap also repairs a direct assignment
+        bound = getattr(self._runner, "_traced_lr", None)
+        if bound is not None and api.traced_body(self.schedule) is not bound:
+            self._runner = self.round_engine.bind(self)
+        return self
+
+    def set_sync_policy(self, spec):
+        """Swap the sync policy mid-run.
+
+        Threshold/epsilon changes ride in as the next round's host/traced
+        values; only flipping the divergence gate itself (e.g. ILE ->
+        DivergenceTrigger) or changing the traced gate body rebinds the
+        fused engine, whose round executables are compiled with or
+        without the on-device gate."""
+        bound_gated = getattr(self._runner, "_gated", None)
+        bound_gate = getattr(self._runner, "_traced_gate", None)
+        self.sync_policy = api.get_sync_policy(spec, self.cfg)
+        if bound_gated is not None and (
+                self.sync_policy.divergence_gated != bound_gated
+                or type(self.sync_policy).traced_should_sync
+                is not bound_gate):
+            self._runner = self.round_engine.bind(self)
+        return self
 
     def param_bytes(self, state):
         one = averaging.unstack_participant(state["params"], 0)
@@ -168,24 +229,30 @@ class CoLearner:
         return self._runner.run_round(state, epoch_batches_fn)
 
     def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
-                      lr_last, averaged, fresh_opt, new_avg):
+                      lr_last, averaged, fresh_opt, new_avg, synced=True):
         """The one round state transition, shared verbatim by both engines.
 
         ``fresh_opt`` is the per-participant opt reset (opt state is
         intentionally NOT averaged: the paper restarts local training from
         the shared model each round). ``new_avg`` stays device-side — no
-        full-model host transfer per round.
+        full-model host transfer per round. On a round a gated sync policy
+        skipped (``synced=False``) the runner passes the untouched local
+        params/opt, the unchanged sync reference, and the divergence as
+        ``rel`` — and the round bills zero wire bytes.
         """
         state["params"], state["opt"] = averaged, fresh_opt
         state["prev_avg"] = new_avg
-        state["ctrl"] = state["ctrl"].update(rel)
+        state["ctrl"] = self.sync_policy.update(state["ctrl"], i, rel,
+                                                synced)
         state["global_epoch"] += T_i
         # comm volume per participant, priced by the aggregator through the
         # codec (compressed upload + raw download; gossip pays wire both
         # ways); round-independent accounting (all built-in aggregators) is
         # computed once — flat-codec pricing rebuilds a host-side layout
         # table, which must stay off the per-round path
-        if self.aggregator.static_comm:
+        if not synced:
+            comm = 0
+        elif self.aggregator.static_comm:
             if self._comm_cache is None:
                 self._comm_cache = self.aggregator.comm_bytes(
                     self.codec, state["params"], i)
@@ -194,7 +261,7 @@ class CoLearner:
             comm = self.aggregator.comm_bytes(self.codec, state["params"], i)
         state["round"] = i + 1
         state["log"].append(RoundLog(i, T_i, lr_first, lr_last, rel,
-                                     local_losses, comm))
+                                     local_losses, comm, synced))
         return state
 
     # legacy handles used by tests/benchmarks to poke at the fused
@@ -215,7 +282,21 @@ class CoLearner:
     def _fused_epochs(self):
         return self._fused_handle("_epochs")
 
+    @property
+    def _fused_finalize(self):
+        return self._fused_handle("_finalize")
+
     def shared_model(self, state):
+        return averaging.unstack_participant(state["params"], 0)
+
+    def _sync_ref(self, state):
+        """The last synced shared model — the Eq. 4 / divergence reference
+        both engines measure against. Before the first sync (round 0, when
+        every slot still holds the init model) it is slot 0 of the entry
+        params; afterwards ``prev_avg``, which gated runs advance only on
+        synced rounds."""
+        if state["prev_avg"] is not None:
+            return state["prev_avg"]
         return averaging.unstack_participant(state["params"], 0)
 
     # -- failure handling (paper: restart the participant's local training) --

@@ -1,7 +1,7 @@
 """Fused round engine — one XLA executable per communication round.
 
 The reference implementation of Algorithm 1 (``CoLearner.run_round`` with
-``engine="python"``) drives the T_i local epochs from a host loop: one jit
+the python engine) drives the T_i local epochs from a host loop: one jit
 dispatch + one blocking ``device_get`` per epoch, plus a host-side Eq. 4
 ``relative_change`` over the parameter leaves. Since the paper's protocol
 spends nearly all wall-clock inside those local epochs, that dispatch
@@ -10,41 +10,55 @@ overhead sits directly on the hottest path.
 ``make_fused_round`` instead compiles the *whole* round into a single
 donated jit:
 
-    lax.scan over the T_i local epochs          (Eq. 3 CLR/ELR computed
-        |                                        *traced* inside the scan
-        |  each epoch: vmap over K participants, via ``schedule.clr_lr`` /
-        |  inner lax.scan over that epoch's      ``schedule.elr_lr``)
-        v  batches
-    Eq. 2 averaging (``average_fn``)
+    lax.scan over the T_i local epochs          (the Eq. 3-family schedule
+        |                                        computed *traced* inside
+        |  each epoch: vmap over K participants, the scan via ``lr_fn`` —
+        |  inner lax.scan over that epoch's      default ``schedule.
+        v  batches                               switch_lr``)
+    Eq. 2 averaging / mixing (``aggregate_fn``)
     Eq. 4 relative_change, on-device            (``relative_change_traced``)
 
 so a round costs one dispatch and exactly one host sync (the aux fetch at
-the end). T_i is baked from the stacked batch shape — the executable is
-recompiled only when the Eq. 4 controller doubles T_i, i.e. O(log T_max)
-times per run.
+the end). The schedule is pure *data* to the executable: ``lr_fn(sched, j,
+T_i, ge, total)`` receives the per-round parameter pack ``sched`` (η_i,
+decay, kind — built by ``api.LRSchedule.round_params``), the round length
+``T_i``, the global-epoch offset and the run's epoch budget all as traced
+arguments. Swapping between built-in schedules, a warmup ramping η^i per
+round, a policy-aware budget update, or an ILE doubling of T_i therefore
+reuse the compiled executables; only a changed *batch shape* recompiles
+(the single-shot path bakes T_i from the staged-batch shape, i.e.
+O(log T_max) compiles per run).
 
 Staging T_i epochs of batches on device costs memory linear in T_i, and
 the ILE rule doubles T_i. For large rounds ``CoLearner`` therefore caps
-the staged window at ``fused_chunk`` epochs and strings together
-``make_fused_epochs`` executables (same in-scan schedule, j/T_i/epoch
-offsets passed traced so chunks never recompile as T_i grows) followed by
-one ``make_fused_finalize`` executable (Eq. 2 + Eq. 4 + opt reset). The
-round is then ceil(T_i/chunk)+1 dispatches — still zero host syncs until
-the final aux fetch.
+the staged window at the engine's ``chunk`` epochs and strings together
+``make_fused_epochs`` executables (same in-scan schedule; j0/T_i/ge0/sched/
+total passed traced so chunks never recompile as T_i grows) followed by
+one ``make_fused_finalize`` executable (aggregation + Eq. 4 + opt reset).
+The round is then ceil(T_i/chunk)+1 dispatches — still zero host syncs
+until the final aux fetch.
+
+``gated=True`` builds the divergence-triggered variants (Kamp et al.,
+1807.03210, via ``api.DivergenceTrigger``): the executable additionally
+takes the last *synced* shared model and a traced δ, computes the local-
+model divergence on-device, and selects — still inside the one program —
+between the aggregated state (sync) and the untouched local state (skip);
+the sync decision comes back with the aux fetch so the host can bill the
+wire only on synced rounds.
 
 Backend API — shared by the simulation and pod paths:
 
   * simulation (single host, K vmapped participants): the defaults.
   * pod (K = pods on a multi-pod mesh): pass ``spmd_axis_name="pod"`` so
     the participant vmap is pinned to the ``pod`` mesh axis, and an
-    ``average_fn`` built by ``averaging.make_average_shard_map`` to pin
-    Eq. 2 to an explicit shard_map psum over that axis
+    aggregate fn built against the mesh (``api.Aggregator.
+    make_aggregate_fn(codec, mesh=...)``) so the cross-pod traffic is the
+    aggregator's actual wire pattern
     (``launch/steps.make_fused_round_step`` wires this for the dry-run).
 
-``CoLearner(round_engine=FusedEngine(chunk)|PythonEngine())`` (or the
-legacy ``CoLearner.from_flags(engine=...)``) selects between this engine
-and the reference loop; both produce the same ``RoundLog``/state
-transitions and are asserted equivalent to <=1e-5 in
+``CoLearner(round_engine=FusedEngine(chunk)|PythonEngine())`` selects
+between this engine and the reference loop; both produce the same
+``RoundLog``/state transitions and are asserted equivalent to <=1e-5 in
 ``tests/test_engine.py``. The aggregation step is supplied as
 ``aggregate_fn(stacked, weights)`` by a ``repro.core.api`` aggregator
 (codec roundtrip + participant mixing; ``weights`` is the traced per-round
@@ -64,7 +78,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import averaging, flatbuf
-from repro.core.schedule import clr_lr, elr_lr, relative_change_traced
+from repro.core.schedule import (divergence_traced, relative_change_traced,
+                                 switch_lr)
 from repro.kernels import ops as kops
 from repro.optim.optimizers import apply_updates
 
@@ -98,26 +113,26 @@ def make_epoch_fn(loss_fn, opt, spmd_axis_name=None):
     return jax.vmap(one_participant, in_axes=(0, 0, 0, None), **vmap_kw)
 
 
-def _make_epoch_scan(epoch_fn, cfg, total_epochs):
-    """scan_epochs(params, opt, batches, j0, T_i, ge0): run the leading-dim
-    epochs of ``batches`` with the Eq. 3 schedule computed traced in-scan.
+def _make_epoch_scan(epoch_fn, lr_fn):
+    """scan_epochs(params, opt, batches, j0, T_i, ge0, sched, total): run
+    the leading-dim epochs of ``batches`` with the schedule computed traced
+    in-scan via ``lr_fn(sched, j, T_i, ge, total)``.
 
     j0 (round-local offset of the first staged epoch), T_i (the round's
-    CLR denominator) and ge0 (global epoch at round start, ELR) may all be
-    traced, so a chunk executable is reused unchanged as T_i doubles.
+    cycle denominator), ge0 (global epoch at round start), ``sched`` (the
+    per-round schedule parameter pack) and ``total`` (the run's epoch
+    budget) may all be traced, so one chunk executable is reused unchanged
+    as T_i doubles, as the budget updates, and across built-in schedule
+    swaps.
     """
     def scan_epochs(stacked_params, opt_state, batches, j0, T_i,
-                    global_epoch0):
+                    global_epoch0, sched, total):
         n = jax.tree.leaves(batches)[0].shape[0]
 
         def body(carry, xs):
             params, ostate = carry
             j, ebatches = xs
-            if cfg.schedule == "clr":
-                lr = clr_lr(cfg.eta0, cfg.decay_rate, j, T_i)
-            else:
-                lr = elr_lr(cfg.eta0, cfg.decay_rate, global_epoch0 + j,
-                            total_epochs)
+            lr = lr_fn(sched, j, T_i, global_epoch0 + j, total)
             params, ostate, loss = epoch_fn(params, ostate, ebatches, lr)
             return (params, ostate), (loss, lr)
 
@@ -220,21 +235,57 @@ def _make_finalize(opt, aggregate_fn):
     return finalize
 
 
-def _resolve_epochs(cfg, total_epochs):
-    if total_epochs is None:
-        total_epochs = max(cfg.T0 * cfg.max_rounds, 1)
-    return total_epochs
+def _default_gate(div, delta):
+    """The default on-device sync gate (api.SyncPolicy.traced_should_sync)."""
+    return div > delta
 
 
-def make_fused_round(loss_fn, opt, cfg, *, compress_fn=None,
-                     total_epochs=None, spmd_axis_name=None,
-                     average_fn=None, aggregate_fn=None, donate=True):
+def _make_gated_finalize(opt, aggregate_fn, gate_fn=None):
+    """Divergence-gated aggregation: compute the Kamp divergence of the
+    locals from the last synced model, then branch — on-device, via a
+    ``lax.cond`` on the traced ``do_sync`` from ``gate_fn(div, delta)``
+    (the policy's ``traced_should_sync``, default ``div > delta``) —
+    between the synced state (aggregated params, fresh opt, advanced
+    reference) and the untouched local state (params/opt as trained,
+    reference unchanged). The cond means a quiet round skips the
+    aggregation COMPUTE (codec roundtrip, mean, opt re-init) too, not
+    just the wire accounting; ``rel`` is the Eq. 4 metric on synced
+    rounds and the divergence on quiet ones."""
+    if gate_fn is None:
+        gate_fn = _default_gate
+
+    def gfinalize(params, opt_state, sync_ref, delta, agg_weights=None):
+        div = divergence_traced(params, sync_ref)
+        do_sync = gate_fn(div, delta)
+
+        def sync_branch(operands):
+            params, opt_state = operands
+            averaged = aggregate_fn(params, agg_weights)
+            new_avg = averaging.unstack_participant(averaged, 0)
+            rel = relative_change_traced(new_avg, sync_ref)
+            fresh_opt = jax.vmap(opt.init)(averaged)
+            return averaged, fresh_opt, rel, new_avg
+
+        def skip_branch(operands):
+            params, opt_state = operands
+            return params, opt_state, div, sync_ref
+
+        out_p, out_o, rel, new_ref = jax.lax.cond(
+            do_sync, sync_branch, skip_branch, (params, opt_state))
+        return out_p, out_o, rel, div, do_sync, new_ref
+    return gfinalize
+
+
+def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
+                     spmd_axis_name=None, average_fn=None, aggregate_fn=None,
+                     gated=False, gate_fn=None, donate=True):
     """Build the single-executable round: epoch scan + aggregation + Eq. 4.
 
     loss_fn(params, batch) -> (loss, aux) for ONE participant.
     opt: optimizer triple (init/update) from ``repro.optim.optimizers``.
-    cfg: CoLearnConfig — supplies schedule kind, eta0, decay_rate.
-    total_epochs: ELR anneal denominator (default T0 * max_rounds).
+    lr_fn(sched, j, T_i, ge, total): the traced schedule (default
+        ``schedule.switch_lr``, the lax.switch combinator every built-in
+        ``api.LRSchedule`` shares).
     spmd_axis_name: e.g. "pod" to pin the participant vmap to a mesh axis.
     aggregate_fn(stacked, weights): the round-strategy aggregation (codec
         roundtrip + mixing, see ``repro.core.api``), traced into the same
@@ -243,56 +294,83 @@ def make_fused_round(loss_fn, opt, cfg, *, compress_fn=None,
         stacked params, default ``averaging.average_pjit``).
 
     Returns round_fn(stacked_params, opt_state, batches, global_epoch0,
-    agg_weights=None) -> (aggregated_params, fresh_opt_state, aux) with
-    aux = {losses (T,K), lrs (T,), rel (scalar), new_avg (unstacked slot-0
-    model)}. ``batches`` is a (T_i, K, n_batches, ...) pytree;
-    ``global_epoch0`` a traced int32 so ELR never retriggers compilation;
-    ``agg_weights`` the aggregator's traced (K, K) mixing matrix (None for
-    statically-known schemes like Eq. 2). stacked_params and opt_state are
-    donated.
-    """
-    total_epochs = _resolve_epochs(cfg, total_epochs)
-    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
-                                                 spmd_axis_name),
-                                   cfg, total_epochs)
-    finalize = _make_finalize(opt, as_aggregate_fn(aggregate_fn, compress_fn,
-                                                   average_fn))
+    sched, total, agg_weights=None) -> (aggregated_params, fresh_opt_state,
+    aux) with aux = {losses (T,K), lrs (T,), rel (scalar), new_avg
+    (unstacked slot-0 model)}. ``batches`` is a (T_i, K, n_batches, ...)
+    pytree; ``global_epoch0``/``sched``/``total`` are traced (an int32
+    offset, the schedule parameter pack, the int32 epoch budget) so
+    neither an ELR step, a per-round η^i, a budget update, nor a built-in
+    schedule swap ever retriggers compilation. ``agg_weights`` is the
+    aggregator's traced (K, K) mixing matrix (None for statically-known
+    schemes like Eq. 2). stacked_params and opt_state are donated.
 
-    def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                 agg_weights=None):
-        T_i = jax.tree.leaves(batches)[0].shape[0]
-        # round entry: every slot holds the shared model w̄^{i-1}
-        old_avg = averaging.unstack_participant(stacked_params, 0)
-        (params, opt_out), (losses, lrs) = scan_epochs(
-            stacked_params, opt_state, batches, 0, T_i, global_epoch0)
-        del opt_out  # paper: local opt state is discarded at aggregation
-        averaged, fresh_opt, rel, new_avg = finalize(params, old_avg,
-                                                     agg_weights)
-        return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
-                                     "rel": rel, "new_avg": new_avg}
+    ``gated=True`` (divergence-triggered sync, ``api.DivergenceTrigger``):
+    round_fn additionally takes ``(sync_ref, delta)`` after ``total`` —
+    the last synced shared model and the traced threshold — and aux grows
+    {div, synced}; on a quiet round (div <= delta) the returned state is
+    the *local* post-epoch params/opt and ``new_avg`` stays ``sync_ref``.
+    """
+    if lr_fn is None:
+        lr_fn = switch_lr
+    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
+                                                 spmd_axis_name), lr_fn)
+    agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
+
+    if gated:
+        gfinalize = _make_gated_finalize(opt, agg, gate_fn)
+
+        def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                     sched, total, sync_ref, delta, agg_weights=None):
+            T_i = jax.tree.leaves(batches)[0].shape[0]
+            (params, opt_out), (losses, lrs) = scan_epochs(
+                stacked_params, opt_state, batches, 0, T_i, global_epoch0,
+                sched, total)
+            out_p, out_o, rel, div, do_sync, new_ref = gfinalize(
+                params, opt_out, sync_ref, delta, agg_weights)
+            return out_p, out_o, {"losses": losses, "lrs": lrs, "rel": rel,
+                                  "div": div, "synced": do_sync,
+                                  "new_avg": new_ref}
+    else:
+        finalize = _make_finalize(opt, agg)
+
+        def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                     sched, total, agg_weights=None):
+            T_i = jax.tree.leaves(batches)[0].shape[0]
+            # round entry: every slot holds the shared model w̄^{i-1}
+            old_avg = averaging.unstack_participant(stacked_params, 0)
+            (params, opt_out), (losses, lrs) = scan_epochs(
+                stacked_params, opt_state, batches, 0, T_i, global_epoch0,
+                sched, total)
+            del opt_out  # paper: local opt state is discarded at aggregation
+            averaged, fresh_opt, rel, new_avg = finalize(params, old_avg,
+                                                         agg_weights)
+            return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
+                                         "rel": rel, "new_avg": new_avg}
 
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(round_fn, donate_argnums=donate_argnums)
 
 
-def make_fused_epochs(loss_fn, opt, cfg, *, total_epochs=None,
-                      spmd_axis_name=None, donate=True):
+def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
+                      donate=True):
     """Memory-bounded building block: a scan over ONE CHUNK of epochs.
 
-    Returns epochs_fn(stacked_params, opt_state, batches, j0, T_i, ge0)
-      -> (stacked_params, opt_state, losses (C,K), lrs (C,)).
-    j0/T_i/ge0 are traced, so the executable is shared across chunks and
-    across T_i doublings; only a distinct chunk length C recompiles.
+    Returns epochs_fn(stacked_params, opt_state, batches, j0, T_i, ge0,
+    sched, total) -> (stacked_params, opt_state, losses (C,K), lrs (C,)).
+    j0/T_i/ge0/sched/total are traced, so the executable is shared across
+    chunks, across T_i doublings, across budget updates, and across
+    built-in schedule swaps; only a distinct chunk length C recompiles.
     """
-    total_epochs = _resolve_epochs(cfg, total_epochs)
+    if lr_fn is None:
+        lr_fn = switch_lr
     scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
-                                                 spmd_axis_name),
-                                   cfg, total_epochs)
+                                                 spmd_axis_name), lr_fn)
 
     def epochs_fn(stacked_params, opt_state, batches, j0, T_i,
-                  global_epoch0):
+                  global_epoch0, sched, total):
         (params, ostate), (losses, lrs) = scan_epochs(
-            stacked_params, opt_state, batches, j0, T_i, global_epoch0)
+            stacked_params, opt_state, batches, j0, T_i, global_epoch0,
+            sched, total)
         return params, ostate, losses, lrs
 
     donate_argnums = (0, 1) if donate else ()
@@ -300,12 +378,21 @@ def make_fused_epochs(loss_fn, opt, cfg, *, total_epochs=None,
 
 
 def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
-                        aggregate_fn=None, donate=True):
+                        aggregate_fn=None, gated=False, gate_fn=None,
+                        donate=True):
     """End-of-round executable for the chunked path: aggregation + Eq. 4 +
     opt reset. finalize_fn(params, old_avg, agg_weights=None) ->
     (aggregated, fresh_opt, rel, new_avg); ``params`` is donated. The
     aggregation surface matches ``make_fused_round`` (aggregate_fn or the
-    legacy compress_fn/average_fn pair)."""
-    finalize = _make_finalize(opt, as_aggregate_fn(aggregate_fn, compress_fn,
-                                                   average_fn))
-    return jax.jit(finalize, donate_argnums=(0,) if donate else ())
+    legacy compress_fn/average_fn pair).
+
+    ``gated=True``: finalize_fn(params, opt_state, sync_ref, delta,
+    agg_weights=None) -> (params', opt', rel, div, synced, new_ref), the
+    divergence-gated select of ``make_fused_round(gated=True)`` (params
+    and opt_state donated)."""
+    agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
+    if gated:
+        return jax.jit(_make_gated_finalize(opt, agg, gate_fn),
+                       donate_argnums=(0, 1) if donate else ())
+    return jax.jit(_make_finalize(opt, agg),
+                   donate_argnums=(0,) if donate else ())

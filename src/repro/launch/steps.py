@@ -136,8 +136,9 @@ def make_average_step():
 def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
                           impl="ref", remat=True, mesh=None,
                           param_specs=None, codec=None, aggregator=None,
-                          compress=None, compress_block=256,
-                          compress_impl="ref"):
+                          schedule=None, round_index=0,
+                          expose_schedule_args=False, compress=None,
+                          compress_block=256, compress_impl="ref"):
     """Pod-path fused round: the whole communication round as one program.
 
     Shares ``repro.core.engine`` with the simulation path, but pins the
@@ -145,19 +146,37 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     ``mesh``/``param_specs`` are given — Eq. 2 to an explicit shard_map psum
     over that axis instead of an inferred all-reduce.
 
-    codec / aggregator take ``repro.core.api`` strategy objects or registry
-    names. Under ``FullAverage`` (the default) the codec keeps its pod fast
-    path: ``FlatFusedInt8`` runs each pod's int8 roundtrip locally and ONE
-    psum over the ``pod`` axis aggregates the dequantized block payloads of
-    one contiguous buffer, instead of L per-leaf collectives;
-    ``LeafwiseInt8`` keeps the per-leaf reference roundtrip in front of the
-    shard_map average. ``compress=None|"leafwise"|"fused"`` remains the
-    legacy spelling of the codec choice (mutually exclusive with codec=).
+    codec / aggregator / schedule take ``repro.core.api`` strategy objects
+    or registry names (schedule=None resolves ``ccfg.schedule``). Under
+    ``FullAverage`` (the default) the codec keeps its pod fast path:
+    ``FlatFusedInt8`` runs each pod's int8 roundtrip locally and ONE psum
+    over the ``pod`` axis aggregates the dequantized block payloads of one
+    contiguous buffer, instead of L per-leaf collectives; ``LeafwiseInt8``
+    keeps the per-leaf reference roundtrip in front of the shard_map
+    average. ``compress=None|"leafwise"|"fused"`` remains the legacy
+    spelling of the codec choice (mutually exclusive with codec=).
+
+    The schedule rides into the engine as traced data (``lr_fn`` +
+    parameter pack, see ``repro.core.engine``). By default this step
+    closes the pack for ``round_index`` plus the static ``T0 * max_rounds``
+    budget over the returned fn as baked constants — the compact
+    signature below, right for compile-oriented callers (the dry-run) and
+    for constant-η schedules, but a schedule whose parameters move per
+    round (warmup, policy-aware budget) would be frozen at ``round_index``.
+    A driver stepping many rounds should instead pass
+    ``expose_schedule_args=True`` and feed
+    ``schedule.device_round_params(i)`` + the budget per round: the same
+    ONE compiled executable serves every round (do NOT rebuild this step
+    per round — each build returns a fresh ``jax.jit`` with an empty
+    cache, i.e. a full recompile).
 
     Returns round_fn(stacked_params, opt_state, batches, global_epoch0)
     for weight-free aggregators (Eq. 2), or round_fn(..., agg_weights) when
     the aggregator mixes with a per-round (K, K) matrix (partial
     participation / gossip — build it with ``aggregator.mixing_matrix``).
+    With ``expose_schedule_args=True`` the signature grows to
+    round_fn(stacked_params, opt_state, batches, global_epoch0, sched,
+    total_epochs[, agg_weights]) with ``sched``/``total_epochs`` traced.
     ``batches`` is the (T_i, K, n_batches, ...) stacked-epoch batch dict.
     """
     from repro.core import api, engine as engine_mod
@@ -175,26 +194,45 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
         codec = compress
     codec = api.get_codec(codec, block=compress_block, impl=compress_impl)
     aggregator = api.get_aggregator(aggregator)
+    schedule = api.get_schedule(schedule, ccfg)
     aggregate_fn = aggregator.make_aggregate_fn(
         codec, mesh=mesh, param_specs=param_specs)
 
     fused = engine_mod.make_fused_round(
-        loss_fn, _get_opt(optimizer), ccfg, spmd_axis_name="pod",
-        aggregate_fn=aggregate_fn, donate=False)
+        loss_fn, _get_opt(optimizer), lr_fn=api.traced_body(schedule),
+        spmd_axis_name="pod", aggregate_fn=aggregate_fn, donate=False)
 
     # the engine's vmap consumes the pod axis; in-model "dp" hints must
     # then resolve to data only (same contract as the colearn step)
+    if expose_schedule_args:
+        if aggregator.uses_weights:
+            def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                         sched, total_epochs, agg_weights):
+                with batch_axes(("data",)):
+                    return fused(stacked_params, opt_state, batches,
+                                 global_epoch0, sched, total_epochs,
+                                 agg_weights)
+        else:
+            def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                         sched, total_epochs):
+                with batch_axes(("data",)):
+                    return fused(stacked_params, opt_state, batches,
+                                 global_epoch0, sched, total_epochs)
+        return round_fn
+
+    sched = schedule.device_round_params(round_index)
+    total = jnp.int32(max(ccfg.T0 * ccfg.max_rounds, 1))
     if aggregator.uses_weights:
         def round_fn(stacked_params, opt_state, batches, global_epoch0,
                      agg_weights):
             with batch_axes(("data",)):
                 return fused(stacked_params, opt_state, batches,
-                             global_epoch0, agg_weights)
+                             global_epoch0, sched, total, agg_weights)
     else:
         def round_fn(stacked_params, opt_state, batches, global_epoch0):
             with batch_axes(("data",)):
                 return fused(stacked_params, opt_state, batches,
-                             global_epoch0)
+                             global_epoch0, sched, total)
     return round_fn
 
 

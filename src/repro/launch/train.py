@@ -13,7 +13,11 @@ Round strategy (see repro.core.api): --codec picks the wire format of the
 uploads (exact f32 | leafwise int8 | fused flat-buffer), --aggregator picks
 who averages what (full Eq. 2 | FedAvg-style partial participation with
 --partial-m sampled uploads per round | ring gossip), --engine picks the
-round executor. --compress remains the legacy spelling of --codec.
+round executor, --lr-schedule the Eq. 3 family member (clr | elr |
+warmup_clr | cosine; defaults to the legacy --schedule flag), and
+--sync-policy the Eq. 4 rule (ile | fle | divtrigger with --trigger-delta;
+defaults to the legacy --epochs-rule flag). --compress remains the legacy
+spelling of --codec, resolved through the api.CODECS registry aliases.
 """
 from __future__ import annotations
 
@@ -66,8 +70,24 @@ def main(argv=None):
     ap.add_argument("--t0", type=int, default=2)
     ap.add_argument("--eta0", type=float, default=0.01)
     ap.add_argument("--epsilon", type=float, default=0.05)
-    ap.add_argument("--schedule", default="clr", choices=["clr", "elr"])
-    ap.add_argument("--epochs-rule", default="ile", choices=["ile", "fle"])
+    ap.add_argument("--schedule", default="clr", choices=["clr", "elr"],
+                    help="legacy spelling of --lr-schedule")
+    ap.add_argument("--epochs-rule", default="ile", choices=["ile", "fle"],
+                    help="legacy spelling of --sync-policy")
+    ap.add_argument("--lr-schedule", default="",
+                    choices=["", "clr", "elr", "warmup_clr", "cosine"],
+                    help="Eq. 3 family member (api.SCHEDULES): clr = paper "
+                         "per-round restart; elr = global anneal; "
+                         "warmup_clr = clr with eta ramped over the first "
+                         "rounds; cosine = per-round cosine anneal")
+    ap.add_argument("--sync-policy", default="",
+                    choices=["", "ile", "fle", "divtrigger"],
+                    help="Eq. 4 rule (api.SYNC_POLICIES): ile = paper "
+                         "doubling; fle = fixed T; divtrigger = Kamp-style "
+                         "divergence-triggered sync (quiet rounds skip the "
+                         "wire and bill 0 bytes)")
+    ap.add_argument("--trigger-delta", type=float, default=0.05,
+                    help="divergence threshold for --sync-policy divtrigger")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -99,16 +119,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.codec and args.compress != "none":
         ap.error("pass --codec or the legacy --compress, not both")
-    codec = args.codec or {"int8": "leafwise", "fused": "fused",
-                           "none": "exact"}[args.compress]
+    # the legacy --compress spellings ("none"/"int8"/"fused") are registry
+    # aliases in api.CODECS, so both flags resolve through the one registry
+    codec = api.get_codec(args.codec or args.compress)
 
     cfg = get_smoke_config(args.arch)
     K = args.participants
-    # record the RESOLVED codec so checkpointed configs describe the run
     ccfg = CoLearnConfig(
         n_participants=K, T0=args.t0, eta0=args.eta0, epsilon=args.epsilon,
         schedule=args.schedule, epochs_rule=args.epochs_rule,
-        max_rounds=args.rounds, compress=codec)
+        max_rounds=args.rounds)
 
     data = build_data(cfg, K, args.batch_size, args.seq_len,
                       args.n_examples, args.seed)
@@ -121,16 +141,22 @@ def main(argv=None):
     aggregator = (api.PartialParticipation(m=args.partial_m, seed=args.seed)
                   if args.aggregator == "partial"
                   else api.get_aggregator(args.aggregator))
+    # --lr-schedule/--sync-policy override the legacy string flags; either
+    # way the objects come out of the same registries
+    schedule = api.get_schedule(args.lr_schedule or None, ccfg)
+    sync_policy = api.get_sync_policy(args.sync_policy or None, ccfg,
+                                      delta=args.trigger_delta)
     learner = CoLearner(ccfg, loss_fn, optimizer_name=args.optimizer,
                         codec=codec, aggregator=aggregator,
-                        round_engine=args.engine)
+                        round_engine=args.engine, schedule=schedule,
+                        sync_policy=sync_policy)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)
     print(f"co-learning {cfg.name}: K={K} params="
           f"{tr.count_params(params):,} rounds={args.rounds} T0={args.t0} "
-          f"{args.schedule}+{args.epochs_rule} engine={args.engine} "
-          f"codec={learner.codec.name} aggregator={learner.aggregator.name}",
-          flush=True)
+          f"{learner.schedule.name}+{learner.sync_policy.name} "
+          f"engine={args.engine} codec={learner.codec.name} "
+          f"aggregator={learner.aggregator.name}", flush=True)
 
     for i in range(args.rounds):
         t0 = time.time()
@@ -144,11 +170,12 @@ def main(argv=None):
         state = learner.run_round(state, epoch_batches)
         log = state["log"][-1]
         ev = eval_loss(learner.shared_model(state), cfg, ex, ey)
+        sync_s = "" if log.synced else " SKIP(sync)"
         print(f"round {log.round}: T={log.T} lr {log.lr_first:.4f}->"
               f"{log.lr_last:.4f} rel_dw={log.rel_change:.4f} "
               f"local_loss={np.mean(log.local_losses):.4f} eval={ev:.4f} "
-              f"comm={log.comm_bytes/2**20:.1f}MiB next_T={state['ctrl'].T} "
-              f"({time.time()-t0:.1f}s)", flush=True)
+              f"comm={log.comm_bytes/2**20:.1f}MiB next_T={state['ctrl'].T}"
+              f"{sync_s} ({time.time()-t0:.1f}s)", flush=True)
 
     if args.checkpoint:
         save_round_state(args.checkpoint, state)

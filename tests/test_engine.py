@@ -179,7 +179,9 @@ def test_ile_doubling_identical_under_traced_schedule():
         assert state["ctrl"].T == 4, eng
     hp = out["python"][1]["ctrl"].history
     hf = out["fused"][1]["ctrl"].history
-    assert [t for _, t in hp] == [t for _, t in hf]
+    # history entries are (round, rel_change, next_T) triples
+    assert [i for i, _, _ in hp] == list(range(len(hp)))
+    assert [t for _, _, t in hp] == [t for _, _, t in hf]
 
 
 def test_clr_restart_traced_in_scan():

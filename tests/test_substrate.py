@@ -109,13 +109,15 @@ def test_round_state_roundtrip(tmp_path):
     state = learner.init({"w": jnp.ones((2, 2))})
     state["round"] = 4
     state["global_epoch"] = 12
-    state["ctrl"] = state["ctrl"].update(0.001)      # doubles T
+    # the sync policy (here the default ILE) owns the state transition
+    state["ctrl"] = learner.sync_policy.update(state["ctrl"], 3, 0.001)
     path = str(tmp_path / "round")
     save_round_state(path, state)
     fresh = learner.init({"w": jnp.zeros((2, 2))})
     restored = restore_round_state(path, fresh)
     assert restored["round"] == 4
     assert restored["ctrl"].T == 6
+    assert restored["ctrl"].history == ((3, 0.001, 6),)
     np.testing.assert_allclose(restored["params"]["w"], state["params"]["w"])
 
 
