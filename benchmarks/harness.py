@@ -10,11 +10,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CoLearnConfig
+from repro.core import api
 from repro.core.colearn import CoLearner
 from repro.core.ensemble import ensemble_accuracy
+from repro.data import partition as part_mod
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
 from repro.models.layers import softmax_xent
+
+
+def build_participant_data(train, K, batch_size, seed, *, partition="iid",
+                           dirichlet_alpha=1.0, sizes=None):
+    """Shard (x, y) under a data scenario -> ``ParticipantData``.
+
+    partition: "iid" (the paper's random split, remainder round-robin) |
+    "dirichlet" (label-skew non-IID over y, ``dirichlet_alpha``) |
+    "sizes" (quantity skew, ``sizes`` counts/fractions). Dispatch is the
+    shared ``repro.data.partition.scenario_indices`` (same semantics as
+    ``launch/train.py``).
+    """
+    x, y = train
+    idx = part_mod.scenario_indices(
+        len(x), K, seed, scenario=partition, labels=y,
+        dirichlet_alpha=dirichlet_alpha, sizes=sizes, min_size=batch_size)
+    shards = part_mod.shard_by_indices([x, y], idx)
+    return ParticipantData(shards, batch_size, seed)
 
 
 def cls_loss(apply_fn):
@@ -39,7 +59,8 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 eta0=0.02, epsilon=0.02, schedule="clr", epochs_rule="ile",
                 batch_size=32, seed=0, steps_cap=0, engine="python",
                 compress=None, codec=None, aggregator=None,
-                lr_schedule=None, sync_policy=None):
+                lr_schedule=None, sync_policy=None, partition="iid",
+                dirichlet_alpha=1.0, sizes=None, weighted=False):
     """Returns dict with per-round accuracy, controller history, comm stats.
 
     engine: "python" (reference per-epoch loop) or "fused" (one compiled
@@ -51,20 +72,38 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     as None resolve the schedule/epochs_rule strings through the same
     registries. compress is the legacy alias for codec (None | "leafwise"
     | "fused").
+
+    Data scenario: ``partition`` / ``dirichlet_alpha`` / ``sizes`` pick the
+    split (see ``build_participant_data``); ``weighted=True`` switches
+    Eq. 2 to the example-count-weighted FedAvg average
+    (``FullAverage(weights=shard sizes)``; default aggregator only).
+    Ragged shards automatically thread their validity mask into the
+    engines, and the shard sizes are handed to the learner so partial
+    participation weights by them.
     """
     if compress is not None:
         if codec is not None:
             raise ValueError("pass codec= or the legacy compress=, not both")
         codec = compress
-    x, y = train
-    shards = partition_arrays([x, y], K, seed)
-    data = ParticipantData(shards, batch_size, seed)
+    data = build_participant_data(train, K, batch_size, seed,
+                                  partition=partition,
+                                  dirichlet_alpha=dirichlet_alpha,
+                                  sizes=sizes)
+    if weighted:
+        if aggregator is not None:
+            raise ValueError("weighted=True builds the FullAverage "
+                             "aggregator; pass one or the other")
+        aggregator = api.FullAverage(weights=data.sizes)
+    batch_mask = data.batch_mask if data.ragged else None
+    if batch_mask is not None and steps_cap:
+        batch_mask = batch_mask[:, :steps_cap]
     ccfg = CoLearnConfig(n_participants=K, T0=T0, eta0=eta0, epsilon=epsilon,
                          schedule=schedule, epochs_rule=epochs_rule,
                          max_rounds=rounds)
     learner = CoLearner(ccfg, cls_loss(apply_fn), codec=codec,
                         aggregator=aggregator, round_engine=engine,
-                        schedule=lr_schedule, sync_policy=sync_policy)
+                        schedule=lr_schedule, sync_policy=sync_policy,
+                        shard_sizes=data.sizes, batch_mask=batch_mask)
     params = init_fn(jax.random.PRNGKey(seed))
     state = learner.init(params)
     accs, Ts, times = [], [], []
@@ -85,6 +124,7 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     # 0 under a divergence-gated policy); totals cover the whole run
     per_round = next((l.comm_bytes for l in state["log"] if l.synced), 0)
     return {"acc": accs, "T": Ts, "round_s": times,
+            "shard_sizes": data.sizes,
             "comm_bytes": per_round,
             "total_comm_bytes": sum(l.comm_bytes for l in state["log"]),
             "synced_rounds": sum(1 for l in state["log"] if l.synced),

@@ -196,9 +196,36 @@ def check_retrace():
     # the warmup actually ramped (the traced eta^i changed per round)
     lrs = [l.lr_first for l in state2["log"][:3]]
     assert lrs[0] < lrs[1] < lrs[2], lrs
+
+    # 3) heterogeneity scenario: the ragged batch mask AND the example-
+    #    count weight matrix ride into the masked/weighted executables as
+    #    traced data, so an ILE doubling (chunked path, same C) still
+    #    compiles each program exactly once
+    import numpy as _np
+    x3 = jax.random.normal(k, (2, 2, 2, 4))       # ragged: 2 vs 1 batches
+    batches3 = (x3, x3 @ jnp.ones((4, 1)))
+    cfg3 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                         epochs_rule="ile", max_rounds=8)
+    learner3 = CoLearner(cfg3, zero_loss,
+                         round_engine=api.FusedEngine(chunk=2),
+                         aggregator=api.FullAverage(weights=(3.0, 1.0)),
+                         batch_mask=_np.array([[True, True],
+                                               [True, False]]))
+    state3 = learner3.init(params)
+    for _ in range(4):
+        state3 = learner3.run_round(state3, lambda i, j: batches3)
+    assert [l.T for l in state3["log"]] == [2, 2, 4, 8], \
+        [l.T for l in state3["log"]]
+    n_epochs3 = learner3._fused_epochs._cache_size()
+    n_final3 = learner3._fused_finalize._cache_size()
+    assert n_epochs3 == 1, \
+        f"masked chunk executable retraced: {n_epochs3} compiles"
+    assert n_final3 == 1, \
+        f"weighted finalize retraced: {n_final3} compiles"
+
     print("check-retrace OK: chunk/finalize/round executables compiled "
-          "once across an ILE doubling, 4 schedule swaps, and a warmup "
-          "ramp")
+          "once across an ILE doubling, 4 schedule swaps, a warmup "
+          "ramp, and the masked+weighted heterogeneity scenario")
     return 0
 
 

@@ -1,0 +1,49 @@
+"""Scenario: heterogeneous data across the data centers (ISSUE 5).
+
+The paper trains on equal IID shards; this example exercises the claim it
+actually makes — model averaging "on different types of data" — along both
+heterogeneity axes:
+
+1. quantity skew — one data center holds 4x the data of the smallest
+   (``quantity_skew``). The ragged pipeline pads to the longest shard and
+   masks the padding (no shard is clamped, no example dropped), and
+   Eq. 2 averaging is example-count weighted (FedAvg, 1602.05629).
+2. label skew — each center's class mixture ~ Dirichlet(alpha)
+   (``dirichlet_partition``); alpha=0.1 is near single-class shards, the
+   regime where decentralized averaging is actually stressed (D²,
+   1803.07068).
+
+Run:  PYTHONPATH=src python examples/heterogeneous_shards.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks.harness import run_colearn
+from repro.data.synthetic import image_like
+from repro.models.convnets import IMAGE_MODELS
+
+init_fn, apply_fn = IMAGE_MODELS["resnet_tiny"]
+train = image_like(seed=0, n=2000)
+test = image_like(seed=1000, n=800)
+
+print("== quantity skew (sizes 4:2:1:1, weighted vs uniform Eq. 2) ==")
+for weighted in (False, True):
+    r = run_colearn(init_fn, apply_fn, train, test, K=4, rounds=3, T0=1,
+                    engine="fused", partition="sizes",
+                    sizes=[0.5, 0.25, 0.125, 0.125], weighted=weighted)
+    print(f"  weighted={weighted}: shards={list(r['shard_sizes'])} "
+          f"acc/round={[f'{a:.3f}' for a in r['acc']]}")
+
+print("== label skew (Dirichlet alpha, weighted Eq. 2) ==")
+for alpha in (0.1, 1.0):
+    r = run_colearn(init_fn, apply_fn, train, test, K=4, rounds=3, T0=1,
+                    engine="fused", partition="dirichlet",
+                    dirichlet_alpha=alpha, weighted=True)
+    print(f"  alpha={alpha}: shards={list(r['shard_sizes'])} "
+          f"acc/round={[f'{a:.3f}' for a in r['acc']]}")
+
+print("every example trained: shard sizes above always sum to",
+      np.sum(r["shard_sizes"]))

@@ -63,21 +63,28 @@ def restore_pytree(path: str, like):
 
 
 def save_round_state(path: str, state):
-    """Persist the co-learning server state (params + sync-policy state).
+    """Persist the co-learning server state (params + opt + sync-policy
+    state).
 
     ``prev_avg`` — the last *synced* shared model — is persisted too: under
     a divergence-gated sync policy the participant slots may hold divergent
     local models after a quiet round, so the reference cannot be recovered
-    from ``params`` alone.
+    from ``params`` alone. The per-participant optimizer pytree
+    (``state["opt"]``) is likewise persisted: it is non-trivial whenever a
+    checkpoint lands mid-round or after a quiet round (local momentum /
+    Adam moments still live), and dropping it would silently reset the
+    optimizer trajectory on restore.
     """
     save_pytree(path + ".params.npz", state["params"])
+    save_pytree(path + ".opt.npz", state["opt"])
     if state.get("prev_avg") is not None:
         save_pytree(path + ".prev_avg.npz", state["prev_avg"])
     ctrl = state["ctrl"]
     meta = {"round": state["round"], "global_epoch": state["global_epoch"],
             "T": ctrl.T, "history": list(ctrl.history),
             "skipped": list(getattr(ctrl, "skipped", ())),
-            "has_prev_avg": state.get("prev_avg") is not None}
+            "has_prev_avg": state.get("prev_avg") is not None,
+            "has_opt": True}
     with open(path + ".meta.json", "w") as f:
         json.dump(meta, f)
 
@@ -87,6 +94,12 @@ def restore_round_state(path: str, state):
     state["params"] = restore_pytree(path + ".params.npz", state["params"])
     with open(path + ".meta.json") as f:
         meta = json.load(f)
+    if meta.get("has_opt"):
+        state["opt"] = restore_pytree(path + ".opt.npz", state["opt"])
+    # legacy checkpoints (pre-opt-persistence) carry no opt pytree: keep
+    # the caller's ``state["opt"]`` — ``CoLearner.init``'s ``opt.init``
+    # (the documented fallback; momentum restarts from zero, exactly the
+    # old restore behavior, now explicit instead of silent-for-everyone)
     state["round"] = meta["round"]
     state["global_epoch"] = meta["global_epoch"]
     # the policy itself lives on the learner; checkpoints carry its state.

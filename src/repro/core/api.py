@@ -130,11 +130,14 @@ class WireCodec(abc.ABC):
     def wire_bytes(self, stacked) -> int:
         """Exact bytes ONE participant uploads for this stacked tree."""
 
-    def make_fused_mean(self, mesh=None, axis="pod"):
-        """Optional codec-owned Eq. 2 fast path (wire roundtrip + uniform
-        mean as one fused pass). ``None`` means the aggregator composes
+    def make_fused_mean(self, mesh=None, axis="pod", weighted=False):
+        """Optional codec-owned Eq. 2 fast path (wire roundtrip + mean as
+        one fused pass). ``None`` means the aggregator composes
         ``roundtrip`` with a generic mean instead. ``FullAverage`` consults
-        this so the flat-buffer kernel keeps owning its pod shard_map."""
+        this so the flat-buffer kernel keeps owning its pod shard_map.
+        ``weighted=True`` asks for the example-count-weighted variant —
+        ``fn(stacked, wrow)`` with a traced normalized length-K weight row
+        (FedAvg's unequal-shard generalization of Eq. 2)."""
         return None
 
 
@@ -230,9 +233,10 @@ class FlatFusedInt8(WireCodec):
     def wire_bytes(self, stacked) -> int:
         return compression.flat_compressed_bytes(stacked, block=self.block)
 
-    def make_fused_mean(self, mesh=None, axis="pod"):
+    def make_fused_mean(self, mesh=None, axis="pod", weighted=False):
         return engine_mod.make_fused_compressed_average(
-            block=self.block, impl=self.impl, mesh=mesh, axis=axis)
+            block=self.block, impl=self.impl, mesh=mesh, axis=axis,
+            weighted=weighted)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +286,49 @@ def _check_one_row_per_pod(aggregator, stacked, mesh, axis):
             f"pod-path {aggregator.name!r} aggregation requires one "
             f"participant row per pod: params have K={k_rows}, mesh axis "
             f"{axis!r} has {k_pods} pods")
+
+
+def _make_weighted_psum_aggregate(aggregator, codec, mesh, param_specs,
+                                  axis):
+    """Pod-path broadcast-weighted mean, shared by the aggregators whose
+    mixing matrix has identical rows (weighted ``FullAverage``,
+    ``PartialParticipation``): every pod downloads the same weighted mean,
+    so the pod path psums each pod's weight-scaled, codec-roundtripped
+    local row (one psum per leaf, f32 payloads, combinable by XLA) —
+    O(model) cross-pod traffic and never a K-way gather; the single-buffer
+    int8 collective remains the flat-codec weighted/uniform fast path."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import compat
+
+    def aggregate(stacked, weights):
+        _check_one_row_per_pod(aggregator, stacked, mesh, axis)
+
+        def local_mix(local, wrow):
+            rt = codec.roundtrip(local)         # local row only: the upload
+            k = jax.lax.axis_index(axis)
+
+            def one(t):
+                s = jax.lax.psum(wrow[k] * t.astype(jnp.float32), axis)
+                return s.astype(t.dtype)
+            return jax.tree.map(one, rt)
+
+        return compat.shard_map(
+            local_mix, mesh=mesh, in_specs=(param_specs, P()),
+            out_specs=param_specs, check_vma=False)(stacked, weights[0])
+    return aggregate
+
+
+def normalized_weights(weights, K: int) -> np.ndarray:
+    """Validate per-participant averaging weights (e.g. shard example
+    counts) and return them normalized to sum 1 as a length-K f64 array."""
+    w = np.asarray(weights, np.float64)
+    if w.shape != (K,):
+        raise ValueError(f"weights must have length K={K}; got {w.shape}")
+    if not np.isfinite(w).all() or (w < 0).any():
+        raise ValueError(f"weights must be finite and >= 0; got {w}")
+    if not w.sum() > 0:
+        raise ValueError("weights must not all be zero")
+    return w / w.sum()
 
 
 class Aggregator(abc.ABC):
@@ -341,20 +388,52 @@ class Aggregator(abc.ABC):
 @dataclasses.dataclass(frozen=True)
 class FullAverage(Aggregator):
     """Paper Eq. 2: every participant uploads, the server averages, everyone
-    downloads the shared model. Routed through the codec's fused-mean
-    kernel when it has one (flat-buffer path: one quant->avg->dequant pass;
-    on a pod mesh one shard_map psum of one buffer), else through
-    ``averaging.average_pjit`` / ``make_average_shard_map`` over the
-    codec-roundtripped params — bit-for-bit the PR-2 behavior."""
+    downloads the shared model.
 
+    ``weights=None`` (the default) is the paper's uniform mean, routed
+    through the codec's fused-mean kernel when it has one (flat-buffer
+    path: one quant->avg->dequant pass; on a pod mesh one shard_map psum of
+    one buffer), else through ``averaging.average_pjit`` /
+    ``make_average_shard_map`` over the codec-roundtripped params —
+    bit-for-bit the PR-2 behavior.
+
+    ``weights=(n_1, ..., n_K)`` — per-participant example counts (any
+    nonnegative weights; normalized internally) — is FedAvg's
+    generalization of Eq. 2 to unequal shards (McMahan et al., 1602.05629):
+    w̄ = Σ_k (n_k/n) w_k. The weight row rides into the round executables
+    as a traced mixing-matrix row (``mix_participants`` plumbing), the
+    flat-buffer codec keeps a fused weighted-mean pass
+    (``make_fused_compressed_average(weighted=True)``), and the pod path
+    psums the weight-scaled local rows.
+    """
+
+    weights: Optional[tuple] = None
     name = "full"
-    uses_weights = False
+
+    @property
+    def uses_weights(self):
+        # uniform Eq. 2 is statically known (no weight transfer, fused
+        # kernel fast path); explicit weights ride in traced per round
+        return self.weights is not None
 
     def mixing_matrix(self, round_index, K):
-        return np.full((K, K), 1.0 / K, np.float32)
+        if self.weights is None:
+            return np.full((K, K), 1.0 / K, np.float32)
+        w = normalized_weights(self.weights, K)
+        # every row identical: all K download the same weighted mean
+        return np.broadcast_to(w, (K, K)).astype(np.float32)
 
     def make_aggregate_fn(self, codec, *, mesh=None, param_specs=None,
                           axis="pod"):
+        if self.weights is not None:
+            fused = codec.make_fused_mean(mesh=mesh, axis=axis,
+                                          weighted=True)
+            if fused is not None:
+                return lambda stacked, weights: fused(stacked, weights[0])
+            if mesh is not None and param_specs is not None:
+                return _make_weighted_psum_aggregate(
+                    self, codec, mesh, param_specs, axis)
+            return self._make_host_aggregate_fn(codec)
         fused = codec.make_fused_mean(mesh=mesh, axis=axis)
         if fused is not None:
             return lambda stacked, weights=None: fused(stacked)
@@ -373,13 +452,17 @@ class FullAverage(Aggregator):
 class PartialParticipation(Aggregator):
     """FedAvg-style partial participation (McMahan et al., 1602.05629):
     each round samples ``m <= K`` participants without replacement and the
-    new shared model is their shard-size-weighted average, broadcast back
-    to every participant (all K keep training locally; only the sampled
-    uploads cross the WAN).
+    new shared model is their weighted average, broadcast back to every
+    participant (all K keep training locally; only the sampled uploads
+    cross the WAN).
 
-    ``weights``: optional length-K per-participant weights (shard sizes);
-    uniform when omitted. Sampling is deterministic in (seed, round) so the
-    python and fused engines see identical rounds.
+    ``weights``: optional length-K per-participant weights — pass the shard
+    example counts for FedAvg's shard-size-weighted average. When omitted
+    the average falls back to UNIFORM over the sampled participants (the
+    equal-shard special case); ``CoLearner(shard_sizes=...)`` auto-wires
+    the shard sizes in, so a learner that knows its data never silently
+    uses the uniform fallback on unequal shards. Sampling is deterministic
+    in (seed, round) so the python and fused engines see identical rounds.
     """
 
     m: int = 2
@@ -414,30 +497,10 @@ class PartialParticipation(Aggregator):
 
     def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
         # rows of the mixing matrix are identical (everyone downloads the
-        # same weighted mean), so the pod path psums each pod's weight-
-        # scaled, codec-roundtripped local row (one psum per leaf, f32
-        # payloads, combinable by XLA) — O(model) cross-pod traffic and
-        # never a K-way gather; the single-buffer int8 collective remains
-        # the FullAverage x FlatFusedInt8 fast path
-        from jax.sharding import PartitionSpec as P
-        from repro.sharding import compat
-
-        def aggregate(stacked, weights):
-            _check_one_row_per_pod(self, stacked, mesh, axis)
-
-            def local_mix(local, wrow):
-                rt = codec.roundtrip(local)     # local row only: the upload
-                k = jax.lax.axis_index(axis)
-
-                def one(t):
-                    s = jax.lax.psum(wrow[k] * t.astype(jnp.float32), axis)
-                    return s.astype(t.dtype)
-                return jax.tree.map(one, rt)
-
-            return compat.shard_map(
-                local_mix, mesh=mesh, in_specs=(param_specs, P()),
-                out_specs=param_specs, check_vma=False)(stacked, weights[0])
-        return aggregate
+        # same weighted mean), so the broadcast-weighted psum specialization
+        # applies — shared with weighted FullAverage
+        return _make_weighted_psum_aggregate(self, codec, mesh, param_specs,
+                                             axis)
 
     def comm_bytes(self, codec, stacked, round_index):
         K = jax.tree.leaves(stacked)[0].shape[0]
@@ -834,13 +897,15 @@ class _PythonRunner:
         ge0 = state["global_epoch"]
         total = learner.epochs_budget(state)
         sync_ref = learner._sync_ref(state)
+        mask = learner.batch_mask
         lrs, losses = [], []
         for j in range(T_i):
             lr = float(learner.schedule.lr(i, j, T_i, ge0 + j, total))
             lrs.append(lr)
             batches = epoch_batches_fn(i, j)
+            args = (batches, lr) if mask is None else (batches, lr, mask)
             params, opt, l = learner._jit_epoch(
-                state["params"], state["opt"], batches, lr)
+                state["params"], state["opt"], *args)
             state["params"], state["opt"] = params, opt
             losses.append(jax.device_get(l))
 
@@ -873,6 +938,7 @@ class _FusedRunner:
         self.learner = learner
         self.chunk = chunk
         self._gated = learner.sync_policy.divergence_gated
+        self._masked = learner.batch_mask is not None
         # the traced schedule body / sync gate the executables were
         # compiled against; every built-in LRSchedule shares
         # schedule.switch_lr (and built-in policies the default gate), so
@@ -884,9 +950,10 @@ class _FusedRunner:
         self._round = engine_mod.make_fused_round(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
             aggregate_fn=learner._aggregate_fn, gated=self._gated,
-            gate_fn=gate_fn)
+            gate_fn=gate_fn, masked=self._masked)
         self._epochs = engine_mod.make_fused_epochs(
-            learner.loss_fn, learner.opt, lr_fn=self._traced_lr)
+            learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
+            masked=self._masked)
         self._finalize = engine_mod.make_fused_finalize(
             learner.opt, aggregate_fn=learner._aggregate_fn,
             gated=self._gated, gate_fn=gate_fn)
@@ -918,6 +985,9 @@ class _FusedRunner:
             sync_ref = learner._sync_ref(state)
             delta = jnp.float32(learner.sync_policy.delta)
         div_dev, sync_dev = None, True
+        # the ragged-shard validity mask rides in traced right after the
+        # staged batches (absent entirely on the unmasked executables)
+        mask_args = (learner.batch_mask,) if self._masked else ()
         # state["params"]/["opt"] are reassigned immediately after every
         # donating call below, so an exception mid-round (e.g. from
         # epoch_batches_fn) can never leave state holding deleted buffers.
@@ -926,12 +996,12 @@ class _FusedRunner:
                 [epoch_batches_fn(i, j) for j in range(T_i)])
             if gated:
                 out_p, out_o, aux = self._round(
-                    state["params"], state["opt"], batches, ge0, sched,
-                    total, sync_ref, delta, agg_w)
+                    state["params"], state["opt"], batches, *mask_args,
+                    ge0, sched, total, sync_ref, delta, agg_w)
             else:
                 out_p, out_o, aux = self._round(
-                    state["params"], state["opt"], batches, ge0, sched,
-                    total, agg_w)
+                    state["params"], state["opt"], batches, *mask_args,
+                    ge0, sched, total, agg_w)
             state["params"], state["opt"] = out_p, out_o
             new_avg = aux["new_avg"]
             # the round's single host sync (scalars/loss curves only — the
@@ -954,8 +1024,8 @@ class _FusedRunner:
                 batches = engine_mod.stack_epoch_batches(
                     [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
                 params, opt_st, l, r = self._epochs(
-                    state["params"], state["opt"], batches, jnp.int32(j0),
-                    jnp.int32(T_i), ge0, sched, total)
+                    state["params"], state["opt"], batches, *mask_args,
+                    jnp.int32(j0), jnp.int32(T_i), ge0, sched, total)
                 state["params"], state["opt"] = params, opt_st
                 lparts.append(l)
                 rparts.append(r)

@@ -91,6 +91,17 @@ class CoLearner:
     round_engine: Any = None                  # RoundEngine | name | None
     schedule: Any = None                      # LRSchedule | name | None
     sync_policy: Any = None                   # SyncPolicy | name | None
+    #: per-participant example counts (``ParticipantData.sizes``). When
+    #: given, a PartialParticipation aggregator with no explicit weights is
+    #: auto-wired to the FedAvg shard-size weighting — the learner never
+    #: silently falls back to a uniform average on unequal shards.
+    shard_sizes: Any = None
+    #: (K, n_batches) bool validity mask for ragged shards
+    #: (``ParticipantData.batch_mask``). None = equal shards, the classic
+    #: bit-compatible unmasked path; when given, both engines thread it
+    #: through the epoch bodies as traced data (masked step = identity
+    #: carry), so no shard is clamped to the global minimum length.
+    batch_mask: Any = None
 
     def __post_init__(self):
         self.codec = api.get_codec(self.codec)
@@ -100,12 +111,33 @@ class CoLearner:
         # through the same registries the names go through
         self.schedule = api.get_schedule(self.schedule, self.cfg)
         self.sync_policy = api.get_sync_policy(self.sync_policy, self.cfg)
+        if self.shard_sizes is not None:
+            self.shard_sizes = tuple(int(s) for s in self.shard_sizes)
+            if len(self.shard_sizes) != self.cfg.n_participants:
+                raise ValueError(
+                    f"shard_sizes has {len(self.shard_sizes)} entries for "
+                    f"K={self.cfg.n_participants} participants")
+            if (isinstance(self.aggregator, api.PartialParticipation)
+                    and self.aggregator.weights is None):
+                import dataclasses as _dc
+                self.aggregator = _dc.replace(self.aggregator,
+                                              weights=self.shard_sizes)
+        if self.batch_mask is not None:
+            mask = jnp.asarray(self.batch_mask, bool)
+            if mask.ndim != 2 or mask.shape[0] != self.cfg.n_participants:
+                raise ValueError(
+                    f"batch_mask must be (K={self.cfg.n_participants}, "
+                    f"n_batches); got shape {mask.shape}")
+            if not bool(mask.any(axis=1).all()):
+                raise ValueError("batch_mask leaves some participant with "
+                                 "zero valid batches")
+            self.batch_mask = mask
         self.opt = get_optimizer(self.optimizer_name)
         # the ONE local-epoch body (engine_mod.make_epoch_fn) is shared:
         # the python engine jits it per-epoch, the fused engine scans over
         # it, so the SGD semantics cannot diverge
-        self._jit_epoch = jax.jit(
-            engine_mod.make_epoch_fn(self.loss_fn, self.opt))
+        self._jit_epoch = jax.jit(engine_mod.make_epoch_fn(
+            self.loss_fn, self.opt, masked=self.batch_mask is not None))
         # aggregate(stacked, weights): codec roundtrip + participant mixing
         self._aggregate_fn = self.aggregator.make_aggregate_fn(self.codec)
         self._comm_cache = None

@@ -46,6 +46,15 @@ between the aggregated state (sync) and the untouched local state (skip);
 the sync decision comes back with the aux fetch so the host can bill the
 wire only on synced rounds.
 
+``masked=True`` builds the ragged-shard variants (heterogeneous data,
+``repro.data`` scenario subsystem): the executable takes a traced
+(K, n_batches) bool validity mask (``ParticipantData.batch_mask``) right
+after the staged batches, and a masked batch slot is an identity carry —
+params/opt pass through untouched and the slot is excluded from the epoch
+loss mean — so participants with unequal shard sizes train on exactly
+their own data inside one shape-stable executable (compile count stays
+flat across mask values; asserted by ``round_latency.py --check-retrace``).
+
 Backend API — shared by the simulation and pod paths:
 
   * simulation (single host, K vmapped participants): the defaults.
@@ -90,50 +99,83 @@ def stack_epoch_batches(per_epoch):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_epoch)
 
 
-def make_epoch_fn(loss_fn, opt, spmd_axis_name=None):
+def make_epoch_fn(loss_fn, opt, spmd_axis_name=None, masked=False):
     """One local epoch for all K participants (vmapped).
 
     Returns epoch_fn(stacked_params, opt_state, batches, lr) ->
     (stacked_params, opt_state, per-participant mean loss). This is THE
     local-epoch body: the python reference loop jits it directly and the
     fused engine scans over it, so the SGD semantics cannot diverge.
+
+    ``masked=True`` is the ragged-shard variant: epoch_fn takes a trailing
+    ``mask`` argument, a (K, n_batches) bool marking which batch slots hold
+    a shard's real data (``ParticipantData.batch_mask``). A masked-out step
+    is an identity carry — params and opt state pass through untouched and
+    the slot's loss is excluded from the epoch mean — so shards with fewer
+    batches than ``n_batches`` train on exactly their own data with no
+    min-clamp. The mask is plain traced data: it never changes the compiled
+    program, only which steps commit.
     """
-    def one_participant(params, ostate, pbatches, lr):
-        def step(carry, batch):
+    def one_participant(params, ostate, pbatches, lr, pmask=None):
+        def step(carry, xs):
             params, ostate = carry
+            if masked:
+                batch, valid = xs
+            else:
+                batch = xs
             (loss, _), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
-            upd, ostate = opt.update(grads, ostate, params, lr)
-            return (apply_updates(params, upd), ostate), loss
-        (params, ostate), losses = jax.lax.scan(step, (params, ostate),
-                                                pbatches)
-        return params, ostate, losses.mean()
+            upd, new_ostate = opt.update(grads, ostate, params, lr)
+            new_params = apply_updates(params, upd)
+            if masked:
+                # identity carry on padding slots: nothing trains, nothing
+                # counts — compute runs unconditionally so the executable
+                # is shape-stable, the select commits only real steps
+                keep = lambda new, old: jnp.where(valid, new, old)  # noqa: E731
+                new_params = jax.tree.map(keep, new_params, params)
+                new_ostate = jax.tree.map(keep, new_ostate, ostate)
+                loss = jnp.where(valid, loss, 0.0)
+            return (new_params, new_ostate), loss
+        xs = (pbatches, pmask) if masked else pbatches
+        (params, ostate), losses = jax.lax.scan(step, (params, ostate), xs)
+        if masked:
+            mean = losses.sum() / jnp.maximum(pmask.sum(), 1)
+        else:
+            mean = losses.mean()
+        return params, ostate, mean
 
     vmap_kw = {"spmd_axis_name": spmd_axis_name} if spmd_axis_name else {}
-    return jax.vmap(one_participant, in_axes=(0, 0, 0, None), **vmap_kw)
+    in_axes = (0, 0, 0, None) + ((0,) if masked else ())
+    return jax.vmap(one_participant, in_axes=in_axes, **vmap_kw)
 
 
-def _make_epoch_scan(epoch_fn, lr_fn):
-    """scan_epochs(params, opt, batches, j0, T_i, ge0, sched, total): run
-    the leading-dim epochs of ``batches`` with the schedule computed traced
-    in-scan via ``lr_fn(sched, j, T_i, ge, total)``.
+def _make_epoch_scan(epoch_fn, lr_fn, masked=False):
+    """scan_epochs(params, opt, batches, j0, T_i, ge0, sched, total[, mask]):
+    run the leading-dim epochs of ``batches`` with the schedule computed
+    traced in-scan via ``lr_fn(sched, j, T_i, ge, total)``.
 
     j0 (round-local offset of the first staged epoch), T_i (the round's
     cycle denominator), ge0 (global epoch at round start), ``sched`` (the
     per-round schedule parameter pack) and ``total`` (the run's epoch
     budget) may all be traced, so one chunk executable is reused unchanged
     as T_i doubles, as the budget updates, and across built-in schedule
-    swaps.
+    swaps. ``masked=True``: a trailing (K, n_batches) bool ``mask``
+    (ragged shards, also traced — see ``make_epoch_fn``) is applied every
+    epoch.
     """
     def scan_epochs(stacked_params, opt_state, batches, j0, T_i,
-                    global_epoch0, sched, total):
+                    global_epoch0, sched, total, mask=None):
         n = jax.tree.leaves(batches)[0].shape[0]
 
         def body(carry, xs):
             params, ostate = carry
             j, ebatches = xs
             lr = lr_fn(sched, j, T_i, global_epoch0 + j, total)
-            params, ostate, loss = epoch_fn(params, ostate, ebatches, lr)
+            if masked:
+                params, ostate, loss = epoch_fn(params, ostate, ebatches,
+                                                lr, mask)
+            else:
+                params, ostate, loss = epoch_fn(params, ostate, ebatches, lr)
             return (params, ostate), (loss, lr)
 
         return jax.lax.scan(body, (stacked_params, opt_state),
@@ -142,7 +184,7 @@ def _make_epoch_scan(epoch_fn, lr_fn):
 
 
 def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
-                                  axis="pod"):
+                                  axis="pod", weighted=False):
     """Eq. 2 fast path: int8 wire emulation + averaging as ONE buffer pass.
 
     Returns an ``average_fn`` (stacked tree -> stacked tree, every slot
@@ -164,10 +206,31 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
     pod boundary, with ``flatbuf.wire_bytes`` giving the exact encoded
     size a production transport would move.
 
+    ``weighted=True`` builds the example-count-weighted Eq. 2 variant
+    (FedAvg's generalization for unequal shards): the returned fn takes a
+    trailing traced length-K weight row (a normalized mixing-matrix row)
+    and computes the weighted mean of the per-row dequantized payloads over
+    the same single flat buffer — sim path via the quantize/dequantize
+    kernels + one einsum, pod path still ONE psum of the weight-scaled
+    local payload. Uniform weights reproduce the unweighted kernel's mean
+    up to f32 summation order; the unweighted path itself is untouched
+    (bit-compatible Eq. 2).
+
     The layout is recomputed per trace from static shapes only (free); the
     same tree structure always yields the same wire layout.
     """
     if mesh is None:
+        if weighted:
+            def average_w(stacked, wrow):
+                layout = flatbuf.make_layout(stacked, block=block)
+                buf = flatbuf.flatten(stacked, layout)
+                q, scale, shape = kops.quantize_blockwise(buf, block=block,
+                                                          impl=impl)
+                dq = kops.dequantize_blockwise(q, scale, shape, impl=impl)
+                mean = jnp.einsum("k,kn->n", wrow.astype(jnp.float32), dq)
+                return flatbuf.unflatten_mean(mean, layout)
+            return average_w
+
         def average(stacked):
             layout = flatbuf.make_layout(stacked, block=block)
             buf = flatbuf.flatten(stacked, layout)
@@ -177,6 +240,26 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
 
     from repro.sharding import compat
     K = mesh.shape[axis]
+
+    if weighted:
+        def average_w(stacked, wrow):
+            layout = flatbuf.make_layout(stacked, block=block)
+            buf = flatbuf.flatten(stacked, layout)     # (K, N_pad) over pod
+
+            def local_avg(lbuf, w):                    # (1, N_pad) per pod
+                q, scale, _ = kops.quantize_blockwise(lbuf, block=block,
+                                                      impl=impl)
+                dq = q.astype(jnp.int32).astype(jnp.float32) * scale[:, None]
+                k = jax.lax.axis_index(axis)
+                s = jax.lax.psum(w[k].astype(jnp.float32) * dq, axis)
+                return s.reshape(1, -1)[:, :layout.n_pad]
+
+            avg = compat.shard_map(local_avg, mesh=mesh,
+                                   in_specs=(P(axis, None), P()),
+                                   out_specs=P(axis, None),
+                                   check_vma=False)(buf, wrow)
+            return flatbuf.unflatten(avg, layout)
+        return average_w
 
     def average(stacked):
         layout = flatbuf.make_layout(stacked, block=block)
@@ -278,7 +361,7 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None):
 
 def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
                      spmd_axis_name=None, average_fn=None, aggregate_fn=None,
-                     gated=False, gate_fn=None, donate=True):
+                     gated=False, gate_fn=None, masked=False, donate=True):
     """Build the single-executable round: epoch scan + aggregation + Eq. 4.
 
     loss_fn(params, batch) -> (loss, aux) for ONE participant.
@@ -309,50 +392,74 @@ def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
     the last synced shared model and the traced threshold — and aux grows
     {div, synced}; on a quiet round (div <= delta) the returned state is
     the *local* post-epoch params/opt and ``new_avg`` stays ``sync_ref``.
+
+    ``masked=True`` (ragged shards): round_fn takes a (K, n_batches) bool
+    ``batch_mask`` right after ``batches`` — traced, so shard-size changes
+    between runs never recompile — and the epoch scan applies the
+    identity-carry masking of ``make_epoch_fn(masked=True)``.
     """
     if lr_fn is None:
         lr_fn = switch_lr
-    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
-                                                 spmd_axis_name), lr_fn)
+    scan_epochs = _make_epoch_scan(
+        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked), lr_fn,
+        masked=masked)
     agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
 
     if gated:
         gfinalize = _make_gated_finalize(opt, agg, gate_fn)
 
-        def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                     sched, total, sync_ref, delta, agg_weights=None):
+        def round_body(stacked_params, opt_state, batches, mask,
+                       global_epoch0, sched, total, sync_ref, delta,
+                       agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
-                sched, total)
+                sched, total, mask)
             out_p, out_o, rel, div, do_sync, new_ref = gfinalize(
                 params, opt_out, sync_ref, delta, agg_weights)
             return out_p, out_o, {"losses": losses, "lrs": lrs, "rel": rel,
                                   "div": div, "synced": do_sync,
                                   "new_avg": new_ref}
+
+        if masked:
+            round_fn = round_body
+        else:
+            def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                         sched, total, sync_ref, delta, agg_weights=None):
+                return round_body(stacked_params, opt_state, batches, None,
+                                  global_epoch0, sched, total, sync_ref,
+                                  delta, agg_weights)
     else:
         finalize = _make_finalize(opt, agg)
 
-        def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                     sched, total, agg_weights=None):
+        def round_body(stacked_params, opt_state, batches, mask,
+                       global_epoch0, sched, total, agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
             # round entry: every slot holds the shared model w̄^{i-1}
             old_avg = averaging.unstack_participant(stacked_params, 0)
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
-                sched, total)
+                sched, total, mask)
             del opt_out  # paper: local opt state is discarded at aggregation
             averaged, fresh_opt, rel, new_avg = finalize(params, old_avg,
                                                          agg_weights)
             return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
                                          "rel": rel, "new_avg": new_avg}
 
+        if masked:
+            round_fn = round_body
+        else:
+            def round_fn(stacked_params, opt_state, batches, global_epoch0,
+                         sched, total, agg_weights=None):
+                return round_body(stacked_params, opt_state, batches, None,
+                                  global_epoch0, sched, total, agg_weights)
+
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(round_fn, donate_argnums=donate_argnums)
 
 
 def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
-                      donate=True):
+                      masked=False, donate=True):
     """Memory-bounded building block: a scan over ONE CHUNK of epochs.
 
     Returns epochs_fn(stacked_params, opt_state, batches, j0, T_i, ge0,
@@ -360,18 +467,30 @@ def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
     j0/T_i/ge0/sched/total are traced, so the executable is shared across
     chunks, across T_i doublings, across budget updates, and across
     built-in schedule swaps; only a distinct chunk length C recompiles.
+    ``masked=True``: epochs_fn takes a traced (K, n_batches) bool
+    ``batch_mask`` right after ``batches`` (ragged shards, identity-carry
+    masking — same contract as ``make_fused_round``).
     """
     if lr_fn is None:
         lr_fn = switch_lr
-    scan_epochs = _make_epoch_scan(make_epoch_fn(loss_fn, opt,
-                                                 spmd_axis_name), lr_fn)
+    scan_epochs = _make_epoch_scan(
+        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked), lr_fn,
+        masked=masked)
 
-    def epochs_fn(stacked_params, opt_state, batches, j0, T_i,
-                  global_epoch0, sched, total):
+    def epochs_body(stacked_params, opt_state, batches, mask, j0, T_i,
+                    global_epoch0, sched, total):
         (params, ostate), (losses, lrs) = scan_epochs(
             stacked_params, opt_state, batches, j0, T_i, global_epoch0,
-            sched, total)
+            sched, total, mask)
         return params, ostate, losses, lrs
+
+    if masked:
+        epochs_fn = epochs_body
+    else:
+        def epochs_fn(stacked_params, opt_state, batches, j0, T_i,
+                      global_epoch0, sched, total):
+            return epochs_body(stacked_params, opt_state, batches, None,
+                               j0, T_i, global_epoch0, sched, total)
 
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(epochs_fn, donate_argnums=donate_argnums)

@@ -2,6 +2,23 @@
 
 Produces the (K, n_batches, B, ...) arrays the vmapped participant step
 consumes. Host-side numpy; deterministic in (seed, round, epoch).
+
+Shards may be *ragged* (unequal lengths — quantity skew, Dirichlet label
+skew, or a round-robined remainder). Raggedness is handled with
+per-participant batch counts: shard k contributes ``len(shard_k) // B``
+real batches per epoch, the stack is padded to the max count ``n_batches``
+and :attr:`ParticipantData.batch_mask` marks which ``(k, batch)`` slots are
+real. The engines thread that mask through the epoch scan (a masked step is
+an identity carry — see ``repro.core.engine``), so no shard is ever clamped
+to the global minimum length and no example outside the per-epoch batch
+remainder is dropped (the per-epoch shuffle rotates which examples land in
+the remainder, so every shard example trains). Padding batches *cycle* the
+shard's own permutation — real data, never zeros — so a mask-unaware
+consumer degrades to slight oversampling instead of training on garbage.
+
+For equal shards everything reduces bit-for-bit to the classic equal-IID
+pipeline: ``ragged`` is False, the mask is all-True, and ``epoch_batches``
+returns exactly the arrays it always did.
 """
 from __future__ import annotations
 
@@ -9,25 +26,49 @@ import numpy as np
 
 
 class ParticipantData:
-    """Holds K disjoint shards; yields stacked epoch batches."""
+    """Holds K disjoint (possibly ragged) shards; yields stacked epoch
+    batches plus the validity mask for the padded slots."""
 
     def __init__(self, shards, batch_size: int, seed: int = 0):
-        # shards: list of K lists of arrays, all same leading length per k
+        # shards: list of K lists of arrays, same leading length per k
         self.shards = shards
         self.K = len(shards)
         self.B = batch_size
         self.seed = seed
-        n = min(len(s[0]) for s in shards)
-        self.n_batches = n // batch_size
-        assert self.n_batches > 0, "shard smaller than one batch"
+        #: per-participant example counts (the FedAvg averaging weights)
+        self.sizes = tuple(len(s[0]) for s in shards)
+        #: per-participant REAL batches per epoch (floor(n_k / B))
+        self.batch_counts = tuple(n // batch_size for n in self.sizes)
+        if min(self.batch_counts) <= 0:          # survives python -O
+            raise ValueError(
+                f"shard smaller than one batch: sizes={self.sizes} with "
+                f"batch_size={batch_size}")
+        self.n_batches = max(self.batch_counts)
+        #: True when shards yield unequal batch counts (mask required)
+        self.ragged = len(set(self.batch_counts)) > 1
+
+    @property
+    def batch_mask(self):
+        """(K, n_batches) bool: True where the slot holds one of shard k's
+        real per-epoch batches, False on cycled padding slots."""
+        return (np.arange(self.n_batches)[None, :]
+                < np.asarray(self.batch_counts)[:, None])
 
     def epoch_batches(self, round_i: int, epoch_j: int):
-        """(K, n_batches, B, ...) tuple of arrays for one local epoch."""
+        """(K, n_batches, B, ...) tuple of arrays for one local epoch.
+
+        Slots beyond shard k's ``batch_counts[k]`` (ragged shards only)
+        cycle k's own shuffled examples; pair with :attr:`batch_mask` (the
+        engines' identity-carry mask) for exact per-shard epoch semantics.
+        """
         out = [[] for _ in self.shards[0]]
         for k, shard in enumerate(self.shards):
             rng = np.random.default_rng(
                 (self.seed, k, round_i, epoch_j, 0xC0))
-            perm = rng.permutation(len(shard[0]))[: self.n_batches * self.B]
+            # np.resize cycles the permutation when a ragged shard needs
+            # padding; for n_k >= n_batches*B it is exactly perm[:need]
+            perm = np.resize(rng.permutation(len(shard[0])),
+                             self.n_batches * self.B)
             for a_i, a in enumerate(shard):
                 out[a_i].append(a[perm].reshape(
                     self.n_batches, self.B, *a.shape[1:]))

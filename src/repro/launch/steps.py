@@ -137,8 +137,9 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
                           impl="ref", remat=True, mesh=None,
                           param_specs=None, codec=None, aggregator=None,
                           schedule=None, round_index=0,
-                          expose_schedule_args=False, compress=None,
-                          compress_block=256, compress_impl="ref"):
+                          expose_schedule_args=False, masked=False,
+                          compress=None, compress_block=256,
+                          compress_impl="ref"):
     """Pod-path fused round: the whole communication round as one program.
 
     Shares ``repro.core.engine`` with the simulation path, but pins the
@@ -178,6 +179,11 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     round_fn(stacked_params, opt_state, batches, global_epoch0, sched,
     total_epochs[, agg_weights]) with ``sched``/``total_epochs`` traced.
     ``batches`` is the (T_i, K, n_batches, ...) stacked-epoch batch dict.
+
+    ``masked=True`` (ragged shards — unequal per-pod batch counts): the
+    returned round_fn takes a traced (K, n_batches) bool ``batch_mask``
+    right after ``batches`` (``ParticipantData.batch_mask``; masked epoch
+    steps are identity carries, see ``repro.core.engine``).
     """
     from repro.core import api, engine as engine_mod
     from repro.optim.optimizers import get_optimizer as _get_opt
@@ -200,29 +206,37 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
 
     fused = engine_mod.make_fused_round(
         loss_fn, _get_opt(optimizer), lr_fn=api.traced_body(schedule),
-        spmd_axis_name="pod", aggregate_fn=aggregate_fn, donate=False)
+        spmd_axis_name="pod", aggregate_fn=aggregate_fn, masked=masked,
+        donate=False)
 
     # the engine's vmap consumes the pod axis; in-model "dp" hints must
     # then resolve to data only (same contract as the colearn step)
     if expose_schedule_args:
-        if aggregator.uses_weights:
-            def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                         sched, total_epochs, agg_weights):
-                with batch_axes(("data",)):
-                    return fused(stacked_params, opt_state, batches,
-                                 global_epoch0, sched, total_epochs,
-                                 agg_weights)
-        else:
-            def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                         sched, total_epochs):
-                with batch_axes(("data",)):
-                    return fused(stacked_params, opt_state, batches,
-                                 global_epoch0, sched, total_epochs)
+        def round_fn(stacked_params, opt_state, batches, *rest):
+            """round_fn(params, opt, batches[, batch_mask], ge0, sched,
+            total_epochs[, agg_weights]) — the bracketed args appear per
+            the step's masked= flag / the aggregator's uses_weights."""
+            with batch_axes(("data",)):
+                return fused(stacked_params, opt_state, batches, *rest)
         return round_fn
 
     sched = schedule.device_round_params(round_index)
     total = jnp.int32(max(ccfg.T0 * ccfg.max_rounds, 1))
-    if aggregator.uses_weights:
+    if masked:
+        if aggregator.uses_weights:
+            def round_fn(stacked_params, opt_state, batches, batch_mask,
+                         global_epoch0, agg_weights):
+                with batch_axes(("data",)):
+                    return fused(stacked_params, opt_state, batches,
+                                 batch_mask, global_epoch0, sched, total,
+                                 agg_weights)
+        else:
+            def round_fn(stacked_params, opt_state, batches, batch_mask,
+                         global_epoch0):
+                with batch_axes(("data",)):
+                    return fused(stacked_params, opt_state, batches,
+                                 batch_mask, global_epoch0, sched, total)
+    elif aggregator.uses_weights:
         def round_fn(stacked_params, opt_state, batches, global_epoch0,
                      agg_weights):
             with batch_axes(("data",)):

@@ -18,6 +18,13 @@ warmup_clr | cosine; defaults to the legacy --schedule flag), and
 --sync-policy the Eq. 4 rule (ile | fle | divtrigger with --trigger-delta;
 defaults to the legacy --epochs-rule flag). --compress remains the legacy
 spelling of --codec, resolved through the api.CODECS registry aliases.
+
+Data scenario (see repro.data.partition): --partition picks the split
+(iid | dirichlet label-skew with --dirichlet-alpha | sizes quantity skew
+with --sizes), --weighted-avg switches Eq. 2 to FedAvg's example-count
+weighting, and ragged shards automatically thread their validity mask into
+the engines (no shard is clamped, no example silently dropped;
+--drop-remainder restores the paper's exactly-equal split explicitly).
 """
 from __future__ import annotations
 
@@ -34,15 +41,29 @@ from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
 from repro.core import api
 from repro.core.colearn import CoLearner
-from repro.data.partition import partition_arrays
+from repro.data import partition as part_mod
 from repro.data.pipeline import ParticipantData
 from repro.data.synthetic import lm_examples
 from repro.models import transformer as tr
 
 
-def build_data(cfg, K, batch_size, seq_len, n_examples, seed=0):
+def build_data(cfg, K, batch_size, seq_len, n_examples, seed=0,
+               partition="iid", dirichlet_alpha=0.5, sizes=None,
+               drop_remainder=False):
+    """Shard the synthetic LM corpus under the chosen data scenario.
+
+    partition="iid": the paper's random split (remainder round-robin, or
+    dropped with ``drop_remainder``). "dirichlet": label-skew non-IID over
+    a coarse sequence label (the first target token bucketed into 10
+    classes — a deterministic proxy for topic skew on synthetic text).
+    "sizes": quantity skew with the given counts/fractions.
+    """
     x, y = lm_examples(seed, n_examples, seq_len, cfg.vocab_size)
-    shards = partition_arrays([x, y], K, seed)
+    idx = part_mod.scenario_indices(
+        len(x), K, seed, scenario=partition, labels=y[:, 0] % 10,
+        dirichlet_alpha=dirichlet_alpha, sizes=sizes, min_size=batch_size,
+        drop_remainder=drop_remainder)
+    shards = part_mod.shard_by_indices([x, y], idx)
     return ParticipantData(shards, batch_size, seed)
 
 
@@ -94,6 +115,27 @@ def main(argv=None):
     ap.add_argument("--n-examples", type=int, default=1280)
     ap.add_argument("--steps-per-epoch", type=int, default=0,
                     help="truncate each epoch to this many batches (0=full)")
+    ap.add_argument("--partition", default="iid",
+                    choices=["iid", "dirichlet", "sizes"],
+                    help="data scenario: iid = the paper's random equal "
+                         "split (remainder round-robin); dirichlet = "
+                         "label-skew non-IID (--dirichlet-alpha); sizes = "
+                         "quantity skew (--sizes)")
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.5,
+                    help="Dirichlet concentration for --partition "
+                         "dirichlet (small = more skew)")
+    ap.add_argument("--sizes", default="",
+                    help="comma-separated per-participant counts or "
+                         "fractions for --partition sizes, e.g. "
+                         "'0.5,0.2,0.1,0.1,0.1'")
+    ap.add_argument("--drop-remainder", action="store_true",
+                    help="paper-faithful exactly-equal IID shards (the "
+                         "n %% K remainder is EXPLICITLY discarded; "
+                         "default distributes it round-robin)")
+    ap.add_argument("--weighted-avg", action="store_true",
+                    help="example-count-weighted Eq. 2 (FedAvg weighting; "
+                         "uniform = paper-faithful default). full "
+                         "aggregator only")
     ap.add_argument("--compress", default="none",
                     choices=["none", "int8", "fused"],
                     help="legacy alias for --codec: int8 = leafwise, "
@@ -130,17 +172,42 @@ def main(argv=None):
         schedule=args.schedule, epochs_rule=args.epochs_rule,
         max_rounds=args.rounds)
 
+    # scenario flags must match --partition — silently ignoring them would
+    # let a user believe they benchmarked a skew they never ran
+    if args.sizes and args.partition != "sizes":
+        ap.error("--sizes requires --partition sizes")
+    if not args.sizes and args.partition == "sizes":
+        ap.error("--partition sizes requires --sizes")
+    if args.dirichlet_alpha != 0.5 and args.partition != "dirichlet":
+        ap.error("--dirichlet-alpha requires --partition dirichlet")
+    if args.drop_remainder and args.partition != "iid":
+        ap.error("--drop-remainder only applies to --partition iid")
+    sizes = ([float(s) for s in args.sizes.split(",")] if args.sizes
+             else None)
     data = build_data(cfg, K, args.batch_size, args.seq_len,
-                      args.n_examples, args.seed)
+                      args.n_examples, args.seed, partition=args.partition,
+                      dirichlet_alpha=args.dirichlet_alpha, sizes=sizes,
+                      drop_remainder=args.drop_remainder)
     ex, ey = lm_examples(args.seed + 99, 256, args.seq_len, cfg.vocab_size)
 
     def loss_fn(params, batch):
         x, y = batch
         return tr.loss_fn(params, cfg, {"tokens": x, "labels": y})
 
-    aggregator = (api.PartialParticipation(m=args.partial_m, seed=args.seed)
-                  if args.aggregator == "partial"
-                  else api.get_aggregator(args.aggregator))
+    if args.weighted_avg and args.aggregator != "full":
+        ap.error("--weighted-avg only applies to --aggregator full")
+    if args.aggregator == "partial":
+        aggregator = api.PartialParticipation(m=args.partial_m,
+                                              seed=args.seed)
+    elif args.weighted_avg:
+        aggregator = api.FullAverage(weights=data.sizes)
+    else:
+        aggregator = api.get_aggregator(args.aggregator)
+    # ragged shards (unequal batch counts): thread the validity mask into
+    # the engines so every shard trains on exactly its own batches
+    batch_mask = data.batch_mask if data.ragged else None
+    if batch_mask is not None and args.steps_per_epoch:
+        batch_mask = batch_mask[:, :args.steps_per_epoch]
     # --lr-schedule/--sync-policy override the legacy string flags; either
     # way the objects come out of the same registries
     schedule = api.get_schedule(args.lr_schedule or None, ccfg)
@@ -149,14 +216,18 @@ def main(argv=None):
     learner = CoLearner(ccfg, loss_fn, optimizer_name=args.optimizer,
                         codec=codec, aggregator=aggregator,
                         round_engine=args.engine, schedule=schedule,
-                        sync_policy=sync_policy)
+                        sync_policy=sync_policy, shard_sizes=data.sizes,
+                        batch_mask=batch_mask)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)
+    shard_s = (f" shards={list(data.sizes)}" if args.partition != "iid"
+               or data.ragged else "")
     print(f"co-learning {cfg.name}: K={K} params="
           f"{tr.count_params(params):,} rounds={args.rounds} T0={args.t0} "
           f"{learner.schedule.name}+{learner.sync_policy.name} "
           f"engine={args.engine} codec={learner.codec.name} "
-          f"aggregator={learner.aggregator.name}", flush=True)
+          f"aggregator={learner.aggregator.name} "
+          f"partition={args.partition}{shard_s}", flush=True)
 
     for i in range(args.rounds):
         t0 = time.time()

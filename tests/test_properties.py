@@ -55,14 +55,19 @@ def test_flatbuf_roundtrip_bit_exact(K, leaf_specs, seed):
 
 @given(st.integers(10, 500), st.integers(1, 8), st.integers(0, 99))
 @settings(**SETTINGS)
-def test_partition_disjoint_and_equal(n, K, seed):
-    """The paper's random equal split: disjoint, equal-size shards."""
+def test_partition_disjoint_and_covering(n, K, seed):
+    """The random split: disjoint shards covering EVERY example (remainder
+    round-robin, sizes within 1); drop_remainder=True restores the paper's
+    exactly-equal shards as the explicit opt-in."""
     idx = partition(n, K, seed)
     assert len(idx) == K
-    sizes = {len(i) for i in idx}
-    assert sizes == {n // K}
     all_ids = np.concatenate(idx)
+    assert len(all_ids) == n                             # nothing dropped
     assert len(set(all_ids.tolist())) == len(all_ids)    # disjoint
+    sizes = [len(i) for i in idx]
+    assert max(sizes) - min(sizes) <= 1
+    eq = partition(n, K, seed, drop_remainder=True)
+    assert {len(i) for i in eq} == {n // K}
 
 
 @given(st.floats(1e-4, 1.0), st.floats(0.01, 0.99), st.integers(1, 64))

@@ -141,6 +141,46 @@ for nm, agg in (("partial", api.PartialParticipation(m=2, seed=0)),
         float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
         for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want))) < 1e-5
 
+# 4e) heterogeneity scenario on the pod mesh: example-count-weighted Eq. 2
+#     rides the shared weighted-psum specialization (matches the host
+#     dense-mixing reference), the flat codec keeps a weighted single-
+#     buffer psum within the int8 bound, and the masked fused round
+#     (ragged per-pod batch counts as traced data) runs end to end
+wagg = api.FullAverage(weights=(3.0, 1.0))
+W = jnp.asarray(wagg.mixing_matrix(0, K))
+wmesh = wagg.make_aggregate_fn(api.ExactF32(), mesh=mesh,
+                               param_specs=pspecs_part)
+whost = wagg.make_aggregate_fn(api.ExactF32())
+with compat.use_mesh(mesh):
+    wgot = jax.jit(wmesh)(new_stacked, W)
+wwant = whost(new_stacked, W)
+out["weighted_full_mesh_matches_host"] = max(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+    for a, b in zip(jax.tree.leaves(wgot), jax.tree.leaves(wwant))) < 1e-5
+
+wflat = api.FlatFusedInt8(impl="ref").make_fused_mean(mesh=mesh,
+                                                      weighted=True)
+with compat.use_mesh(mesh):
+    wfgot = jax.jit(wflat)(new_stacked, W[0])
+out["weighted_flat_mesh_within_bound"] = all(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) <= bd
+    for a, b, bd in zip(jax.tree.leaves(wfgot), jax.tree.leaves(wwant),
+                        bounds))
+
+round_fn_m = steps_mod.make_fused_round_step(
+    cfg, ccfg, mesh=mesh, aggregator=wagg, masked=True,
+    param_specs=pspecs_part)
+rbatch_m = {"tokens": jnp.zeros((2, K, 2, 4, 16), jnp.int32),
+            "labels": jnp.ones((2, K, 2, 4, 16), jnp.int32)}
+bmask = jnp.asarray(np.array([[True, True], [True, False]]))
+with compat.use_mesh(mesh):
+    averaged_m, _, aux_m = round_fn_m(stacked, (), rbatch_m, bmask,
+                                      jnp.int32(0), W)
+out["masked_round_losses_finite"] = bool(jnp.isfinite(aux_m["losses"]).all())
+out["masked_round_slots_equal"] = max(
+    float(jnp.abs(t[0] - t[1]).max())
+    for t in jax.tree.leaves(averaged_m)) < 1e-4
+
 # 5) decode step lowers on the mesh
 cache = tr.init_cache(cfg, 8, 16, jnp.float32)
 csh = sp.named(mesh, sp.cache_specs(
@@ -196,6 +236,13 @@ def test_leafwise_compressed_average_on_pod_mesh(mesh_results):
 def test_weighted_aggregators_on_pod_mesh(mesh_results):
     assert mesh_results["partial_mesh_matches_host"]
     assert mesh_results["ring_mesh_matches_host"]
+
+
+def test_heterogeneity_scenario_on_pod_mesh(mesh_results):
+    assert mesh_results["weighted_full_mesh_matches_host"]
+    assert mesh_results["weighted_flat_mesh_within_bound"]
+    assert mesh_results["masked_round_losses_finite"]
+    assert mesh_results["masked_round_slots_equal"]
 
 
 def test_fused_round_on_pod_mesh(mesh_results):

@@ -121,6 +121,78 @@ def test_round_state_roundtrip(tmp_path):
     np.testing.assert_allclose(restored["params"]["w"], state["params"]["w"])
 
 
+def test_round_state_persists_optimizer(tmp_path):
+    """ISSUE 5 satellite: a checkpoint must carry state["opt"] — restoring
+    mid-run and continuing must match the uninterrupted run exactly, even
+    with a stateful optimizer (momentum would otherwise silently reset)."""
+    from repro.configs.base import CoLearnConfig
+    from repro.core import api
+    from repro.core.colearn import CoLearner
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (4, 1))}
+    x = jax.random.normal(k, (2, 3, 8, 4))
+    batches = (x, x @ jnp.ones((4, 1)))
+    # a gated policy with a huge delta never syncs, so the local momentum
+    # is live across rounds — exactly the state a restore must not lose
+    cfg = CoLearnConfig(n_participants=2, T0=2, eta0=0.05, max_rounds=6)
+
+    def make():
+        learner = CoLearner(cfg, loss, optimizer_name="momentum",
+                            sync_policy=api.DivergenceTrigger(delta=1e9))
+        return learner, learner.init(params)
+
+    learner, state = make()
+    for _ in range(2):
+        state = learner.run_round(state, lambda i, j: batches)
+    path = str(tmp_path / "mid")
+    save_round_state(path, state)
+    for _ in range(2):                               # uninterrupted arm
+        state = learner.run_round(state, lambda i, j: batches)
+
+    learner2, fresh = make()
+    resumed = restore_round_state(path, fresh)
+    for t, s in zip(jax.tree.leaves(resumed["opt"]),
+                    jax.tree.leaves(state["opt"])):
+        assert t.shape == s.shape
+    for _ in range(2):                               # resumed arm
+        resumed = learner2.run_round(resumed, lambda i, j: batches)
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(state["opt"]),
+                    jax.tree.leaves(resumed["opt"])):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_round_state_legacy_checkpoint_without_opt(tmp_path):
+    """Pre-opt-persistence checkpoints (no has_opt / .opt.npz) restore with
+    the caller's opt.init state — the documented legacy fallback."""
+    from repro.configs.base import CoLearnConfig
+    from repro.core.colearn import CoLearner
+    learner = CoLearner(CoLearnConfig(n_participants=2, T0=1),
+                        lambda p, b: (jnp.zeros(()), {}),
+                        optimizer_name="momentum")
+    state = learner.init({"w": jnp.ones((2, 2))})
+    path = str(tmp_path / "legacy_opt")
+    save_round_state(path, state)
+    os.remove(path + ".opt.npz")
+    import json
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    del meta["has_opt"]
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    fresh = learner.init({"w": jnp.zeros((2, 2))})
+    restored = restore_round_state(path, fresh)
+    for t in jax.tree.leaves(restored["opt"]):
+        np.testing.assert_allclose(t, 0.0)           # momentum re-zeroed
+
+
 def test_compression_roundtrip_close_and_smaller():
     tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)),
             "tiny": jnp.ones(3)}
