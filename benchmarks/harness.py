@@ -20,7 +20,7 @@ from repro.models.layers import softmax_xent
 
 
 def build_participant_data(train, K, batch_size, seed, *, partition="iid",
-                           dirichlet_alpha=1.0, sizes=None):
+                           dirichlet_alpha=1.0, sizes=None, k_max=None):
     """Shard (x, y) under a data scenario -> ``ParticipantData``.
 
     partition: "iid" (the paper's random split, remainder round-robin) |
@@ -34,7 +34,7 @@ def build_participant_data(train, K, batch_size, seed, *, partition="iid",
         len(x), K, seed, scenario=partition, labels=y,
         dirichlet_alpha=dirichlet_alpha, sizes=sizes, min_size=batch_size)
     shards = part_mod.shard_by_indices([x, y], idx)
-    return ParticipantData(shards, batch_size, seed)
+    return ParticipantData(shards, batch_size, seed, k_max=k_max)
 
 
 def cls_loss(apply_fn):
@@ -60,7 +60,8 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 batch_size=32, seed=0, steps_cap=0, engine="python",
                 compress=None, codec=None, aggregator=None,
                 lr_schedule=None, sync_policy=None, partition="iid",
-                dirichlet_alpha=1.0, sizes=None, weighted=False):
+                dirichlet_alpha=1.0, sizes=None, weighted=False,
+                churn=None, liveness_aware=True, k_max=None):
     """Returns dict with per-round accuracy, controller history, comm stats.
 
     engine: "python" (reference per-epoch loop) or "fused" (one compiled
@@ -80,6 +81,13 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     Ragged shards automatically thread their validity mask into the
     engines, and the shard sizes are handed to the learner so partial
     participation weights by them.
+
+    Elastic membership: ``churn`` takes a ``repro.core.membership``
+    schedule (or registry name) injecting per-round participant failures;
+    ``liveness_aware=False`` keeps the static mixing matrix under churn
+    (the naive ablation — dead rows pollute the mean); ``k_max`` reserves
+    standby slots beyond K (the extra slots cycle the real shards). The
+    result dict gains ``live`` (per-round live counts) when churn is on.
     """
     if compress is not None:
         if codec is not None:
@@ -88,7 +96,9 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     data = build_participant_data(train, K, batch_size, seed,
                                   partition=partition,
                                   dirichlet_alpha=dirichlet_alpha,
-                                  sizes=sizes)
+                                  sizes=sizes, k_max=k_max)
+    if k_max is not None:
+        K = k_max
     if weighted:
         if aggregator is not None:
             raise ValueError("weighted=True builds the FullAverage "
@@ -103,7 +113,8 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     learner = CoLearner(ccfg, cls_loss(apply_fn), codec=codec,
                         aggregator=aggregator, round_engine=engine,
                         schedule=lr_schedule, sync_policy=sync_policy,
-                        shard_sizes=data.sizes, batch_mask=batch_mask)
+                        shard_sizes=data.sizes, batch_mask=batch_mask,
+                        churn=churn, liveness_aware=liveness_aware)
     params = init_fn(jax.random.PRNGKey(seed))
     state = learner.init(params)
     accs, Ts, times = [], [], []
@@ -125,6 +136,7 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     per_round = next((l.comm_bytes for l in state["log"] if l.synced), 0)
     return {"acc": accs, "T": Ts, "round_s": times,
             "shard_sizes": data.sizes,
+            "live": [l.live for l in state["log"]],
             "comm_bytes": per_round,
             "total_comm_bytes": sum(l.comm_bytes for l in state["log"]),
             "synced_rounds": sum(1 for l in state["log"] if l.synced),

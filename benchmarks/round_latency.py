@@ -223,9 +223,49 @@ def check_retrace():
     assert n_final3 == 1, \
         f"weighted finalize retraced: {n_final3} compiles"
 
+    # 4) elastic membership: the (K,) liveness row is traced data, so
+    #    crashes/rejoins flipping the live set EVERY round (plus the live-
+    #    renormalized mixing matrix changing with it) must reuse the same
+    #    executables — membership churn never recompiles
+    from repro.core.membership import ScriptedChurn
+    churn = ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 2, 1),
+                                  ("crash", 3, 0)))
+    cfg4 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.0, max_rounds=8,
+                         epochs_rule="fle")
+    learner4 = CoLearner(cfg4, zero_loss, round_engine="fused", churn=churn)
+    state4 = learner4.init(params)
+    for _ in range(4):
+        state4 = learner4.run_round(state4, lambda i, j: batches)
+    assert [l.live for l in state4["log"]] == [2, 1, 2, 1]
+    n_round4 = learner4._fused_round._cache_size()
+    assert n_round4 == 1, \
+        f"round executable retraced under churn: {n_round4} compiles"
+
+    # event rounds HOLD the ILE doubling (a membership change perturbs the
+    # rel signal), so interleave quiet rounds to still exercise T growth:
+    # T = 2,2,2,4,4,8 with churn flips at rounds 1, 3, 5
+    churn5 = ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 3, 1),
+                                   ("crash", 5, 0)))
+    cfg5 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                         epochs_rule="ile", max_rounds=8)
+    learner5 = CoLearner(cfg5, zero_loss, churn=churn5,
+                         round_engine=api.FusedEngine(chunk=2))
+    state5 = learner5.init(params)
+    for _ in range(6):
+        state5 = learner5.run_round(state5, lambda i, j: batches)
+    assert [l.T for l in state5["log"]] == [2, 2, 2, 4, 4, 8], \
+        [l.T for l in state5["log"]]
+    n_epochs5 = learner5._fused_epochs._cache_size()
+    n_final5 = learner5._fused_finalize._cache_size()
+    assert n_epochs5 == 1, \
+        f"chunk executable retraced under churn: {n_epochs5} compiles"
+    assert n_final5 == 1, \
+        f"finalize retraced under churn: {n_final5} compiles"
+
     print("check-retrace OK: chunk/finalize/round executables compiled "
           "once across an ILE doubling, 4 schedule swaps, a warmup "
-          "ramp, and the masked+weighted heterogeneity scenario")
+          "ramp, the masked+weighted heterogeneity scenario, and "
+          "per-round membership churn")
     return 0
 
 

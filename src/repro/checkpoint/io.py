@@ -85,12 +85,21 @@ def save_round_state(path: str, state):
             "skipped": list(getattr(ctrl, "skipped", ())),
             "has_prev_avg": state.get("prev_avg") is not None,
             "has_opt": True}
+    mem = state.get("membership")
+    if mem is not None:
+        # elastic membership: liveness + join/leave log ride in the meta
+        # (tiny, json-safe) so a resumed run replays the same trace
+        meta["membership"] = {
+            "live": [bool(a) for a in mem.live],
+            "events": [[int(r), int(k), str(kind)]
+                       for r, k, kind in mem.events]}
     with open(path + ".meta.json", "w") as f:
         json.dump(meta, f)
 
 
 def restore_round_state(path: str, state):
     from repro.core.api import SyncState
+    from repro.core.membership import Membership
     state["params"] = restore_pytree(path + ".params.npz", state["params"])
     with open(path + ".meta.json") as f:
         meta = json.load(f)
@@ -111,6 +120,16 @@ def restore_round_state(path: str, state):
         for idx, h in enumerate(tuple(h) for h in meta["history"]))
     state["ctrl"] = SyncState(meta["T"], history,
                               tuple(meta.get("skipped", ())))
+    mm = meta.get("membership")
+    if mm is not None:
+        state["membership"] = Membership(
+            live=tuple(bool(a) for a in mm["live"]),
+            events=tuple((int(r), int(k), str(kind))
+                         for r, k, kind in mm["events"]))
+    else:
+        # pre-membership checkpoints: every slot was (implicitly) live
+        K = jax.tree_util.tree_leaves(state["params"])[0].shape[0]
+        state["membership"] = Membership.all_live(K)
     if meta.get("has_prev_avg"):
         like = jax.tree.map(lambda t: t[0], state["params"])
         state["prev_avg"] = restore_pytree(path + ".prev_avg.npz", like)

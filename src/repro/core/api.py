@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import inspect
 import math
 from typing import Callable, Optional
 
@@ -348,20 +349,38 @@ class Aggregator(abc.ABC):
     #: True => ``comm_bytes`` is round-independent for fixed param shapes,
     #: so the driver computes it once per learner instead of per round.
     #: Aggregators whose accounting varies per round must set this False.
+    #: (Under elastic membership the driver bypasses the cache anyway —
+    #: the live set changes the bill per round.)
     static_comm: bool = True
 
     @abc.abstractmethod
-    def mixing_matrix(self, round_index: int, K: int) -> np.ndarray:
-        """Row-stochastic (K, K) f32 matrix for this round (host-side)."""
+    def mixing_matrix(self, round_index: int, K: int,
+                      live=None) -> np.ndarray:
+        """Row-stochastic (K, K) f32 matrix for this round (host-side).
+
+        ``live`` (elastic membership): a bool (K,) liveness row. The
+        matrix must then mix over LIVE columns only — renormalized
+        averaging rows, live-sampled participants, routed gossip edges —
+        and dead rows may be anything row-stochastic (the engine restores
+        dead rows to their own params after mixing, so by convention they
+        get identity or broadcast rows). ``None`` is the static-K matrix.
+        """
 
     def make_aggregate_fn(self, codec: WireCodec, *, mesh=None,
-                          param_specs=None, axis="pod"):
+                          param_specs=None, axis="pod", dynamic=False):
         """Build ``aggregate(stacked, weights)``. Dispatches to the pod-path
         specialization hook when a mesh is given; subclasses customize via
         ``_make_mesh_aggregate_fn`` / ``_make_host_aggregate_fn`` so the
-        mesh dispatch cannot be accidentally bypassed."""
+        mesh dispatch cannot be accidentally bypassed.
+
+        ``dynamic=True`` (elastic membership): the mixing matrix changes
+        per round (live-set renormalization), so the built fn must honor
+        the traced ``weights`` argument every call — specializations that
+        bake a static matrix (uniform fused means, static gossip permutes)
+        are skipped in favor of the weighted paths."""
         if mesh is not None and param_specs is not None:
-            fn = self._make_mesh_aggregate_fn(codec, mesh, param_specs, axis)
+            fn = self._make_mesh_aggregate_fn(codec, mesh, param_specs, axis,
+                                              dynamic=dynamic)
             if fn is not None:
                 return fn
         return self._make_host_aggregate_fn(codec)
@@ -372,17 +391,25 @@ class Aggregator(abc.ABC):
             return mix_participants(codec.roundtrip(stacked), weights)
         return aggregate
 
-    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
+                                dynamic=False):
         """Pod-path specialization hook: return an aggregate fn whose only
         cross-pod traffic is the aggregator's actual wire pattern (a psum,
         a permute, ...). None falls back to the dense mixing einsum — which
         under GSPMD gathers every pod's replica across ``axis``, so any
-        aggregator meant for the pod path should override this."""
+        aggregator meant for the pod path should override this.
+        ``dynamic=True``: the per-round matrix varies (elastic membership);
+        return None unless the specialization honors ``weights``."""
         return None
 
     @abc.abstractmethod
-    def comm_bytes(self, codec: WireCodec, stacked, round_index: int) -> int:
-        """Per-participant wire bytes for this round (upload + download)."""
+    def comm_bytes(self, codec: WireCodec, stacked, round_index: int,
+                   live=None) -> int:
+        """Per-participant wire bytes for this round (upload + download).
+
+        ``live`` (elastic membership): a bool (K,) liveness row — only
+        live rows upload/download, so the per-live-participant bill
+        changes with the live set."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -416,16 +443,38 @@ class FullAverage(Aggregator):
         # kernel fast path); explicit weights ride in traced per round
         return self.weights is not None
 
-    def mixing_matrix(self, round_index, K):
-        if self.weights is None:
-            return np.full((K, K), 1.0 / K, np.float32)
-        w = normalized_weights(self.weights, K)
-        # every row identical: all K download the same weighted mean
+    def mixing_matrix(self, round_index, K, live=None):
+        if live is None:
+            if self.weights is None:
+                return np.full((K, K), 1.0 / K, np.float32)
+            w = normalized_weights(self.weights, K)
+            # every row identical: all K download the same weighted mean
+            return np.broadcast_to(w, (K, K)).astype(np.float32)
+        # elastic membership: renormalize the (possibly weighted) averaging
+        # row over the LIVE participants — a dead row's stale model must
+        # not drag the mean (the benchmarks/churn.py ablation measures
+        # exactly this against the naive static row)
+        base = (np.ones(K, np.float64) if self.weights is None
+                else np.asarray(self.weights, np.float64))
+        if base.shape != (K,):
+            raise ValueError(f"weights must have length K={K}")
+        if not np.isfinite(base).all() or (base < 0).any():
+            raise ValueError(f"weights must be finite and >= 0; got {base}")
+        w = base * np.asarray(live, bool)
+        if not w.sum() > 0:
+            raise ValueError(
+                "no live participant carries averaging weight at round "
+                f"{round_index} (live={np.asarray(live, bool)})")
+        w /= w.sum()
+        # every row identical: all LIVE rows download the same mean (the
+        # engine restores dead rows to their own params after mixing)
         return np.broadcast_to(w, (K, K)).astype(np.float32)
 
     def make_aggregate_fn(self, codec, *, mesh=None, param_specs=None,
-                          axis="pod"):
-        if self.weights is not None:
+                          axis="pod", dynamic=False):
+        if self.weights is not None or dynamic:
+            # per-round weight row (explicit weights and/or live-set
+            # renormalization) — always the weighted paths
             fused = codec.make_fused_mean(mesh=mesh, axis=axis,
                                           weighted=True)
             if fused is not None:
@@ -443,8 +492,10 @@ class FullAverage(Aggregator):
         return lambda stacked, weights=None: averaging.average_pjit(
             codec.roundtrip(stacked))
 
-    def comm_bytes(self, codec, stacked, round_index):
-        # upload on the codec's wire + f32/raw download of the shared model
+    def comm_bytes(self, codec, stacked, round_index, live=None):
+        # upload on the codec's wire + f32/raw download of the shared
+        # model; under elastic membership only live rows touch the wire,
+        # so the PER-LIVE-PARTICIPANT bill is the same expression
         return codec.wire_bytes(stacked) + participant_bytes(stacked)
 
 
@@ -470,7 +521,7 @@ class PartialParticipation(Aggregator):
     seed: int = 0
     name = "partial"
 
-    def mixing_matrix(self, round_index, K):
+    def mixing_matrix(self, round_index, K, live=None):
         if not 1 <= self.m <= K:
             raise ValueError(f"need 1 <= m <= K, got m={self.m} K={K}")
         base = (np.asarray(self.weights, np.float64) if self.weights
@@ -479,32 +530,52 @@ class PartialParticipation(Aggregator):
             raise ValueError(f"weights must have length K={K}")
         if not np.isfinite(base).all() or (base < 0).any():
             raise ValueError(f"weights must be finite and >= 0; got {base}")
+        if live is not None:
+            # elastic membership: only live participants can be sampled;
+            # a shrunken live set shrinks the draw (m_eff = min(m, live))
+            # rather than erroring — error only when NOTHING is live
+            base = base * np.asarray(live, bool)
+            if not (base > 0).any():
+                raise ValueError(
+                    "partial participation has zero live participants "
+                    f"with positive weight at round {round_index} "
+                    f"(live={np.asarray(live, bool)})")
         # only participants with weight can be sampled — a zero-weight-only
         # sample would otherwise normalize 0/0 into a NaN mixing matrix
         eligible = np.nonzero(base > 0)[0]
-        if len(eligible) < self.m:
+        m_eff = min(self.m, len(eligible)) if live is not None else self.m
+        if len(eligible) < m_eff:
             raise ValueError(
-                f"need m={self.m} participants with positive weight; "
+                f"need m={m_eff} participants with positive weight; "
                 f"only {len(eligible)} of K={K} have one")
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, round_index]))
-        sel = rng.choice(eligible, size=self.m, replace=False)
+        sel = rng.choice(eligible, size=m_eff, replace=False)
         w = np.zeros(K, np.float64)
         w[sel] = base[sel]
         w /= w.sum()
         # every row identical: all K download the same new shared model
         return np.broadcast_to(w, (K, K)).astype(np.float32)
 
-    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
+                                dynamic=False):
         # rows of the mixing matrix are identical (everyone downloads the
         # same weighted mean), so the broadcast-weighted psum specialization
-        # applies — shared with weighted FullAverage
+        # applies — shared with weighted FullAverage; the weight row is
+        # honored per call, so it serves the dynamic (live-set) case too
         return _make_weighted_psum_aggregate(self, codec, mesh, param_specs,
                                              axis)
 
-    def comm_bytes(self, codec, stacked, round_index):
+    def comm_bytes(self, codec, stacked, round_index, live=None):
         K = jax.tree.leaves(stacked)[0].shape[0]
         up = codec.wire_bytes(stacked)          # only m of K pay the upload
+        if live is not None:
+            n_live = max(int(np.asarray(live, bool).sum()), 1)
+            m_eff = min(self.m, n_live)
+            # only the n_live rows touch the wire; the sampled-upload cost
+            # amortizes over them, every live row pays the download
+            return (math.ceil(m_eff * up / n_live)
+                    + participant_bytes(stacked))
         return math.ceil(self.m * up / K) + participant_bytes(stacked)
 
 
@@ -518,11 +589,35 @@ class RingGossip(Aggregator):
 
     name = "ring"
 
-    def mixing_matrix(self, round_index, K):
+    def mixing_matrix(self, round_index, K, live=None):
+        if live is None:
+            W = np.zeros((K, K), np.float32)
+            for k in range(K):
+                W[k, k] += 0.5
+                W[k, (k - 1) % K] += 0.5
+            return W
+        # elastic membership: route around dead neighbors — each live
+        # participant averages with its nearest LIVE ring predecessor; a
+        # sole survivor (or a dead row, which the engine identity-carries
+        # anyway) keeps its own model
+        live = np.asarray(live, bool)
+        if not live.any():
+            raise ValueError(
+                f"ring gossip has zero live participants at round "
+                f"{round_index}")
         W = np.zeros((K, K), np.float32)
         for k in range(K):
-            W[k, k] += 0.5
-            W[k, (k - 1) % K] += 0.5
+            if not live[k]:
+                W[k, k] = 1.0
+                continue
+            prev = (k - 1) % K
+            while prev != k and not live[prev]:
+                prev = (prev - 1) % K
+            if prev == k:                       # sole live participant
+                W[k, k] = 1.0
+            else:
+                W[k, k] += 0.5
+                W[k, prev] += 0.5
         return W
 
     def _make_host_aggregate_fn(self, codec):
@@ -545,7 +640,14 @@ class RingGossip(Aggregator):
             return jax.tree.map(one, stacked, rt)
         return aggregate
 
-    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis):
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
+                                dynamic=False):
+        if dynamic:
+            # the static ppermute bakes the all-live ring; under elastic
+            # membership the routed matrix must be honored per round, so
+            # fall back to the dense host mixing (correctness over the
+            # specialized wire pattern — revisit with a traced permute)
+            return None
         # the ring's wire pattern is a collective permute: each pod codec-
         # roundtrips its own row (the send leg) and receives exactly one
         # neighbor row (one ppermute per leaf, f32 payloads, combinable by
@@ -574,9 +676,11 @@ class RingGossip(Aggregator):
                 out_specs=param_specs, check_vma=False)(stacked)
         return aggregate
 
-    def comm_bytes(self, codec, stacked, round_index):
+    def comm_bytes(self, codec, stacked, round_index, live=None):
         # each participant sends its encoded model to one neighbor and
         # receives one encoded model back — both legs on the wire format
+        if live is not None and int(np.asarray(live, bool).sum()) <= 1:
+            return 0                 # a sole survivor has nobody to gossip
         return 2 * codec.wire_bytes(stacked)
 
 
@@ -752,15 +856,32 @@ class SyncPolicy(abc.ABC):
 
     @abc.abstractmethod
     def update(self, state: SyncState, round_i: int, rel_change: float,
-               synced: bool = True) -> SyncState:
+               synced: bool = True, events: tuple = ()) -> SyncState:
         """Post-round host hook: fold the round's Eq. 4 metric (or, on a
         skipped round, the divergence) into the state; returns the state
-        whose ``T`` drives round ``round_i + 1``."""
+        whose ``T`` drives round ``round_i + 1``.
 
-    def should_sync(self, div: float, round_i: int) -> bool:
+        ``events`` (elastic membership): the round's ``(round, slot,
+        "join"|"leave")`` membership events. On a churn round the Eq. 4
+        metric jumps because the LIVE SET moved, not because training
+        converged — policies reading rel_change as a convergence signal
+        (ILE's doubling, the trigger's optional ε) should hold their
+        decision on such rounds."""
+
+    def should_sync(self, div: float, round_i: int, delta=None) -> bool:
         """Host-side gate decision (python engine). Must implement the
-        same decision as :meth:`traced_should_sync`."""
+        same decision as :meth:`traced_should_sync`; ``delta`` overrides
+        the policy's static threshold when :meth:`round_delta` moved it
+        for this round (membership-forced syncs)."""
         return True
+
+    def round_delta(self, events: tuple = ()):
+        """The round's divergence threshold as the engines consume it —
+        traced into the fused gate, passed to :meth:`should_sync` by the
+        python engine. The base is the static ``delta``; gated policies
+        may move it per round (e.g. force a sync when the membership
+        changed). Host hook: never retraces."""
+        return self.delta
 
     def traced_should_sync(self, div, delta):
         """The gate as the fused engine embeds it on-device: ``div`` is
@@ -790,8 +911,11 @@ class ILE(SyncPolicy):
     epsilon: float = 0.01
     name = "ile"
 
-    def update(self, state, round_i, rel_change, synced=True):
-        T = 2 * state.T if rel_change <= self.epsilon else state.T
+    def update(self, state, round_i, rel_change, synced=True, events=()):
+        # hold the doubling on membership-change rounds: the Eq. 4 metric
+        # moved because the live set did, not because training stabilized
+        T = (2 * state.T if rel_change <= self.epsilon and not events
+             else state.T)
         return dataclasses.replace(
             state, T=T, history=state.history + ((round_i, rel_change, T),))
 
@@ -803,7 +927,7 @@ class FLE(SyncPolicy):
 
     name = "fle"
 
-    def update(self, state, round_i, rel_change, synced=True):
+    def update(self, state, round_i, rel_change, synced=True, events=()):
         return dataclasses.replace(
             state,
             history=state.history + ((round_i, rel_change, state.T),))
@@ -829,12 +953,23 @@ class DivergenceTrigger(SyncPolicy):
     name = "divtrigger"
     divergence_gated = True
 
-    def should_sync(self, div, round_i):
-        return div > self.delta
+    def should_sync(self, div, round_i, delta=None):
+        return div > (self.delta if delta is None else delta)
 
-    def update(self, state, round_i, rel_change, synced=True):
+    def round_delta(self, events=()):
+        # a membership change forces the sync: a rejoining participant
+        # needs the current shared model on the wire, and a leave shifts
+        # the live average — the divergence (>= 0) always exceeds -1, so
+        # the round communicates regardless of how quiet the locals are.
+        # Pure traced data: the forced round reuses the compiled gate.
+        if events:
+            return -1.0
+        return self.delta
+
+    def update(self, state, round_i, rel_change, synced=True, events=()):
         T = state.T
-        if synced and self.epsilon is not None and rel_change <= self.epsilon:
+        if (synced and not events and self.epsilon is not None
+                and rel_change <= self.epsilon):
             T = 2 * state.T
         skipped = state.skipped if synced else state.skipped + (round_i,)
         return dataclasses.replace(
@@ -884,6 +1019,29 @@ class FusedEngine(RoundEngine):
         return _FusedRunner(learner, self.chunk)
 
 
+def _live_loss_means(losses, live_np):
+    """Per-epoch mean loss over the LIVE participants (all K when
+    ``live_np`` is None — the static path, bit-compatible)."""
+    if live_np is None:
+        return [float(np.asarray(x).mean()) for x in losses]
+    w = np.asarray(live_np, np.float32)
+    n_live = max(float(w.sum()), 1.0)
+    return [float((np.asarray(x) * w).sum() / n_live) for x in losses]
+
+
+def _gate_accepts_delta(policy) -> bool:
+    """Whether the policy's host gate takes the per-round ``delta``
+    override. Subclasses written before elastic membership override
+    ``should_sync(self, div, round_i)`` without it; they still gate on
+    the static threshold, so call them with the legacy signature."""
+    try:
+        params = inspect.signature(type(policy).should_sync).parameters
+    except (TypeError, ValueError):
+        return True
+    return "delta" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
 class _PythonRunner:
     def __init__(self, learner):
         self.learner = learner
@@ -898,37 +1056,59 @@ class _PythonRunner:
         total = learner.epochs_budget(state)
         sync_ref = learner._sync_ref(state)
         mask = learner.batch_mask
+        # elastic membership: the liveness row rides into the jitted epoch
+        # as traced data (None on the static path — bit-identical)
+        live_np = learner._live_np(state)
+        live_row = (None if live_np is None
+                    else jnp.asarray(live_np, jnp.float32))
         lrs, losses = [], []
         for j in range(T_i):
             lr = float(learner.schedule.lr(i, j, T_i, ge0 + j, total))
             lrs.append(lr)
             batches = epoch_batches_fn(i, j)
-            args = (batches, lr) if mask is None else (batches, lr, mask)
+            args = (batches, lr)
+            if mask is not None:
+                args += (mask,)
+            if live_row is not None:
+                args += (live_row,)
             params, opt, l = learner._jit_epoch(
                 state["params"], state["opt"], *args)
             state["params"], state["opt"] = params, opt
             losses.append(jax.device_get(l))
 
         if policy.divergence_gated:
-            div = sched_mod.divergence(state["params"], sync_ref)
-            synced = bool(policy.should_sync(div, i))
+            div = sched_mod.divergence(state["params"], sync_ref, live_np)
+            if _gate_accepts_delta(policy):
+                synced = bool(policy.should_sync(
+                    div, i, delta=learner._round_delta(state)))
+            else:
+                # legacy SyncPolicy subclass: should_sync(div, round_i)
+                # predates the membership delta override — honor it as-is
+                synced = bool(policy.should_sync(div, i))
         else:
             div, synced = None, True
         if synced:
             # aggregate (Eq. 2 / partial / gossip) over the codec's wire
             averaged = self._jit_agg(state["params"],
-                                     learner.round_weights(i))
-            new_avg = averaging.unstack_participant(averaged, 0)
+                                     learner.round_weights(i, state))
+            k0 = 0 if live_np is None else int(np.argmax(live_np))
+            new_avg = averaging.unstack_participant(averaged, k0)
             rel = (float("inf") if state["prev_avg"] is None
                    else relative_change(new_avg, state["prev_avg"]))
             fresh_opt = jax.vmap(learner.opt.init)(averaged)
+            if live_row is not None:
+                # dead rows: identity carry — no download, own opt kept
+                averaged = engine_mod.select_live(live_row, averaged,
+                                                  state["params"])
+                fresh_opt = engine_mod.select_live(live_row, fresh_opt,
+                                                   state["opt"])
         else:
             # quiet round (Kamp): keep local params AND optimizer state,
             # reference unchanged, nothing crosses the wire
             averaged, fresh_opt = state["params"], state["opt"]
             new_avg, rel = sync_ref, div
         return learner._finish_round(state, i, T_i, rel,
-                                     [float(x.mean()) for x in losses],
+                                     _live_loss_means(losses, live_np),
                                      lrs[0], lrs[-1], averaged, fresh_opt,
                                      new_avg, synced=synced)
 
@@ -947,16 +1127,19 @@ class _FusedRunner:
         self._traced_lr = traced_body(learner.schedule)
         self._traced_gate = type(learner.sync_policy).traced_should_sync
         gate_fn = learner.sync_policy.traced_should_sync
+        # elastic membership: build the live-row variants once; membership
+        # changes then ride in as traced data (zero retraces)
+        self._live = learner._churn_active
         self._round = engine_mod.make_fused_round(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
             aggregate_fn=learner._aggregate_fn, gated=self._gated,
-            gate_fn=gate_fn, masked=self._masked)
+            gate_fn=gate_fn, masked=self._masked, live=self._live)
         self._epochs = engine_mod.make_fused_epochs(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
-            masked=self._masked)
+            masked=self._masked, live=self._live)
         self._finalize = engine_mod.make_fused_finalize(
             learner.opt, aggregate_fn=learner._aggregate_fn,
-            gated=self._gated, gate_fn=gate_fn)
+            gated=self._gated, gate_fn=gate_fn, live=self._live)
 
     def run_round(self, state, epoch_batches_fn):
         """One round as one (or, past ``chunk`` epochs, a few chained)
@@ -980,14 +1163,19 @@ class _FusedRunner:
         ge0 = jnp.int32(state["global_epoch"])
         sched = learner.schedule.device_round_params(i)
         total = jnp.int32(learner.epochs_budget(state))
-        agg_w = learner.round_weights(i)
+        agg_w = learner.round_weights(i, state)
         if gated:
             sync_ref = learner._sync_ref(state)
-            delta = jnp.float32(learner.sync_policy.delta)
+            delta = jnp.float32(learner._round_delta(state))
         div_dev, sync_dev = None, True
         # the ragged-shard validity mask rides in traced right after the
-        # staged batches (absent entirely on the unmasked executables)
+        # staged batches (absent entirely on the unmasked executables);
+        # the liveness row (elastic membership) follows the same way
         mask_args = (learner.batch_mask,) if self._masked else ()
+        live_np = learner._live_np(state)
+        if self._live:
+            live_row = jnp.asarray(live_np, jnp.float32)
+            mask_args = mask_args + (live_row,)
         # state["params"]/["opt"] are reassigned immediately after every
         # donating call below, so an exception mid-round (e.g. from
         # epoch_batches_fn) can never leave state holding deleted buffers.
@@ -1017,7 +1205,10 @@ class _FusedRunner:
             # j0/T_i/ge0/sched/total are traced, so chunks reuse one
             # compiled program across doublings AND schedule swaps.
             if not gated:
-                old_avg = averaging.unstack_participant(state["params"], 0)
+                # the entry shared model sits in the first LIVE slot (slot
+                # 0 on the static path)
+                k0 = 0 if live_np is None else int(np.argmax(live_np))
+                old_avg = averaging.unstack_participant(state["params"], k0)
             lparts, rparts, j0 = [], [], 0
             while j0 < T_i:
                 C = min(self.chunk, T_i - j0)
@@ -1031,15 +1222,22 @@ class _FusedRunner:
                 rparts.append(r)
                 j0 += C
             if gated:
+                fin_args = ((sync_ref, delta, live_row, agg_w) if self._live
+                            else (sync_ref, delta, agg_w))
                 out_p, out_o, rel_t, div_t, sync_t, new_avg = \
-                    self._finalize(state["params"], state["opt"], sync_ref,
-                                   delta, agg_w)
+                    self._finalize(state["params"], state["opt"], *fin_args)
                 state["params"], state["opt"] = out_p, out_o
                 lparts, rparts, rel_dev, div_dev, sync_dev = jax.device_get(
                     (lparts, rparts, rel_t, div_t, sync_t))
             else:
-                out_p, out_o, rel_t, new_avg = self._finalize(
-                    state["params"], old_avg, agg_w)
+                if self._live:
+                    # live variant threads opt_state so dead rows keep it
+                    out_p, out_o, rel_t, new_avg = self._finalize(
+                        state["params"], state["opt"], old_avg, live_row,
+                        agg_w)
+                else:
+                    out_p, out_o, rel_t, new_avg = self._finalize(
+                        state["params"], old_avg, agg_w)
                 state["params"], state["opt"] = out_p, out_o
                 lparts, rparts, rel_dev = jax.device_get(
                     (lparts, rparts, rel_t))
@@ -1053,7 +1251,7 @@ class _FusedRunner:
         else:
             rel = float(rel_dev)
         return learner._finish_round(state, i, T_i, rel,
-                                     [float(l.mean()) for l in losses],
+                                     _live_loss_means(losses, live_np),
                                      float(lrs[0]), float(lrs[-1]),
                                      out_p, out_o, new_avg, synced=synced)
 

@@ -50,8 +50,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import api, averaging, engine as engine_mod
+from repro.core import membership as membership_mod
 from repro.optim.optimizers import get_optimizer
 
 
@@ -65,6 +67,8 @@ class RoundLog:
     local_losses: list
     comm_bytes: int          # 0 on rounds a gated sync policy skipped
     synced: bool = True
+    live: int = -1           # live participants this round (K when static;
+                             # -1 only on legacy hand-built logs)
 
 
 @dataclass
@@ -102,6 +106,20 @@ class CoLearner:
     #: through the epoch bodies as traced data (masked step = identity
     #: carry), so no shard is clamped to the global minimum length.
     batch_mask: Any = None
+    #: elastic membership (``repro.core.membership``): a ChurnSchedule, a
+    #: registry name ("none" | "scripted" | "random"), or None. A static
+    #: schedule (``is_static``) keeps the learner on the exact pre-
+    #: membership code path — bit-identical to a learner with no churn
+    #: argument at all. An active schedule threads a traced (K,) liveness
+    #: row through the engines: dead slots are identity carries (no
+    #: training, no upload, no download) and rejoins warm-start from the
+    #: last synced model via ``restart_participant``.
+    churn: Any = None
+    #: False = ablation baseline for benchmarks/churn.py: keep the STATIC
+    #: mixing matrix under churn (dead rows' stale models pollute the
+    #: mean) while the engine-side identity carries still apply. True
+    #: (default) renormalizes the aggregator over the live set.
+    liveness_aware: bool = True
 
     def __post_init__(self):
         self.codec = api.get_codec(self.codec)
@@ -111,6 +129,10 @@ class CoLearner:
         # through the same registries the names go through
         self.schedule = api.get_schedule(self.schedule, self.cfg)
         self.sync_policy = api.get_sync_policy(self.sync_policy, self.cfg)
+        self.churn = membership_mod.get_churn(self.churn)
+        # static schedules bypass the membership machinery entirely, so
+        # "no churn" is bit-for-bit the pre-membership static-K path
+        self._churn_active = not self.churn.is_static
         if self.shard_sizes is not None:
             self.shard_sizes = tuple(int(s) for s in self.shard_sizes)
             if len(self.shard_sizes) != self.cfg.n_participants:
@@ -137,9 +159,12 @@ class CoLearner:
         # the python engine jits it per-epoch, the fused engine scans over
         # it, so the SGD semantics cannot diverge
         self._jit_epoch = jax.jit(engine_mod.make_epoch_fn(
-            self.loss_fn, self.opt, masked=self.batch_mask is not None))
-        # aggregate(stacked, weights): codec roundtrip + participant mixing
-        self._aggregate_fn = self.aggregator.make_aggregate_fn(self.codec)
+            self.loss_fn, self.opt, masked=self.batch_mask is not None,
+            live=self._churn_active))
+        # aggregate(stacked, weights): codec roundtrip + participant mixing;
+        # dynamic = the matrix renormalizes over the live set per round
+        self._aggregate_fn = self.aggregator.make_aggregate_fn(
+            self.codec, dynamic=self._churn_active and self.liveness_aware)
         self._comm_cache = None
         self._runner = self.round_engine.bind(self)
 
@@ -188,8 +213,17 @@ class CoLearner:
         stacked = averaging.stack_participants(params, K)
         opt_state = jax.vmap(self.opt.init)(stacked)
         ctrl = self.sync_policy.init_state(self.cfg.T0)
+        # membership starts at the schedule's round-0 mask so initially-
+        # dead standby slots log no synthetic leave events; static runs
+        # carry the all-live record for checkpoint uniformity
+        if self._churn_active:
+            mem = membership_mod.Membership(live=tuple(
+                bool(a) for a in self.churn.live_mask(0, K)))
+        else:
+            mem = membership_mod.Membership.all_live(K)
         return {"params": stacked, "opt": opt_state, "ctrl": ctrl,
-                "round": 0, "global_epoch": 0, "prev_avg": None, "log": []}
+                "round": 0, "global_epoch": 0, "prev_avg": None, "log": [],
+                "membership": mem}
 
     def epochs_budget(self, state):
         """The ELR anneal denominator for the round about to run: epochs
@@ -240,13 +274,39 @@ class CoLearner:
         one = averaging.unstack_participant(state["params"], 0)
         return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(one))
 
-    def round_weights(self, round_index):
+    def round_weights(self, round_index, state=None):
         """The aggregator's (K, K) mixing matrix for this round as a device
-        array (None for statically-known schemes, e.g. Eq. 2)."""
+        array (None for statically-known schemes, e.g. Eq. 2).
+
+        Under active churn with ``liveness_aware`` the matrix renormalizes
+        over the round's live set (read from ``state["membership"]``), so
+        a matrix is always produced — the aggregate fn was built dynamic.
+        """
+        if self._churn_active and self.liveness_aware:
+            live = (state["membership"].live_mask() if state is not None
+                    else None)
+            return jnp.asarray(self.aggregator.mixing_matrix(
+                round_index, self.cfg.n_participants, live=live),
+                jnp.float32)
         if not self.aggregator.uses_weights:
             return None
         return jnp.asarray(self.aggregator.mixing_matrix(
             round_index, self.cfg.n_participants), jnp.float32)
+
+    def _live_np(self, state):
+        """The round's bool (K,) liveness row (None on the static path —
+        the engines then run the pre-membership executables)."""
+        if not self._churn_active:
+            return None
+        return state["membership"].live_mask()
+
+    def _round_delta(self, state):
+        """The round's divergence threshold: the sync policy's, possibly
+        moved by this round's membership events (a join forces the sync so
+        the rejoined slot gets the current shared model)."""
+        events = (state["membership"].round_events(state["round"])
+                  if self._churn_active else ())
+        return self.sync_policy.round_delta(events)
 
     def run_round(self, state, epoch_batches_fn):
         """One communication round.
@@ -257,7 +317,23 @@ class CoLearner:
 
         Dispatches to the bound round engine; both engines apply the
         identical state transition (params, opt reset, controller, log).
+        Under active churn the membership advances FIRST: the schedule's
+        round mask is stepped into ``state["membership"]`` (logging
+        join/leave events) and every slot that joined this round warm-
+        starts from the last synced shared model before any epoch runs.
         """
+        if self._churn_active:
+            i = state["round"]
+            new_live = self.churn.live_mask(i, self.cfg.n_participants)
+            if not np.any(new_live):
+                raise ValueError(
+                    f"churn schedule {self.churn.name!r} leaves zero live "
+                    f"participants at round {i}")
+            state["membership"] = state["membership"].step(i, new_live)
+            for k in state["membership"].joined(i):
+                # warm join: restart local training from the last SYNCED
+                # shared model (paper failure semantics, elastic form)
+                self.restart_participant(state, k)
         return self._runner.run_round(state, epoch_batches_fn)
 
     def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
@@ -274,16 +350,27 @@ class CoLearner:
         """
         state["params"], state["opt"] = averaged, fresh_opt
         state["prev_avg"] = new_avg
+        if self._churn_active:
+            mem = state["membership"]
+            events, n_live = mem.round_events(i), mem.n_live
+        else:
+            events, n_live = (), self.cfg.n_participants
         state["ctrl"] = self.sync_policy.update(state["ctrl"], i, rel,
-                                                synced)
+                                                synced, events=events)
         state["global_epoch"] += T_i
         # comm volume per participant, priced by the aggregator through the
         # codec (compressed upload + raw download; gossip pays wire both
         # ways); round-independent accounting (all built-in aggregators) is
         # computed once — flat-codec pricing rebuilds a host-side layout
-        # table, which must stay off the per-round path
+        # table, which must stay off the per-round path. Under active churn
+        # the live set changes the bill per round, so the cache is bypassed
+        # and only live rows are billed.
         if not synced:
             comm = 0
+        elif self._churn_active:
+            comm = self.aggregator.comm_bytes(
+                self.codec, state["params"], i,
+                live=state["membership"].live_mask())
         elif self.aggregator.static_comm:
             if self._comm_cache is None:
                 self._comm_cache = self.aggregator.comm_bytes(
@@ -293,7 +380,8 @@ class CoLearner:
             comm = self.aggregator.comm_bytes(self.codec, state["params"], i)
         state["round"] = i + 1
         state["log"].append(RoundLog(i, T_i, lr_first, lr_last, rel,
-                                     local_losses, comm, synced))
+                                     local_losses, comm, synced,
+                                     live=n_live))
         return state
 
     # legacy handles used by tests/benchmarks to poke at the fused
@@ -319,7 +407,11 @@ class CoLearner:
         return self._fused_handle("_finalize")
 
     def shared_model(self, state):
-        return averaging.unstack_participant(state["params"], 0)
+        # under churn the canonical slot is the first LIVE one — a dead
+        # slot 0 holds the stale pre-crash model, not the shared average
+        live = self._live_np(state)
+        k0 = 0 if live is None else int(np.argmax(live))
+        return averaging.unstack_participant(state["params"], k0)
 
     def _sync_ref(self, state):
         """The last synced shared model — the Eq. 4 / divergence reference
@@ -329,18 +421,27 @@ class CoLearner:
         synced rounds."""
         if state["prev_avg"] is not None:
             return state["prev_avg"]
-        return averaging.unstack_participant(state["params"], 0)
+        live = self._live_np(state)
+        k0 = 0 if live is None else int(np.argmax(live))
+        return averaging.unstack_participant(state["params"], k0)
 
     # -- failure handling (paper: restart the participant's local training) --
     def restart_participant(self, state, k):
-        """Reset participant k's replica to the current shared model.
+        """Reset participant k's replica to the last SYNCED shared model.
 
         Both the parameters AND the optimizer state row are reset (a stale
         momentum/Adam moment would keep pushing the restarted replica along
         its pre-failure trajectory — the paper's failure semantics restart
         local training from the shared model outright).
+
+        The reference is ``_sync_ref`` (``prev_avg``, i.e. the last synced
+        average), NOT slot 0 of the current params: under ``RingGossip``
+        the rows stay distinct, and after a quiet ``DivergenceTrigger``
+        round slot 0 holds a locally-drifted model — resetting from either
+        would hand the restarted participant some peer's private
+        trajectory instead of the shared model the contract promises.
         """
-        shared = self.shared_model(state)
+        shared = self._sync_ref(state)
         state["params"] = jax.tree.map(
             lambda t, s: t.at[k].set(s), state["params"], shared)
         fresh = self.opt.init(shared)

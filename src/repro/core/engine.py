@@ -55,6 +55,20 @@ loss mean — so participants with unequal shard sizes train on exactly
 their own data inside one shape-stable executable (compile count stays
 flat across mask values; asserted by ``round_latency.py --check-retrace``).
 
+``live=True`` builds the elastic-membership variants (``repro.core.
+membership``): the executable takes a traced ``(K,)`` float 0/1 *liveness
+row* right after the batch mask (or right after the batches when
+unmasked). A dead participant slot is an identity carry through the WHOLE
+round — the per-step commit gate is ``batch_mask & live`` so it trains
+nothing, its loss is excluded from the epoch mean, and after aggregation
+``select_live`` restores its own params/opt (it neither uploads nor
+downloads; the aggregators renormalize the mixing matrix over the live
+set host-side, so the mean never sees the dead rows either). The
+shared-model slot is the FIRST LIVE row (``argmax`` of the traced row,
+still on-device), not slot 0. Membership changes are pure traced data:
+crash, rejoin, and flaky-slot rounds all reuse ONE compiled program
+(asserted by ``round_latency.py --check-retrace`` scenario 4).
+
 Backend API — shared by the simulation and pod paths:
 
   * simulation (single host, K vmapped participants): the defaults.
@@ -99,7 +113,31 @@ def stack_epoch_batches(per_epoch):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_epoch)
 
 
-def make_epoch_fn(loss_fn, opt, spmd_axis_name=None, masked=False):
+def select_live(live_row, new, old):
+    """Per-slot identity carry over a stacked (K, ...) pytree pair: keep
+    ``new`` on live rows, ``old`` on dead ones. ``live_row`` is the traced
+    0/1 float (K,) liveness row."""
+    alive = live_row.astype(bool)
+
+    def sel(n, o):
+        return jnp.where(alive.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def first_live(live_row):
+    """Traced index of the first live slot — the shared-model row under
+    elastic membership (slot 0 may be dead)."""
+    return jnp.argmax(live_row)
+
+
+def unstack_first_live(stacked, live_row):
+    """Unstack the first LIVE participant's model (traced dynamic index)."""
+    idx = first_live(live_row)
+    return jax.tree.map(lambda t: t[idx], stacked)
+
+
+def make_epoch_fn(loss_fn, opt, spmd_axis_name=None, masked=False,
+                  live=False):
     """One local epoch for all K participants (vmapped).
 
     Returns epoch_fn(stacked_params, opt_state, batches, lr) ->
@@ -115,8 +153,18 @@ def make_epoch_fn(loss_fn, opt, spmd_axis_name=None, masked=False):
     batches than ``n_batches`` train on exactly their own data with no
     min-clamp. The mask is plain traced data: it never changes the compiled
     program, only which steps commit.
+
+    ``live=True`` is the elastic-membership variant: epoch_fn takes a
+    trailing traced (K,) 0/1 float ``live_row`` (after ``mask`` when both
+    are on). A dead participant's commit gate is forced off for every step
+    — identity carry on params/opt — and its epoch loss is 0 with a zero
+    denominator weight, so it contributes nothing anywhere. Liveness is
+    traced data, exactly like the batch mask: membership changes never
+    recompile.
     """
-    def one_participant(params, ostate, pbatches, lr, pmask=None):
+    def participant_body(params, ostate, pbatches, lr, pmask, palive):
+        alive = None if palive is None else palive.astype(bool)
+
         def step(carry, xs):
             params, ostate = carry
             if masked:
@@ -127,32 +175,57 @@ def make_epoch_fn(loss_fn, opt, spmd_axis_name=None, masked=False):
                 loss_fn, has_aux=True)(params, batch)
             upd, new_ostate = opt.update(grads, ostate, params, lr)
             new_params = apply_updates(params, upd)
+            # identity carry on padding slots / dead participants: nothing
+            # trains, nothing counts — compute runs unconditionally so the
+            # executable is shape-stable, the select commits only real steps
+            gate = None
             if masked:
-                # identity carry on padding slots: nothing trains, nothing
-                # counts — compute runs unconditionally so the executable
-                # is shape-stable, the select commits only real steps
-                keep = lambda new, old: jnp.where(valid, new, old)  # noqa: E731
+                gate = valid
+            if alive is not None:
+                gate = alive if gate is None else (gate & alive)
+            if gate is not None:
+                keep = lambda new, old: jnp.where(gate, new, old)  # noqa: E731
                 new_params = jax.tree.map(keep, new_params, params)
                 new_ostate = jax.tree.map(keep, new_ostate, ostate)
-                loss = jnp.where(valid, loss, 0.0)
+                loss = jnp.where(gate, loss, 0.0)
             return (new_params, new_ostate), loss
         xs = (pbatches, pmask) if masked else pbatches
         (params, ostate), losses = jax.lax.scan(step, (params, ostate), xs)
-        if masked:
-            mean = losses.sum() / jnp.maximum(pmask.sum(), 1)
+        if masked or live:
+            denom = pmask.sum() if masked else losses.size
+            if live:
+                denom = denom * palive
+            mean = losses.sum() / jnp.maximum(denom, 1)
         else:
             mean = losses.mean()
         return params, ostate, mean
 
+    # explicit signature per variant so vmap's positional in_axes line up
+    if masked and live:
+        def one_participant(params, ostate, pbatches, lr, pmask, palive):
+            return participant_body(params, ostate, pbatches, lr, pmask,
+                                    palive)
+    elif masked:
+        def one_participant(params, ostate, pbatches, lr, pmask):
+            return participant_body(params, ostate, pbatches, lr, pmask, None)
+    elif live:
+        def one_participant(params, ostate, pbatches, lr, palive):
+            return participant_body(params, ostate, pbatches, lr, None,
+                                    palive)
+    else:
+        def one_participant(params, ostate, pbatches, lr):
+            return participant_body(params, ostate, pbatches, lr, None, None)
+
     vmap_kw = {"spmd_axis_name": spmd_axis_name} if spmd_axis_name else {}
-    in_axes = (0, 0, 0, None) + ((0,) if masked else ())
+    in_axes = ((0, 0, 0, None) + ((0,) if masked else ())
+               + ((0,) if live else ()))
     return jax.vmap(one_participant, in_axes=in_axes, **vmap_kw)
 
 
-def _make_epoch_scan(epoch_fn, lr_fn, masked=False):
-    """scan_epochs(params, opt, batches, j0, T_i, ge0, sched, total[, mask]):
-    run the leading-dim epochs of ``batches`` with the schedule computed
-    traced in-scan via ``lr_fn(sched, j, T_i, ge, total)``.
+def _make_epoch_scan(epoch_fn, lr_fn, masked=False, live=False):
+    """scan_epochs(params, opt, batches, j0, T_i, ge0, sched, total[, mask]
+    [, live_row]): run the leading-dim epochs of ``batches`` with the
+    schedule computed traced in-scan via ``lr_fn(sched, j, T_i, ge, total)``.
 
     j0 (round-local offset of the first staged epoch), T_i (the round's
     cycle denominator), ge0 (global epoch at round start), ``sched`` (the
@@ -161,21 +234,21 @@ def _make_epoch_scan(epoch_fn, lr_fn, masked=False):
     as T_i doubles, as the budget updates, and across built-in schedule
     swaps. ``masked=True``: a trailing (K, n_batches) bool ``mask``
     (ragged shards, also traced — see ``make_epoch_fn``) is applied every
-    epoch.
+    epoch. ``live=True``: a trailing traced (K,) liveness row is applied
+    every epoch (elastic membership — dead rows are identity carries).
     """
     def scan_epochs(stacked_params, opt_state, batches, j0, T_i,
-                    global_epoch0, sched, total, mask=None):
+                    global_epoch0, sched, total, mask=None, live_row=None):
         n = jax.tree.leaves(batches)[0].shape[0]
+        extra = (((mask,) if masked else ())
+                 + ((live_row,) if live else ()))
 
         def body(carry, xs):
             params, ostate = carry
             j, ebatches = xs
             lr = lr_fn(sched, j, T_i, global_epoch0 + j, total)
-            if masked:
-                params, ostate, loss = epoch_fn(params, ostate, ebatches,
-                                                lr, mask)
-            else:
-                params, ostate, loss = epoch_fn(params, ostate, ebatches, lr)
+            params, ostate, loss = epoch_fn(params, ostate, ebatches, lr,
+                                            *extra)
             return (params, ostate), (loss, lr)
 
         return jax.lax.scan(body, (stacked_params, opt_state),
@@ -305,9 +378,30 @@ def as_aggregate_fn(aggregate_fn=None, compress_fn=None, average_fn=None):
     return aggregate
 
 
-def _make_finalize(opt, aggregate_fn):
+def _make_finalize(opt, aggregate_fn, live=False):
     """Aggregation (Eq. 2 / mixing) + Eq. 4 metric + per-participant opt
-    reset; ``agg_weights`` is the aggregator's traced mixing matrix."""
+    reset; ``agg_weights`` is the aggregator's traced mixing matrix.
+
+    ``live=True`` (elastic membership): finalize takes ``(params,
+    opt_state, old_avg, live_row, agg_weights)`` — after aggregating, dead
+    rows are restored to their own params/opt (identity carry: a dead
+    participant neither uploads nor downloads) and ``new_avg`` is read
+    from the first LIVE row (the mixing matrix gives every live row the
+    same mixed model for averaging schemes; gossip rows differ but the
+    shared-model reference is by convention the first live row).
+    """
+    if live:
+        def finalize_live(params, opt_state, old_avg, live_row,
+                          agg_weights=None):
+            averaged = aggregate_fn(params, agg_weights)
+            new_avg = unstack_first_live(averaged, live_row)
+            rel = relative_change_traced(new_avg, old_avg)
+            fresh_opt = jax.vmap(opt.init)(averaged)
+            averaged = select_live(live_row, averaged, params)
+            fresh_opt = select_live(live_row, fresh_opt, opt_state)
+            return averaged, fresh_opt, rel, new_avg
+        return finalize_live
+
     def finalize(params, old_avg, agg_weights=None):
         averaged = aggregate_fn(params, agg_weights)
         new_avg = averaging.unstack_participant(averaged, 0)
@@ -323,7 +417,7 @@ def _default_gate(div, delta):
     return div > delta
 
 
-def _make_gated_finalize(opt, aggregate_fn, gate_fn=None):
+def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False):
     """Divergence-gated aggregation: compute the Kamp divergence of the
     locals from the last synced model, then branch — on-device, via a
     ``lax.cond`` on the traced ``do_sync`` from ``gate_fn(div, delta)``
@@ -333,9 +427,39 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None):
     reference unchanged). The cond means a quiet round skips the
     aggregation COMPUTE (codec roundtrip, mean, opt re-init) too, not
     just the wire accounting; ``rel`` is the Eq. 4 metric on synced
-    rounds and the divergence on quiet ones."""
+    rounds and the divergence on quiet ones.
+
+    ``live=True`` (elastic membership): gfinalize takes the traced
+    ``live_row`` after ``delta``; the divergence is measured over live
+    rows only, and in the sync branch dead rows keep their own params/opt
+    (identity carry) while ``new_avg`` comes from the first LIVE row."""
     if gate_fn is None:
         gate_fn = _default_gate
+
+    if live:
+        def gfinalize_live(params, opt_state, sync_ref, delta, live_row,
+                           agg_weights=None):
+            div = divergence_traced(params, sync_ref, live_row)
+            do_sync = gate_fn(div, delta)
+
+            def sync_branch(operands):
+                params, opt_state = operands
+                averaged = aggregate_fn(params, agg_weights)
+                new_avg = unstack_first_live(averaged, live_row)
+                rel = relative_change_traced(new_avg, sync_ref)
+                fresh_opt = jax.vmap(opt.init)(averaged)
+                averaged = select_live(live_row, averaged, params)
+                fresh_opt = select_live(live_row, fresh_opt, opt_state)
+                return averaged, fresh_opt, rel, new_avg
+
+            def skip_branch(operands):
+                params, opt_state = operands
+                return params, opt_state, div, sync_ref
+
+            out_p, out_o, rel, new_ref = jax.lax.cond(
+                do_sync, sync_branch, skip_branch, (params, opt_state))
+            return out_p, out_o, rel, div, do_sync, new_ref
+        return gfinalize_live
 
     def gfinalize(params, opt_state, sync_ref, delta, agg_weights=None):
         div = divergence_traced(params, sync_ref)
@@ -359,9 +483,32 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None):
     return gfinalize
 
 
+def _bind_mask_live(body, masked, live):
+    """Adapt a ``body(params, opt, batches, mask, live_row, *rest)`` to the
+    public signature for the (masked, live) combination: enabled features
+    appear as positional args right after ``batches`` (mask first, then
+    live_row); disabled ones are bound to None."""
+    if masked and live:
+        return body
+    if masked:
+        def fn(stacked_params, opt_state, batches, mask, *rest, **kw):
+            return body(stacked_params, opt_state, batches, mask, None,
+                        *rest, **kw)
+    elif live:
+        def fn(stacked_params, opt_state, batches, live_row, *rest, **kw):
+            return body(stacked_params, opt_state, batches, None, live_row,
+                        *rest, **kw)
+    else:
+        def fn(stacked_params, opt_state, batches, *rest, **kw):
+            return body(stacked_params, opt_state, batches, None, None,
+                        *rest, **kw)
+    return fn
+
+
 def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
                      spmd_axis_name=None, average_fn=None, aggregate_fn=None,
-                     gated=False, gate_fn=None, masked=False, donate=True):
+                     gated=False, gate_fn=None, masked=False, live=False,
+                     donate=True):
     """Build the single-executable round: epoch scan + aggregation + Eq. 4.
 
     loss_fn(params, batch) -> (loss, aux) for ONE participant.
@@ -397,69 +544,77 @@ def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
     ``batch_mask`` right after ``batches`` — traced, so shard-size changes
     between runs never recompile — and the epoch scan applies the
     identity-carry masking of ``make_epoch_fn(masked=True)``.
+
+    ``live=True`` (elastic membership): round_fn takes a traced (K,) 0/1
+    float ``live_row`` right after ``batches`` (after ``batch_mask`` when
+    both are on). Dead rows are identity carries end-to-end — no training,
+    no upload, no download (own params/opt restored after aggregation) —
+    the entry/exit shared model is read from the first LIVE row, and in
+    the gated variant the divergence is live-masked. Membership changes
+    are traced data: crash/rejoin/flaky rounds never recompile.
     """
     if lr_fn is None:
         lr_fn = switch_lr
     scan_epochs = _make_epoch_scan(
-        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked), lr_fn,
-        masked=masked)
+        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked,
+                      live=live), lr_fn, masked=masked, live=live)
     agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
 
     if gated:
-        gfinalize = _make_gated_finalize(opt, agg, gate_fn)
+        gfinalize = _make_gated_finalize(opt, agg, gate_fn, live=live)
 
-        def round_body(stacked_params, opt_state, batches, mask,
+        def round_body(stacked_params, opt_state, batches, mask, live_row,
                        global_epoch0, sched, total, sync_ref, delta,
                        agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
-                sched, total, mask)
-            out_p, out_o, rel, div, do_sync, new_ref = gfinalize(
-                params, opt_out, sync_ref, delta, agg_weights)
+                sched, total, mask, live_row)
+            if live:
+                out = gfinalize(params, opt_out, sync_ref, delta, live_row,
+                                agg_weights)
+            else:
+                out = gfinalize(params, opt_out, sync_ref, delta,
+                                agg_weights)
+            out_p, out_o, rel, div, do_sync, new_ref = out
             return out_p, out_o, {"losses": losses, "lrs": lrs, "rel": rel,
                                   "div": div, "synced": do_sync,
                                   "new_avg": new_ref}
-
-        if masked:
-            round_fn = round_body
-        else:
-            def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                         sched, total, sync_ref, delta, agg_weights=None):
-                return round_body(stacked_params, opt_state, batches, None,
-                                  global_epoch0, sched, total, sync_ref,
-                                  delta, agg_weights)
     else:
-        finalize = _make_finalize(opt, agg)
+        finalize = _make_finalize(opt, agg, live=live)
 
-        def round_body(stacked_params, opt_state, batches, mask,
+        def round_body(stacked_params, opt_state, batches, mask, live_row,
                        global_epoch0, sched, total, agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
-            # round entry: every slot holds the shared model w̄^{i-1}
-            old_avg = averaging.unstack_participant(stacked_params, 0)
+            if live:
+                # round entry: every LIVE slot holds the shared model
+                # w̄^{i-1} (warm-join restores joined slots host-side
+                # before the round executes), so read the first live row
+                old_avg = unstack_first_live(stacked_params, live_row)
+            else:
+                # round entry: every slot holds the shared model w̄^{i-1}
+                old_avg = averaging.unstack_participant(stacked_params, 0)
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
-                sched, total, mask)
-            del opt_out  # paper: local opt state is discarded at aggregation
-            averaged, fresh_opt, rel, new_avg = finalize(params, old_avg,
-                                                         agg_weights)
+                sched, total, mask, live_row)
+            if live:
+                # dead rows carry their opt state through the round
+                averaged, fresh_opt, rel, new_avg = finalize(
+                    params, opt_out, old_avg, live_row, agg_weights)
+            else:
+                del opt_out  # paper: local opt state is discarded at agg
+                averaged, fresh_opt, rel, new_avg = finalize(
+                    params, old_avg, agg_weights)
             return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
                                          "rel": rel, "new_avg": new_avg}
 
-        if masked:
-            round_fn = round_body
-        else:
-            def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                         sched, total, agg_weights=None):
-                return round_body(stacked_params, opt_state, batches, None,
-                                  global_epoch0, sched, total, agg_weights)
-
+    round_fn = _bind_mask_live(round_body, masked, live)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(round_fn, donate_argnums=donate_argnums)
 
 
 def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
-                      masked=False, donate=True):
+                      masked=False, live=False, donate=True):
     """Memory-bounded building block: a scan over ONE CHUNK of epochs.
 
     Returns epochs_fn(stacked_params, opt_state, batches, j0, T_i, ge0,
@@ -469,36 +624,31 @@ def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
     built-in schedule swaps; only a distinct chunk length C recompiles.
     ``masked=True``: epochs_fn takes a traced (K, n_batches) bool
     ``batch_mask`` right after ``batches`` (ragged shards, identity-carry
-    masking — same contract as ``make_fused_round``).
+    masking — same contract as ``make_fused_round``). ``live=True``: a
+    traced (K,) liveness row follows (dead rows are identity carries;
+    membership changes never recompile).
     """
     if lr_fn is None:
         lr_fn = switch_lr
     scan_epochs = _make_epoch_scan(
-        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked), lr_fn,
-        masked=masked)
+        make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked,
+                      live=live), lr_fn, masked=masked, live=live)
 
-    def epochs_body(stacked_params, opt_state, batches, mask, j0, T_i,
-                    global_epoch0, sched, total):
+    def epochs_body(stacked_params, opt_state, batches, mask, live_row, j0,
+                    T_i, global_epoch0, sched, total):
         (params, ostate), (losses, lrs) = scan_epochs(
             stacked_params, opt_state, batches, j0, T_i, global_epoch0,
-            sched, total, mask)
+            sched, total, mask, live_row)
         return params, ostate, losses, lrs
 
-    if masked:
-        epochs_fn = epochs_body
-    else:
-        def epochs_fn(stacked_params, opt_state, batches, j0, T_i,
-                      global_epoch0, sched, total):
-            return epochs_body(stacked_params, opt_state, batches, None,
-                               j0, T_i, global_epoch0, sched, total)
-
+    epochs_fn = _bind_mask_live(epochs_body, masked, live)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(epochs_fn, donate_argnums=donate_argnums)
 
 
 def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
                         aggregate_fn=None, gated=False, gate_fn=None,
-                        donate=True):
+                        live=False, donate=True):
     """End-of-round executable for the chunked path: aggregation + Eq. 4 +
     opt reset. finalize_fn(params, old_avg, agg_weights=None) ->
     (aggregated, fresh_opt, rel, new_avg); ``params`` is donated. The
@@ -508,10 +658,20 @@ def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
     ``gated=True``: finalize_fn(params, opt_state, sync_ref, delta,
     agg_weights=None) -> (params', opt', rel, div, synced, new_ref), the
     divergence-gated select of ``make_fused_round(gated=True)`` (params
-    and opt_state donated)."""
+    and opt_state donated).
+
+    ``live=True`` (elastic membership): the ungated variant becomes
+    finalize_fn(params, opt_state, old_avg, live_row, agg_weights=None)
+    — opt_state rides along so dead rows keep theirs — and the gated one
+    takes the traced ``live_row`` after ``delta``; dead rows are identity
+    carries and ``new_avg``/divergence follow the live set (see
+    ``make_fused_round``)."""
     agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
     if gated:
-        return jax.jit(_make_gated_finalize(opt, agg, gate_fn),
+        return jax.jit(_make_gated_finalize(opt, agg, gate_fn, live=live),
+                       donate_argnums=(0, 1) if donate else ())
+    if live:
+        return jax.jit(_make_finalize(opt, agg, live=True),
                        donate_argnums=(0, 1) if donate else ())
     return jax.jit(_make_finalize(opt, agg),
                    donate_argnums=(0,) if donate else ())

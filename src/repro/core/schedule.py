@@ -148,7 +148,7 @@ def relative_change(new_avg, old_avg) -> float:
     return float(jax.device_get(_relative_change_jit(new_avg, old_avg)))
 
 
-def divergence_traced(stacked, ref):
+def divergence_traced(stacked, ref, live=None):
     """Kamp-style (1807.03210) local-model divergence, traced.
 
     RMS over the K participants of the drift from the last *synced* shared
@@ -156,15 +156,30 @@ def divergence_traced(stacked, ref):
     ``sqrt(mean_k ‖w_k − w_ref‖²) / ‖w_ref‖``. A
     :class:`~repro.core.api.DivergenceTrigger` sync policy communicates
     only while this exceeds its δ — quiet rounds skip the wire entirely.
+
+    ``live`` (elastic membership): a traced 0/1 float (K,) liveness row;
+    the RMS then runs over the LIVE participants only — a dead slot's
+    stale parameters neither inflate nor dilute the drift signal. ``None``
+    keeps the exact static-K reduction (bit-compatible).
     """
     num = jnp.zeros((), jnp.float32)
     den = jnp.zeros((), jnp.float32)
     K = jax.tree.leaves(stacked)[0].shape[0]
+    if live is None:
+        for t, r in zip(jax.tree.leaves(stacked), jax.tree.leaves(ref)):
+            d = t.astype(jnp.float32) - r.astype(jnp.float32)[None]
+            num += jnp.sum(d * d)
+            den += jnp.sum(r.astype(jnp.float32) ** 2)
+        return jnp.sqrt(num / K) / jnp.maximum(jnp.sqrt(den), 1e-12)
+
+    w = live.astype(jnp.float32)
     for t, r in zip(jax.tree.leaves(stacked), jax.tree.leaves(ref)):
         d = t.astype(jnp.float32) - r.astype(jnp.float32)[None]
-        num += jnp.sum(d * d)
+        per_k = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+        num += jnp.sum(w * per_k)
         den += jnp.sum(r.astype(jnp.float32) ** 2)
-    return jnp.sqrt(num / K) / jnp.maximum(jnp.sqrt(den), 1e-12)
+    n_live = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sqrt(num / n_live) / jnp.maximum(jnp.sqrt(den), 1e-12)
 
 
 @jax.jit
@@ -172,6 +187,14 @@ def _divergence_jit(stacked, ref):
     return divergence_traced(stacked, ref)
 
 
-def divergence(stacked, ref) -> float:
+@jax.jit
+def _divergence_live_jit(stacked, ref, live):
+    return divergence_traced(stacked, ref, live)
+
+
+def divergence(stacked, ref, live=None) -> float:
     """Host-facing divergence: one jitted reduction, one device_get."""
-    return float(jax.device_get(_divergence_jit(stacked, ref)))
+    if live is None:
+        return float(jax.device_get(_divergence_jit(stacked, ref)))
+    return float(jax.device_get(_divergence_live_jit(
+        stacked, ref, jnp.asarray(live, jnp.float32))))

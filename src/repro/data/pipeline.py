@@ -19,6 +19,15 @@ consumer degrades to slight oversampling instead of training on garbage.
 For equal shards everything reduces bit-for-bit to the classic equal-IID
 pipeline: ``ragged`` is False, the mask is all-True, and ``epoch_batches``
 returns exactly the arrays it always did.
+
+Elastic membership adds one knob: ``k_max``. Stacked shapes are a
+compile-time invariant, so a run that wants standby slots (participants
+that may *join* mid-run, see ``repro.core.membership``) must batch for
+``K_max`` slots from round 0. ``k_max > len(shards)`` pads the slot list
+by cycling the real shards — slot ``K+i`` serves ``shards[i % K]`` — so a
+standby slot trains on real data the moment it goes live. The padding
+slots are data *views*, not copies, and :meth:`full` still concatenates
+each real shard exactly once.
 """
 from __future__ import annotations
 
@@ -29,8 +38,18 @@ class ParticipantData:
     """Holds K disjoint (possibly ragged) shards; yields stacked epoch
     batches plus the validity mask for the padded slots."""
 
-    def __init__(self, shards, batch_size: int, seed: int = 0):
+    def __init__(self, shards, batch_size: int, seed: int = 0,
+                 k_max=None):
         # shards: list of K lists of arrays, same leading length per k
+        #: number of REAL shards (k_max padding slots alias these)
+        self.n_shards = len(shards)
+        if k_max is not None:
+            if k_max < len(shards):
+                raise ValueError(
+                    f"k_max={k_max} smaller than the {len(shards)} shards")
+            shards = list(shards) + [
+                shards[i % len(shards)]
+                for i in range(k_max - len(shards))]
         self.shards = shards
         self.K = len(shards)
         self.B = batch_size
@@ -75,8 +94,12 @@ class ParticipantData:
         return tuple(np.stack(x) for x in out)
 
     def full(self, k=None):
-        """All data of participant k (or concatenated) for evaluation."""
+        """All data of participant k (or concatenated) for evaluation.
+
+        The concatenation covers each REAL shard exactly once — ``k_max``
+        padding slots alias real shards and would double-count.
+        """
         if k is not None:
             return self.shards[k]
-        return [np.concatenate([s[i] for s in self.shards])
+        return [np.concatenate([s[i] for s in self.shards[:self.n_shards]])
                 for i in range(len(self.shards[0]))]

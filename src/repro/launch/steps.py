@@ -138,7 +138,7 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
                           param_specs=None, codec=None, aggregator=None,
                           schedule=None, round_index=0,
                           expose_schedule_args=False, masked=False,
-                          compress=None, compress_block=256,
+                          live=False, compress=None, compress_block=256,
                           compress_impl="ref"):
     """Pod-path fused round: the whole communication round as one program.
 
@@ -184,6 +184,15 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     returned round_fn takes a traced (K, n_batches) bool ``batch_mask``
     right after ``batches`` (``ParticipantData.batch_mask``; masked epoch
     steps are identity carries, see ``repro.core.engine``).
+
+    ``live=True`` (elastic membership): the returned round_fn additionally
+    takes a traced (K,) float ``live_row`` right after ``batch_mask`` (or
+    right after ``batches`` when not masked). Dead pods identity-carry
+    through the local epochs AND the aggregation, and the aggregate fn is
+    built ``dynamic`` so the per-round mixing matrix renormalizes over the
+    live set (``Membership.live_mask()`` feeds both the row and
+    ``aggregator.mixing_matrix(..., live=...)``). Membership changes ride
+    in as data — the compiled executable is reused across churn.
     """
     from repro.core import api, engine as engine_mod
     from repro.optim.optimizers import get_optimizer as _get_opt
@@ -202,51 +211,39 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     aggregator = api.get_aggregator(aggregator)
     schedule = api.get_schedule(schedule, ccfg)
     aggregate_fn = aggregator.make_aggregate_fn(
-        codec, mesh=mesh, param_specs=param_specs)
+        codec, mesh=mesh, param_specs=param_specs, dynamic=live)
 
     fused = engine_mod.make_fused_round(
         loss_fn, _get_opt(optimizer), lr_fn=api.traced_body(schedule),
         spmd_axis_name="pod", aggregate_fn=aggregate_fn, masked=masked,
-        donate=False)
+        live=live, donate=False)
 
     # the engine's vmap consumes the pod axis; in-model "dp" hints must
     # then resolve to data only (same contract as the colearn step)
     if expose_schedule_args:
         def round_fn(stacked_params, opt_state, batches, *rest):
-            """round_fn(params, opt, batches[, batch_mask], ge0, sched,
-            total_epochs[, agg_weights]) — the bracketed args appear per
-            the step's masked= flag / the aggregator's uses_weights."""
+            """round_fn(params, opt, batches[, batch_mask][, live_row],
+            ge0, sched, total_epochs[, agg_weights]) — the bracketed args
+            appear per the step's masked=/live= flags and the aggregator's
+            uses_weights."""
             with batch_axes(("data",)):
                 return fused(stacked_params, opt_state, batches, *rest)
         return round_fn
 
     sched = schedule.device_round_params(round_index)
     total = jnp.int32(max(ccfg.T0 * ccfg.max_rounds, 1))
-    if masked:
-        if aggregator.uses_weights:
-            def round_fn(stacked_params, opt_state, batches, batch_mask,
-                         global_epoch0, agg_weights):
-                with batch_axes(("data",)):
-                    return fused(stacked_params, opt_state, batches,
-                                 batch_mask, global_epoch0, sched, total,
-                                 agg_weights)
-        else:
-            def round_fn(stacked_params, opt_state, batches, batch_mask,
-                         global_epoch0):
-                with batch_axes(("data",)):
-                    return fused(stacked_params, opt_state, batches,
-                                 batch_mask, global_epoch0, sched, total)
-    elif aggregator.uses_weights:
-        def round_fn(stacked_params, opt_state, batches, global_epoch0,
-                     agg_weights):
-            with batch_axes(("data",)):
-                return fused(stacked_params, opt_state, batches,
-                             global_epoch0, sched, total, agg_weights)
-    else:
-        def round_fn(stacked_params, opt_state, batches, global_epoch0):
-            with batch_axes(("data",)):
-                return fused(stacked_params, opt_state, batches,
-                             global_epoch0, sched, total)
+    # (batch_mask?, live_row?, ge0) lead the varargs; agg_weights trails.
+    # The baked sched/total pair splices in between — one wrapper covers
+    # every masked × live × uses_weights combination.
+    n_lead = 1 + int(masked) + int(live)
+
+    def round_fn(stacked_params, opt_state, batches, *rest):
+        """round_fn(params, opt, batches[, batch_mask][, live_row], ge0
+        [, agg_weights]) — bracketed args per masked=/live=/uses_weights."""
+        lead, tail = rest[:n_lead], rest[n_lead:]
+        with batch_axes(("data",)):
+            return fused(stacked_params, opt_state, batches,
+                         *lead, sched, total, *tail)
     return round_fn
 
 

@@ -25,6 +25,14 @@ with --sizes), --weighted-avg switches Eq. 2 to FedAvg's example-count
 weighting, and ragged shards automatically thread their validity mask into
 the engines (no shard is clamped, no example silently dropped;
 --drop-remainder restores the paper's exactly-equal split explicitly).
+
+Elastic membership (see repro.core.membership): --churn injects per-round
+participant failures — scripted (--churn-events "crash:2:1,rejoin:4:1")
+or random i.i.d. (--churn-p per-round failure probability, deterministic
+in --churn-seed) — and --k-max reserves standby slots beyond
+--participants that start dead and can warm-join mid-run. Dead slots are
+identity carries inside the same compiled round executables; the
+aggregators renormalize over the live set.
 """
 from __future__ import annotations
 
@@ -49,7 +57,7 @@ from repro.models import transformer as tr
 
 def build_data(cfg, K, batch_size, seq_len, n_examples, seed=0,
                partition="iid", dirichlet_alpha=0.5, sizes=None,
-               drop_remainder=False):
+               drop_remainder=False, k_max=None):
     """Shard the synthetic LM corpus under the chosen data scenario.
 
     partition="iid": the paper's random split (remainder round-robin, or
@@ -64,7 +72,7 @@ def build_data(cfg, K, batch_size, seq_len, n_examples, seed=0,
         dirichlet_alpha=dirichlet_alpha, sizes=sizes, min_size=batch_size,
         drop_remainder=drop_remainder)
     shards = part_mod.shard_by_indices([x, y], idx)
-    return ParticipantData(shards, batch_size, seed)
+    return ParticipantData(shards, batch_size, seed, k_max=k_max)
 
 
 # Module-level so every eval batch reuses one compiled executable; a
@@ -156,6 +164,29 @@ def main(argv=None):
     ap.add_argument("--engine", default="fused", choices=["fused", "python"],
                     help="round engine: fused = one executable per round "
                          "(repro.core.engine); python = reference loop")
+    ap.add_argument("--churn", default="none",
+                    choices=["none", "scripted", "random"],
+                    help="elastic-membership fault injection "
+                         "(repro.core.membership): scripted = deterministic "
+                         "crash/rejoin trace (--churn-events); random = "
+                         "i.i.d. per-round failures (--churn-p, "
+                         "deterministic in --churn-seed)")
+    ap.add_argument("--churn-events", default="",
+                    help="scripted trace: comma-separated kind:round:slot "
+                         "triples, e.g. 'crash:2:1,rejoin:4:1'")
+    ap.add_argument("--churn-p", type=float, default=0.2,
+                    help="per-round failure probability for --churn random")
+    ap.add_argument("--churn-seed", type=int, default=0,
+                    help="churn RNG seed (--churn random; the trace is a "
+                         "pure function of (seed, round))")
+    ap.add_argument("--k-max", type=int, default=0,
+                    help="total participant slots (>= --participants); the "
+                         "extra slots start dead as standby capacity a "
+                         "rejoin can warm-join. 0 = no standby slots")
+    ap.add_argument("--naive-membership", action="store_true",
+                    help="ablation: keep the static mixing matrix under "
+                         "churn (dead rows pollute the mean) — the "
+                         "baseline benchmarks/churn.py measures against")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -165,8 +196,54 @@ def main(argv=None):
     # aliases in api.CODECS, so both flags resolve through the one registry
     codec = api.get_codec(args.codec or args.compress)
 
+    # partial participation samples from the participant pool — a sample
+    # size beyond the pool is a config bug, caught here instead of rounds
+    # later inside the mixing-matrix draw
+    if args.aggregator == "partial" and args.partial_m > args.participants:
+        ap.error(f"--partial-m {args.partial_m} exceeds --participants "
+                 f"{args.participants}")
+    if args.aggregator == "partial" and args.partial_m < 1:
+        ap.error("--partial-m must be >= 1")
+
+    # elastic-membership flag surface: churn sub-flags must match --churn
+    if args.churn_events and args.churn != "scripted":
+        ap.error("--churn-events requires --churn scripted")
+    if (args.churn_p != 0.2 or args.churn_seed) and args.churn != "random":
+        ap.error("--churn-p/--churn-seed require --churn random")
+    if args.k_max and args.churn == "none":
+        ap.error("--k-max requires --churn scripted|random (standby slots "
+                 "only join through membership events)")
+    if args.k_max and args.k_max < args.participants:
+        ap.error(f"--k-max {args.k_max} smaller than --participants "
+                 f"{args.participants}")
+    k_max = args.k_max or args.participants
+    churn = None
+    if args.churn != "none":
+        from repro.core import membership as membership_mod
+        init_live = args.participants if k_max > args.participants else None
+        if args.churn == "random":
+            churn = membership_mod.RandomChurn(
+                p_fail=args.churn_p, seed=args.churn_seed,
+                initial_live=init_live)
+        else:
+            events = []
+            for spec in filter(None, args.churn_events.split(",")):
+                try:
+                    kind, r, k = spec.split(":")
+                    events.append((kind, int(r), int(k)))
+                except ValueError:
+                    ap.error(f"bad --churn-events entry {spec!r} "
+                             "(want kind:round:slot)")
+            try:
+                churn = membership_mod.ScriptedChurn(
+                    events=tuple(events), initial_live=init_live)
+            except ValueError as e:
+                ap.error(str(e))
+    if args.naive_membership and churn is None:
+        ap.error("--naive-membership requires --churn")
+
     cfg = get_smoke_config(args.arch)
-    K = args.participants
+    K = k_max
     ccfg = CoLearnConfig(
         n_participants=K, T0=args.t0, eta0=args.eta0, epsilon=args.epsilon,
         schedule=args.schedule, epochs_rule=args.epochs_rule,
@@ -184,10 +261,11 @@ def main(argv=None):
         ap.error("--drop-remainder only applies to --partition iid")
     sizes = ([float(s) for s in args.sizes.split(",")] if args.sizes
              else None)
-    data = build_data(cfg, K, args.batch_size, args.seq_len,
+    data = build_data(cfg, args.participants, args.batch_size, args.seq_len,
                       args.n_examples, args.seed, partition=args.partition,
                       dirichlet_alpha=args.dirichlet_alpha, sizes=sizes,
-                      drop_remainder=args.drop_remainder)
+                      drop_remainder=args.drop_remainder,
+                      k_max=k_max if args.k_max else None)
     ex, ey = lm_examples(args.seed + 99, 256, args.seq_len, cfg.vocab_size)
 
     def loss_fn(params, batch):
@@ -217,11 +295,16 @@ def main(argv=None):
                         codec=codec, aggregator=aggregator,
                         round_engine=args.engine, schedule=schedule,
                         sync_policy=sync_policy, shard_sizes=data.sizes,
-                        batch_mask=batch_mask)
+                        batch_mask=batch_mask, churn=churn,
+                        liveness_aware=not args.naive_membership)
     params = tr.init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
     state = learner.init(params)
     shard_s = (f" shards={list(data.sizes)}" if args.partition != "iid"
                or data.ragged else "")
+    if churn is not None:
+        shard_s += (f" churn={learner.churn.name}"
+                    + (f" k_max={k_max}" if args.k_max else "")
+                    + (" naive" if args.naive_membership else ""))
     print(f"co-learning {cfg.name}: K={K} params="
           f"{tr.count_params(params):,} rounds={args.rounds} T0={args.t0} "
           f"{learner.schedule.name}+{learner.sync_policy.name} "
@@ -242,6 +325,8 @@ def main(argv=None):
         log = state["log"][-1]
         ev = eval_loss(learner.shared_model(state), cfg, ex, ey)
         sync_s = "" if log.synced else " SKIP(sync)"
+        if churn is not None:
+            sync_s += f" live={log.live}/{K}"
         print(f"round {log.round}: T={log.T} lr {log.lr_first:.4f}->"
               f"{log.lr_last:.4f} rel_dw={log.rel_change:.4f} "
               f"local_loss={np.mean(log.local_losses):.4f} eval={ev:.4f} "

@@ -1,0 +1,555 @@
+"""Elastic membership (ISSUE 6): liveness-masked round execution + churn.
+
+Covers: Membership state/event-log semantics; ScriptedChurn / RandomChurn
+schedule semantics (latest-event-wins, flaky slots, (seed, round)
+determinism, the sole-survivor guarantee); the static-K reduction (all-live
+runs are BIT-identical to the pre-membership path on both engines and both
+wire codecs); cross-engine agreement under churn (identical membership
+traces, matching round outputs); the dead-slot identity carry (params AND
+optimizer state frozen through a churn round); live-renormalized mixing for
+all three aggregators; the ``restart_participant`` sync-reference bugfix
+(RingGossip rows are distinct, a quiet DivergenceTrigger round drifts slot
+0 — both would hand the restarted peer the wrong model); membership-aware
+sync policies (event rounds hold the ILE doubling and force a
+DivergenceTrigger sync); checkpoint forward/backward compatibility and
+resume parity under scripted churn; the K_max standby-slot pipeline
+padding; and the train.py parse-time flag validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import api
+from repro.core import membership as M
+from repro.core import schedule as sched_mod
+from repro.core.colearn import CoLearner
+from repro.data.pipeline import ParticipantData
+
+
+def tiny_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {"loss": loss}
+
+
+def tiny_params(key=0, d=4):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, 1)), "b": jnp.zeros((1,))}
+
+
+def tiny_batches(K, n_batches, B, d=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (K, n_batches, B, d))
+    w_true = jnp.arange(1.0, d + 1)[:, None]
+    return (x, x @ w_true)
+
+
+def max_abs_diff(a, b):
+    # default covers leafless pytrees (e.g. the SGD optimizer state)
+    return max((float(jnp.abs(jnp.asarray(x, jnp.float32)
+                              - jnp.asarray(y, jnp.float32)).max())
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+               default=0.0)
+
+
+def run_rounds(rounds=4, K=4, engine="python", churn=None, **kw):
+    cfg = CoLearnConfig(n_participants=K, T0=2, eta0=0.05, epsilon=1e-9,
+                        max_rounds=rounds, **{k: v for k, v in kw.items()
+                                              if k in ("epochs_rule",)})
+    kw = {k: v for k, v in kw.items() if k != "epochs_rule"}
+    learner = CoLearner(cfg, tiny_loss, round_engine=engine, churn=churn,
+                        **kw)
+    state = learner.init(tiny_params())
+    batches = tiny_batches(K, 3, 2)
+    for _ in range(rounds):
+        state = learner.run_round(state, lambda i, j: batches)
+    return learner, state
+
+
+# ---------------------------------------------------------------------------
+# Membership state
+# ---------------------------------------------------------------------------
+def test_membership_step_logs_flips():
+    m = M.Membership.all_live(3)
+    assert m.n_live == 3 and m.k_max == 3 and m.live_slots() == (0, 1, 2)
+    m = m.step(1, [True, False, True])
+    assert m.events == ((1, 1, "leave"),)
+    m = m.step(2, [True, False, True])      # no change -> no event
+    m = m.step(3, [True, True, False])
+    assert m.round_events(3) == ((3, 1, "join"), (3, 2, "leave"))
+    assert m.joined(3) == (1,)
+    assert m.live == (True, True, False) and m.n_live == 2
+
+
+def test_membership_step_validates_length():
+    with pytest.raises(ValueError, match="K_max"):
+        M.Membership.all_live(3).step(0, [True, True])
+
+
+# ---------------------------------------------------------------------------
+# Churn schedules
+# ---------------------------------------------------------------------------
+def test_scripted_churn_events_latest_wins_and_flaky():
+    c = M.ScriptedChurn(events=(("crash", 1, 0), ("rejoin", 3, 0)),
+                        flaky=((2, 3),))
+    assert not c.is_static
+    assert list(c.live_mask(0, 3)) == [True, True, True]
+    assert list(c.live_mask(1, 3)) == [False, True, True]
+    # flaky slot 2 is down on rounds r % 3 == 2
+    assert list(c.live_mask(2, 3)) == [False, True, False]
+    assert list(c.live_mask(3, 3)) == [True, True, True]
+    assert list(c.live_mask(5, 3)) == [True, True, False]
+
+
+def test_scripted_churn_initial_live_standby():
+    c = M.ScriptedChurn(events=(("rejoin", 2, 3),), initial_live=3)
+    assert list(c.live_mask(0, 4)) == [True, True, True, False]
+    assert list(c.live_mask(2, 4)) == [True, True, True, True]
+
+
+def test_scripted_churn_zero_live_raises():
+    c = M.ScriptedChurn(events=(("crash", 1, 0), ("crash", 1, 1)))
+    with pytest.raises(ValueError, match="zero live"):
+        c.live_mask(1, 2)
+
+
+def test_scripted_churn_rejects_bad_events():
+    with pytest.raises(ValueError, match="event kind"):
+        M.ScriptedChurn(events=(("explode", 1, 0),))
+    with pytest.raises(ValueError, match="slot"):
+        M.ScriptedChurn(events=(("crash", 1, 9),)).live_mask(0, 2)
+
+
+def test_random_churn_deterministic_in_seed_round():
+    c1 = M.RandomChurn(p_fail=0.4, p_join=0.5, seed=7)
+    c2 = M.RandomChurn(p_fail=0.4, p_join=0.5, seed=7)
+    traces = [[list(c.live_mask(r, 5)) for r in range(8)] for c in (c1, c2)]
+    assert traces[0] == traces[1]
+    assert any(sum(t) < 5 for t in traces[0])     # churn actually happened
+    other = [list(M.RandomChurn(p_fail=0.4, seed=8).live_mask(r, 5))
+             for r in range(8)]
+    assert other != traces[0]
+
+
+def test_random_churn_sole_survivor():
+    c = M.RandomChurn(p_fail=1.0, p_join=0.0, seed=0)
+    for r in range(4):
+        assert int(c.live_mask(r, 4).sum()) == (4 if r == 0 else 1)
+
+
+def test_static_schedules_and_registry():
+    assert M.NoChurn().is_static
+    assert M.ScriptedChurn().is_static
+    assert M.RandomChurn(p_fail=0.0).is_static
+    assert not M.RandomChurn(p_fail=0.0, initial_live=2).is_static
+    assert isinstance(M.get_churn(None), M.NoChurn)
+    assert isinstance(M.get_churn("random", p_fail=0.3), M.RandomChurn)
+    with pytest.raises(KeyError, match="unknown churn"):
+        M.get_churn("nope")
+
+
+# ---------------------------------------------------------------------------
+# Static-K reduction: all-live is bit-identical to the pre-membership path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["python", "fused"])
+@pytest.mark.parametrize("codec", ["exact", "fused"])
+def test_all_live_bit_identical_to_static(engine, codec):
+    _, base = run_rounds(engine=engine, codec=codec, churn=None)
+    for static in ("none", M.NoChurn(), M.ScriptedChurn()):
+        _, st = run_rounds(engine=engine, codec=codec, churn=static)
+        assert max_abs_diff(base["params"], st["params"]) == 0.0
+        assert st["membership"].live == (True,) * 4
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine agreement under churn
+# ---------------------------------------------------------------------------
+CHURN = M.ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 3, 1),
+                                ("crash", 2, 3)))
+
+
+def test_engines_agree_under_churn():
+    _, sp = run_rounds(engine="python", churn=CHURN)
+    _, sf = run_rounds(engine="fused", churn=CHURN)
+    assert sp["membership"].events == sf["membership"].events
+    assert ([l.live for l in sp["log"]] == [l.live for l in sf["log"]]
+            == [4, 3, 2, 3])
+    assert max_abs_diff(sp["params"], sf["params"]) <= 1e-5
+    for lp, lf in zip(sp["log"], sf["log"]):
+        assert np.allclose(lp.local_losses, lf.local_losses, atol=1e-5)
+        assert lp.comm_bytes == lf.comm_bytes
+
+
+def test_dead_slot_is_identity_carry():
+    # slot 1 dies at round 1 and stays dead: its params AND opt rows must
+    # be frozen at their end-of-round-0 values through rounds 1 and 2
+    # (momentum so the optimizer state is a non-empty pytree)
+    churn = M.ScriptedChurn(events=(("crash", 1, 1),))
+    for engine in ("python", "fused"):
+        cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05,
+                            epsilon=1e-9, max_rounds=3)
+        learner = CoLearner(cfg, tiny_loss, round_engine=engine,
+                            churn=churn, optimizer_name="momentum")
+        state = learner.init(tiny_params())
+        batches = tiny_batches(3, 3, 2)
+        state = learner.run_round(state, lambda i, j: batches)
+        frozen_p = jax.tree.map(lambda t: np.asarray(t[1]), state["params"])
+        frozen_o = jax.tree.map(lambda t: np.asarray(t[1]), state["opt"])
+        for _ in range(2):
+            state = learner.run_round(state, lambda i, j: batches)
+            assert max_abs_diff(
+                frozen_p, jax.tree.map(lambda t: t[1], state["params"])) == 0
+            assert max_abs_diff(
+                frozen_o, jax.tree.map(lambda t: t[1], state["opt"])) == 0
+        # ...and the live slots kept training
+        assert max_abs_diff(
+            frozen_p, jax.tree.map(lambda t: t[0], state["params"])) > 0
+
+
+def test_rejoin_warm_starts_from_synced_model():
+    # the round a slot rejoins, run_round resets it from the last synced
+    # shared model before training — not from its stale pre-crash row
+    churn = M.ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 2, 1)))
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.0, epsilon=1e-9,
+                        max_rounds=3)
+    learner = CoLearner(cfg, tiny_loss, round_engine="python", churn=churn)
+    state = learner.init(tiny_params())
+    batches = tiny_batches(3, 2, 2)
+    for _ in range(2):
+        state = learner.run_round(state, lambda i, j: batches)
+    ref = jax.tree.map(np.asarray, state["prev_avg"])
+    state = learner.run_round(state, lambda i, j: batches)
+    # eta0=0 -> training is a no-op, so slot 1 now holds exactly the model
+    # it was warm-started from, averaged over the (all-equal) live rows
+    assert max_abs_diff(ref, jax.tree.map(lambda t: t[1],
+                                          state["params"])) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Live-renormalized aggregation
+# ---------------------------------------------------------------------------
+def test_full_average_renormalizes_over_live():
+    live = np.array([True, False, True, False])
+    W = api.FullAverage().mixing_matrix(0, 4, live=live)
+    expect = np.array([0.5, 0.0, 0.5, 0.0], np.float32)
+    assert np.allclose(W, np.tile(expect, (4, 1)))
+    # weighted: dead weights drop out, live weights renormalize
+    Ww = api.FullAverage(weights=(1.0, 2.0, 3.0, 4.0)).mixing_matrix(
+        0, 4, live=live)
+    assert np.allclose(Ww[0], [0.25, 0.0, 0.75, 0.0])
+    with pytest.raises(ValueError, match="live"):
+        api.FullAverage().mixing_matrix(0, 4, live=np.zeros(4, bool))
+
+
+def test_full_average_live_numeric():
+    # a churn round's average is the mean over LIVE rows only
+    churn = M.ScriptedChurn(events=(("crash", 1, 2),))
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.05, epsilon=1e-9,
+                        max_rounds=2)
+    learner = CoLearner(cfg, tiny_loss, round_engine="python", churn=churn)
+    state = learner.init(tiny_params())
+    batches = tiny_batches(3, 2, 2)
+    state = learner.run_round(state, lambda i, j: batches)
+    # round 1: slot 2 dead; live slots 0, 1 train then average
+    state = learner.run_round(state, lambda i, j: batches)
+    w = np.asarray(state["params"]["w"])
+    assert np.allclose(w[0], w[1], atol=1e-6)      # live rows share the avg
+    assert not np.allclose(w[0], w[2], atol=1e-6)  # dead row carried
+
+
+def test_partial_participation_samples_only_live():
+    agg = api.PartialParticipation(m=3, seed=0)
+    live = np.array([True, False, True, False, True])
+    for i in range(6):
+        W = agg.mixing_matrix(i, 5, live=live)
+        assert np.allclose(W[:, [1, 3]], 0.0)      # dead never sampled
+        assert np.isclose(W[0].sum(), 1.0)
+    # m_eff shrinks to the live count instead of erroring
+    W = agg.mixing_matrix(0, 5, live=np.array([True] + [False] * 4))
+    assert np.allclose(W[:, 0], 1.0)
+    with pytest.raises(ValueError, match="zero live"):
+        agg.mixing_matrix(0, 5, live=np.zeros(5, bool))
+
+
+def test_ring_gossip_routes_around_dead():
+    live = np.array([True, False, True, True])
+    W = api.RingGossip().mixing_matrix(0, 4, live=live)
+    assert np.allclose(W[1], [0, 1, 0, 0])         # dead row: identity
+    assert np.allclose(W[0], [0.5, 0, 0, 0.5])     # pred 3 live
+    assert np.allclose(W[2], [0.5, 0, 0.5, 0])     # pred 1 dead -> 0
+    assert np.allclose(W[3], [0, 0, 0.5, 0.5])
+    # sole survivor: nobody to gossip with
+    W1 = api.RingGossip().mixing_matrix(0, 3,
+                                        live=np.array([False, True, False]))
+    assert np.allclose(W1, np.eye(3))
+
+
+def test_comm_bytes_live_aware():
+    stacked = {"w": jnp.zeros((4, 8))}
+    codec = api.ExactF32()
+    live2 = np.array([True, True, False, False])
+    ring = api.RingGossip()
+    assert ring.comm_bytes(codec, stacked, 0) == ring.comm_bytes(
+        codec, stacked, 0, live=live2)
+    assert ring.comm_bytes(
+        codec, stacked, 0, live=np.array([True, False, False, False])) == 0
+    part = api.PartialParticipation(m=3)
+    # m_eff=2 of 2 live: every live row uploads; static bill amortizes 3/4
+    assert (part.comm_bytes(codec, stacked, 0, live=live2)
+            > part.comm_bytes(codec, stacked, 0))
+
+
+def test_divergence_live_masked():
+    stacked = {"w": jnp.stack([jnp.ones(3), 3 * jnp.ones(3),
+                               99 * jnp.ones(3)])}
+    ref = {"w": jnp.ones(3) * 2.0}
+    full = sched_mod.divergence(stacked, ref)
+    all_live = sched_mod.divergence(stacked, ref, live=np.ones(3, bool))
+    assert np.isclose(full, all_live)
+    # masking out the wild slot 2 removes its drift from the signal
+    masked = sched_mod.divergence(stacked, ref,
+                                  live=np.array([True, True, False]))
+    assert masked < full
+    expect = np.sqrt(3.0) / np.linalg.norm(np.asarray(ref["w"]))
+    assert np.isclose(masked, expect, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# restart_participant resets from the SYNCED model (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_restart_resets_from_sync_ref_not_slot0_ring():
+    # under RingGossip rows stay distinct, and once slot 0 is dead its row
+    # is a STALE carry — the old slot-0 reset would hand the restarted
+    # peer that stale pre-crash model instead of the sync reference
+    churn = M.ScriptedChurn(events=(("crash", 1, 0),))
+    learner, state = run_rounds(rounds=2, K=4, engine="python",
+                                aggregator="ring", churn=churn)
+    row0 = jax.tree.map(lambda t: np.asarray(t[0]), state["params"])
+    ref = jax.tree.map(np.asarray, learner._sync_ref(state))
+    assert max_abs_diff(row0, ref) > 0             # the bug was observable
+    learner.restart_participant(state, 2)
+    got = jax.tree.map(lambda t: np.asarray(t[2]), state["params"])
+    assert max_abs_diff(got, ref) == 0.0
+    fresh = learner.opt.init(learner._sync_ref(state))
+    assert max_abs_diff(jax.tree.map(lambda t: t[2], state["opt"]),
+                        fresh) == 0.0
+
+
+def test_restart_resets_from_sync_ref_after_quiet_round():
+    # a DivergenceTrigger quiet round leaves slot 0 locally drifted; the
+    # restart must come from prev_avg (the last SYNCED model), not slot 0
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=1e-9,
+                        max_rounds=4)
+    learner = CoLearner(cfg, tiny_loss, round_engine="python",
+                        sync_policy=api.DivergenceTrigger(delta=0.0))
+    state = learner.init(tiny_params())
+    batches = tiny_batches(3, 3, 2)
+    state = learner.run_round(state, lambda i, j: batches)   # syncs
+    assert state["log"][-1].synced
+    learner.set_sync_policy(api.DivergenceTrigger(delta=1e9))
+    state = learner.run_round(state, lambda i, j: batches)   # quiet
+    assert not state["log"][-1].synced
+    ref = jax.tree.map(np.asarray, state["prev_avg"])
+    row0 = jax.tree.map(lambda t: np.asarray(t[0]), state["params"])
+    assert max_abs_diff(row0, ref) > 0
+    learner.restart_participant(state, 1)
+    got = jax.tree.map(lambda t: np.asarray(t[1]), state["params"])
+    assert max_abs_diff(got, ref) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Membership-aware sync policies
+# ---------------------------------------------------------------------------
+def test_ile_holds_doubling_on_membership_events():
+    pol = api.ILE(epsilon=0.1)
+    st = api.SyncState(T=2)
+    held = pol.update(st, 0, 0.0, events=((0, 1, "leave"),))
+    assert held.T == 2
+    doubled = pol.update(st, 0, 0.0)
+    assert doubled.T == 4
+    # FLE ignores events entirely
+    assert api.FLE().update(st, 0, 0.0, events=((0, 1, "leave"),)).T == 2
+
+
+def test_divergence_trigger_forces_sync_on_membership_change():
+    pol = api.DivergenceTrigger(delta=0.5)
+    assert pol.round_delta(()) == 0.5
+    assert pol.round_delta(((3, 1, "join"),)) == -1.0
+    assert pol.should_sync(0.01, 3, delta=-1.0)    # any div > -1 syncs
+    assert not pol.should_sync(0.01, 3, delta=0.5)
+    # a learner under churn: the join round syncs even though models agree
+    churn = M.ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 2, 1)))
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=1e-6, epsilon=1e-9,
+                        max_rounds=3)
+    for engine in ("python", "fused"):
+        learner = CoLearner(cfg, tiny_loss, round_engine=engine,
+                            churn=churn,
+                            sync_policy=api.DivergenceTrigger(delta=1e9))
+        state = learner.init(tiny_params())
+        batches = tiny_batches(3, 2, 2)
+        for _ in range(3):
+            state = learner.run_round(state, lambda i, j: batches)
+        assert [l.synced for l in state["log"]] == [False, True, True]
+
+
+def test_round_log_live_counts():
+    _, st = run_rounds(rounds=3, engine="fused")
+    assert [l.live for l in st["log"]] == [4, 4, 4]
+    _, st = run_rounds(rounds=3, engine="fused", churn=CHURN)
+    assert [l.live for l in st["log"]] == [4, 3, 2]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint compatibility + resume parity (satellite)
+# ---------------------------------------------------------------------------
+def test_checkpoint_membership_roundtrip(tmp_path):
+    from repro.checkpoint.io import restore_round_state, save_round_state
+    learner, state = run_rounds(rounds=3, engine="python", churn=CHURN)
+    path = str(tmp_path / "ck")
+    save_round_state(path, state)
+    fresh = learner.init(tiny_params(key=1))
+    restored = restore_round_state(path, fresh)
+    assert restored["membership"] == state["membership"]
+    assert max_abs_diff(restored["params"], state["params"]) == 0.0
+
+
+def test_pre_membership_checkpoint_restores_all_live(tmp_path):
+    from repro.checkpoint.io import restore_round_state, save_round_state
+    learner, state = run_rounds(rounds=2, engine="python")
+    prev_avg = jax.tree.map(np.asarray, state["prev_avg"])
+    ctrl = state["ctrl"]
+    state.pop("membership")                 # simulate a pre-ISSUE-6 save
+    path = str(tmp_path / "legacy")
+    save_round_state(path, state)
+    restored = restore_round_state(path, learner.init(tiny_params(key=1)))
+    assert restored["membership"] == M.Membership.all_live(4)
+    assert max_abs_diff(restored["prev_avg"], prev_avg) == 0.0
+    assert restored["ctrl"] == ctrl
+
+
+@pytest.mark.parametrize("engine", ["python", "fused"])
+def test_resume_parity_under_scripted_churn(tmp_path, engine):
+    from repro.checkpoint.io import restore_round_state, save_round_state
+    churn = M.ScriptedChurn(events=(("crash", 1, 1), ("rejoin", 3, 1)))
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.05, epsilon=1e-9,
+                        max_rounds=4)
+    batches = tiny_batches(3, 3, 2)
+
+    def make():
+        learner = CoLearner(cfg, tiny_loss, round_engine=engine,
+                            churn=churn)
+        return learner, learner.init(tiny_params())
+
+    learner, state = make()
+    for _ in range(4):
+        state = learner.run_round(state, lambda i, j: batches)
+
+    learner2, st2 = make()
+    for _ in range(2):
+        st2 = learner2.run_round(st2, lambda i, j: batches)
+    path = str(tmp_path / "mid")
+    save_round_state(path, st2)
+    learner3, st3 = make()
+    st3 = restore_round_state(path, st3)
+    for _ in range(2):
+        st3 = learner3.run_round(st3, lambda i, j: batches)
+
+    assert st3["membership"].events == state["membership"].events
+    assert max_abs_diff(st3["params"], state["params"]) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# K_max standby slots (pipeline padding)
+# ---------------------------------------------------------------------------
+def test_pipeline_k_max_pads_by_cycling_shards():
+    rng = np.random.default_rng(0)
+    shards = [[rng.normal(size=(6 + 2 * k, 3))] for k in range(2)]
+    data = ParticipantData(shards, batch_size=2, k_max=5)
+    assert data.K == 5 and data.n_shards == 2
+    # slot K+i serves shards[i % K]
+    assert data.shards[2] is shards[0]
+    assert data.shards[3] is shards[1]
+    assert data.shards[4] is shards[0]
+    bx, = data.epoch_batches(0, 0)
+    assert bx.shape[0] == 5
+    # a padding slot trains on ITS shard's real examples (own shuffle)
+    shard0_rows = {tuple(r) for r in shards[0][0]}
+    assert {tuple(r) for r in bx[2].reshape(-1, 3)} <= shard0_rows
+    # full() concatenates each REAL shard exactly once
+    assert len(data.full()[0]) == 6 + 8
+    with pytest.raises(ValueError, match="k_max"):
+        ParticipantData(shards, batch_size=2, k_max=1)
+
+
+def test_standby_slot_joins_with_real_data():
+    # 2 real participants + 1 standby slot that joins at round 1
+    churn = M.ScriptedChurn(events=(("rejoin", 1, 2),), initial_live=2)
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.05, epsilon=1e-9,
+                        max_rounds=3)
+    learner = CoLearner(cfg, tiny_loss, round_engine="fused", churn=churn)
+    state = learner.init(tiny_params())
+    batches = tiny_batches(3, 2, 2)
+    assert state["membership"].live == (True, True, False)
+    for _ in range(3):
+        state = learner.run_round(state, lambda i, j: batches)
+    assert [l.live for l in state["log"]] == [2, 3, 3]
+    assert state["membership"].events == ((1, 2, "join"),)
+
+
+# ---------------------------------------------------------------------------
+# train.py flag surface (parse-time validation, satellite)
+# ---------------------------------------------------------------------------
+def _train_main(argv):
+    from repro.launch.train import main
+    return main(argv)
+
+
+@pytest.mark.parametrize("argv, msg", [
+    (["--aggregator", "partial", "--participants", "3", "--partial-m", "5"],
+     "exceeds"),
+    (["--aggregator", "partial", "--partial-m", "0"], ">= 1"),
+    (["--churn-events", "crash:1:1"], "--churn scripted"),
+    (["--churn-p", "0.5"], "--churn random"),
+    (["--k-max", "8"], "--k-max requires --churn"),
+    (["--churn", "random", "--k-max", "2", "--participants", "5"],
+     "smaller than"),
+    (["--churn", "scripted", "--churn-events", "crash:oops:1"],
+     "kind:round:slot"),
+])
+def test_train_flag_validation_at_parse_time(argv, msg, capsys):
+    with pytest.raises(SystemExit) as exc:
+        _train_main(argv)
+    assert exc.value.code == 2
+    assert msg in capsys.readouterr().err
+
+
+def test_churn_registry_spellings_match_train_choices():
+    # the CLI choices and the registry must not drift apart
+    assert set(M.CHURN_SCHEDULES) == {"none", "scripted", "random"}
+
+
+def test_naive_membership_keeps_static_matrix():
+    # the ablation arm: dead rows keep their 1/K weight in the average
+    churn = M.ScriptedChurn(events=(("crash", 1, 2),))
+    cfg = CoLearnConfig(n_participants=3, T0=1, eta0=0.05, epsilon=1e-9,
+                        max_rounds=2)
+    out = {}
+    for aware in (True, False):
+        learner = CoLearner(cfg, tiny_loss, round_engine="python",
+                            churn=churn, liveness_aware=aware)
+        state = learner.init(tiny_params())
+        batches = tiny_batches(3, 2, 2)
+        for _ in range(2):
+            state = learner.run_round(state, lambda i, j: batches)
+        out[aware] = state["params"]
+    w_aware = np.asarray(out[True]["w"])
+    w_naive = np.asarray(out[False]["w"])
+    # aware: live rows hold the live-only mean; naive: the stale dead row
+    # polluted the mean, so the live rows differ between the two runs
+    assert not np.allclose(w_aware[0], w_naive[0], atol=1e-7)
+    # both carry the dead row identically (engine-side identity carry is
+    # independent of the mixing matrix)
+    np.testing.assert_allclose(w_aware[2], w_naive[2], atol=1e-7)
