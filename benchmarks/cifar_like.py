@@ -33,8 +33,28 @@ def run(models=("vgg_tiny", "resnet_tiny", "densenet_tiny"), rounds=6,
     return rows
 
 
-def main():
-    return run()
+def check():
+    """CI smoke: one tiny arch, tiny corpus, 1 round — asserts the three
+    baselines still run end-to-end and report sane accuracies."""
+    rows = run(models=("vgg_tiny",), rounds=1, n=320, quiet=True)
+    assert len(rows) == 1
+    r = rows[0]
+    for key in ("vanilla", "ensemble", "colearn", "local_mean"):
+        assert 0.0 <= r[key] <= 1.0, (key, r)
+    print("cifar_like --check OK", flush=True)
+    return 0
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--check", action="store_true",
+                    help="fast CI smoke mode: one tiny arch, 1 round")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check()
+    return run(rounds=args.rounds)
 
 
 if __name__ == "__main__":

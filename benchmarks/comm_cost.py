@@ -19,6 +19,11 @@ wire paths on the smoke-scale model param trees:
                     (``core.flatbuf`` + ``kernels.comm`` via
                     ``engine.make_fused_compressed_average``).
 
+``wire_precision_rows`` (ISSUE 7) adds the payload-bit-width axis: exact
+wire bytes + fused-average latency at 8/4/1 bits for both codec families,
+and measured quickstart-task convergence of the flat wire — int8 baseline
+vs int4 and 1-bit with error-feedback residual memory.
+
 Timings are min-of-N over jitted, block_until_ready'd calls (robust on a
 shared box); compile time is excluded by a warmup call. The result JSON is
 committed as benchmarks/BENCH_comm_cost.json.
@@ -153,6 +158,96 @@ def finalize_latency_rows(archs=LATENCY_ARCHS, K=4, reps=30, block=256,
     return rows
 
 
+WIRE_BITS = (8, 4, 1)
+
+
+def _wire_bytes_table(stacked, block=256):
+    """Exact per-participant upload bytes at every payload width, both
+    codec families. EF never changes the wire (residual is device-side
+    memory) — asserted here so the benchmark can't drift from the codecs."""
+    rows = []
+    for bits in WIRE_BITS:
+        row = {"bits": bits,
+               "wire_bytes_leafwise": api.get_codec(
+                   "leafwise", block=block, bits=bits).wire_bytes(stacked),
+               "wire_bytes_flat": api.get_codec(
+                   "fused", block=block, bits=bits).wire_bytes(stacked)}
+        assert api.get_codec(
+            "fused", block=block, bits=bits,
+            error_feedback=True).wire_bytes(stacked) == row["wire_bytes_flat"]
+        rows.append(row)
+    return rows
+
+
+def wire_precision_rows(rounds=4, K=5, reps=10, seed=0, quiet=False):
+    """ISSUE 7 axis: payload bit width x error feedback on the quickstart
+    task (smoke internlm2, K=5, synthetic LM shards — the quickstart.py /
+    interval_rows setup as a last-token classifier).
+
+    Reports (a) the exact wire-byte table at 8/4/1 bits for both codec
+    families, (b) jitted fused-average latency per width, and (c) measured
+    convergence + billed comm of the flat wire: int8 baseline vs int4+EF
+    vs 1-bit+EF. The int4+EF row is the acceptance pin: >= 1.9x fewer
+    wire bytes than int8 at comparable accuracy.
+    """
+    from benchmarks.harness import run_colearn
+    from repro.data.synthetic import lm_examples
+    from repro.models import transformer as tr
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    shapes = params_shapes(cfg, jnp.float32)
+    abstract = jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct((K, *v.shape), v.dtype), shapes)
+    bytes_rows = _wire_bytes_table(abstract)
+
+    # jitted Eq. 2 latency of the fused flat wire per payload width
+    stacked = _stacked_smoke_params("internlm2-1.8b", 4)
+    full = api.FullAverage()
+    for row in bytes_rows:
+        fn = jax.jit(full.make_aggregate_fn(
+            api.get_codec("fused", bits=row["bits"])))
+        jax.block_until_ready(fn(stacked))            # warmup (compile)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(stacked))
+            ts.append(time.perf_counter() - t0)
+        row["flat_finalize_ms_min"] = min(ts) * 1e3
+        if not quiet:
+            print(f"wire_bytes,bits={row['bits']},"
+                  f"leafwise={row['wire_bytes_leafwise']:,},"
+                  f"flat={row['wire_bytes_flat']:,},"
+                  f"finalize={row['flat_finalize_ms_min']:.2f}ms", flush=True)
+
+    x, y = lm_examples(0, 400, 32, cfg.vocab_size)
+
+    def init_fn(key, cfg=cfg):
+        return tr.init_params(key, cfg, jnp.float32)
+
+    def apply_fn(params, xb, cfg=cfg):
+        logits, _ = tr.forward(params, cfg, {"tokens": xb})
+        return logits[:, -1]                          # last-token classifier
+
+    conv_rows = []
+    for label, bits, ef in (("int8", 8, False), ("int4+ef", 4, True),
+                            ("1bit+ef", 1, True)):
+        r = run_colearn(init_fn, apply_fn, (x, y[:, -1]),
+                        (x[:100], y[:100, -1]), K=K, rounds=rounds, T0=1,
+                        batch_size=8, seed=seed, engine="fused",
+                        codec=api.get_codec("fused", bits=bits,
+                                            error_feedback=ef))
+        conv_rows.append({"codec": label, "bits": bits, "error_feedback": ef,
+                          "final_acc": r["acc"][-1], "acc": r["acc"],
+                          "comm_bytes_per_round": r["comm_bytes"],
+                          "total_comm_bytes": r["total_comm_bytes"]})
+        if not quiet:
+            print(f"wire_convergence,{label},acc={r['acc'][-1]:.4f},"
+                  f"comm={r['comm_bytes'] / 2 ** 20:.1f}MiB/round",
+                  flush=True)
+    return {"task": "quickstart (smoke internlm2, K=5, synthetic LM)",
+            "bytes": bytes_rows, "convergence": conv_rows}
+
+
 def interval_rows(archs=("internlm2-1.8b",), T0=1, quiet=False):
     """Measured smoke-scale round interval + the ILE doubling effect."""
     from benchmarks.harness import run_colearn
@@ -218,6 +313,24 @@ def check():
     assert rows[0]["wire_bytes_flat"] >= rows[0]["params_per_participant"]
     vol = volume_rows(quiet=True)
     assert all(r["volume_int8_mb"] < r["volume_mb_per_round"] for r in vol)
+
+    # sub-int8 wire: exact byte table holds the >= 1.9x-per-halving shape
+    # and the stateful (error-feedback) fused average runs under jit
+    wt = {r["bits"]: r for r in _wire_bytes_table(stacked)}
+    for fam in ("wire_bytes_leafwise", "wire_bytes_flat"):
+        assert wt[8][fam] / wt[4][fam] >= 1.9, (fam, wt)
+        assert wt[4][fam] / wt[1][fam] >= 1.9, (fam, wt)
+    ef_codec = api.FlatFusedIntN(bits=4, error_feedback=True, block=block,
+                                 impl="ref")
+    res0 = ef_codec.init_state(stacked)
+    agg = jax.jit(api.FullAverage().make_aggregate_fn(ef_codec))
+    mixed, res1 = jax.block_until_ready(agg(stacked, None, res0))
+    assert any(np.abs(np.asarray(l)).max() > 0
+               for l in jax.tree.leaves(res1)), \
+        "int4 error-feedback residual stayed zero on a real param tree"
+    for a, t in zip(jax.tree.leaves(mixed), jax.tree.leaves(stacked)):
+        assert np.isfinite(np.asarray(a, np.float32)).all() and \
+            a.dtype == t.dtype
     print("comm_cost --check OK", flush=True)
     return 0
 
@@ -234,11 +347,19 @@ def main(argv=None):
     rec = {"backend": jax.default_backend(), "reps": args.reps,
            "volume": volume_rows(),
            "finalize_latency": finalize_latency_rows(reps=args.reps),
+           "wire_precision": wire_precision_rows(),
            "interval": interval_rows()}
     best = max(rec["finalize_latency"], key=lambda r: r["speedup_min"])
+    wt = {r["bits"]: r for r in rec["wire_precision"]["bytes"]}
+    conv = {r["codec"]: r for r in rec["wire_precision"]["convergence"]}
     rec["headline"] = {
         "best_finalize_speedup": best["speedup_min"],
         "best_finalize_arch": best["arch"],
+        "int4_vs_int8_wire_ratio":
+            wt[8]["wire_bytes_flat"] / wt[4]["wire_bytes_flat"],
+        "int4_ef_final_acc": conv["int4+ef"]["final_acc"],
+        "int8_final_acc": conv["int8"]["final_acc"],
+        "1bit_ef_final_acc": conv["1bit+ef"]["final_acc"],
         "note": "flat-buffer codec collapses the leafwise path's per-leaf "
                 "pad/reshape + quant/dequant + separate mean into one "
                 "fused pass over one contiguous buffer; leafwise also "

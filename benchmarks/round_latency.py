@@ -262,10 +262,45 @@ def check_retrace():
     assert n_final5 == 1, \
         f"finalize retraced under churn: {n_final5} compiles"
 
+    # 6) error-feedback wire: the residual is traced data threaded through
+    #    round/chunk/finalize (ISSUE 7 acceptance) — an ILE doubling on the
+    #    chunked path and schedule swaps on the single-shot path must still
+    #    compile each stateful executable exactly once
+    ef = api.FlatFusedIntN(bits=4, error_feedback=True)
+    cfg6 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                         epochs_rule="ile", max_rounds=8)
+    learner6 = CoLearner(cfg6, zero_loss, codec=ef,
+                         round_engine=api.FusedEngine(chunk=2))
+    state6 = learner6.init(params)
+    for _ in range(4):
+        state6 = learner6.run_round(state6, lambda i, j: batches)
+    assert [l.T for l in state6["log"]] == [2, 2, 4, 8], \
+        [l.T for l in state6["log"]]
+    assert state6["residual"] is not None
+    n_epochs6 = learner6._fused_epochs._cache_size()
+    n_final6 = learner6._fused_finalize._cache_size()
+    assert n_epochs6 == 1, \
+        f"EF chunk executable retraced: {n_epochs6} compiles"
+    assert n_final6 == 1, \
+        f"EF stateful finalize retraced: {n_final6} compiles"
+
+    cfg6b = CoLearnConfig(n_participants=2, T0=2, epsilon=0.0, max_rounds=8,
+                          epochs_rule="fle")
+    learner6b = CoLearner(cfg6b, zero_loss, codec=ef, round_engine="fused")
+    state6b = learner6b.init(params)
+    for _ in range(2):
+        state6b = learner6b.run_round(state6b, lambda i, j: batches)
+    learner6b.set_schedule("elr")
+    state6b = learner6b.run_round(state6b, lambda i, j: batches)
+    n_round6 = learner6b._fused_round._cache_size()
+    assert n_round6 == 1, \
+        f"EF round executable retraced: {n_round6} compiles"
+
     print("check-retrace OK: chunk/finalize/round executables compiled "
           "once across an ILE doubling, 4 schedule swaps, a warmup "
-          "ramp, the masked+weighted heterogeneity scenario, and "
-          "per-round membership churn")
+          "ramp, the masked+weighted heterogeneity scenario, "
+          "per-round membership churn, and the stateful error-feedback "
+          "wire (residual traced through both engine paths)")
     return 0
 
 

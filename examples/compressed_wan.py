@@ -8,13 +8,18 @@ are exercised under full Eq. 2 averaging — LeafwiseInt8 (the per-leaf
 reference roundtrip) and FlatFusedInt8 (one fused quantize->average->
 dequantize pass over one contiguous buffer, exact byte accounting) — and
 the per-round wire bytes now come straight from ``RoundLog.comm_bytes``
-(codec-priced upload + f32 download). A fourth run swaps the aggregator
-for FedAvg-style partial participation: only m=2 of the K=4 data centers
-upload each round, and the comm accounting shrinks accordingly. The final
-run keeps full averaging but gates it behind a Kamp-style
-``DivergenceTrigger`` sync policy: rounds where the local models haven't
-drifted past delta skip the wire entirely and bill ZERO bytes — the
-cheapest upload is the one never sent.
+(codec-priced upload + f32 download). Two sub-int8 runs push the same
+flat wire below one byte per element — ``FlatFusedIntN(bits=4,
+error_feedback=True)`` and the 1-bit extreme — where the error-feedback
+residual (each round re-injects its own rounding error into the next
+upload) is what keeps the aggressive widths converging alongside int8;
+compare their bytes AND final losses in the output. A later run swaps
+the aggregator for FedAvg-style partial participation: only m=2 of the
+K=4 data centers upload each round, and the comm accounting shrinks
+accordingly. The final run keeps full averaging but gates it behind a
+Kamp-style ``DivergenceTrigger`` sync policy: rounds where the local
+models haven't drifted past delta skip the wire entirely and bill ZERO
+bytes — the cheapest upload is the one never sent.
 
 Run:  PYTHONPATH=src python examples/compressed_wan.py
 """
@@ -25,7 +30,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
 from repro.core.api import (DivergenceTrigger, ExactF32, FlatFusedInt8,
-                            FullAverage, LeafwiseInt8, PartialParticipation)
+                            FlatFusedIntN, FullAverage, LeafwiseInt8,
+                            PartialParticipation)
 from repro.core.colearn import CoLearner
 from repro.data.partition import partition_arrays
 from repro.data.pipeline import ParticipantData
@@ -40,6 +46,10 @@ RUNS = (
     ("exact (paper)", ExactF32(), FullAverage(), None),
     ("int8 leafwise", LeafwiseInt8(), FullAverage(), None),
     ("int8 flat-buffer", FlatFusedInt8(), FullAverage(), None),
+    ("int4 flat + EF", FlatFusedIntN(bits=4, error_feedback=True),
+     FullAverage(), None),
+    ("1-bit flat + EF", FlatFusedIntN(bits=1, error_feedback=True),
+     FullAverage(), None),
     ("flat + partial m=2", FlatFusedInt8(), PartialParticipation(m=2), None),
     ("flat + div-trigger", FlatFusedInt8(), FullAverage(),
      DivergenceTrigger(delta=0.01)),

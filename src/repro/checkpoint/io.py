@@ -79,11 +79,16 @@ def save_round_state(path: str, state):
     save_pytree(path + ".opt.npz", state["opt"])
     if state.get("prev_avg") is not None:
         save_pytree(path + ".prev_avg.npz", state["prev_avg"])
+    if state.get("residual") is not None:
+        # error-feedback codec memory: without it a resumed run would
+        # re-quantize from zero error and diverge from the uninterrupted one
+        save_pytree(path + ".residual.npz", state["residual"])
     ctrl = state["ctrl"]
     meta = {"round": state["round"], "global_epoch": state["global_epoch"],
             "T": ctrl.T, "history": list(ctrl.history),
             "skipped": list(getattr(ctrl, "skipped", ())),
             "has_prev_avg": state.get("prev_avg") is not None,
+            "has_residual": state.get("residual") is not None,
             "has_opt": True}
     mem = state.get("membership")
     if mem is not None:
@@ -130,6 +135,12 @@ def restore_round_state(path: str, state):
         # pre-membership checkpoints: every slot was (implicitly) live
         K = jax.tree_util.tree_leaves(state["params"])[0].shape[0]
         state["membership"] = Membership.all_live(K)
+    if meta.get("has_residual") and state.get("residual") is not None:
+        # restore into the learner's init-built residual structure; legacy
+        # checkpoints (no flag) keep the caller's zero residual — the
+        # documented fallback, matching the pre-EF quantization behavior
+        state["residual"] = restore_pytree(path + ".residual.npz",
+                                           state["residual"])
     if meta.get("has_prev_avg"):
         like = jax.tree.map(lambda t: t[0], state["params"])
         state["prev_avg"] = restore_pytree(path + ".prev_avg.npz", like)

@@ -13,11 +13,15 @@ class, not another constructor flag plus an ``if`` in three files:
   ``encode``/``decode`` (whose composition is the in-sim wire-roundtrip
   emulation) plus exact per-participant ``wire_bytes`` accounting.
   Instances: :class:`ExactF32` (the paper-faithful f32 wire),
-  :class:`LeafwiseInt8` (per-leaf int8 roundtrip, ``core.compression``;
-  sub-block leaves bypass the codec and are billed at raw rates),
-  :class:`FlatFusedInt8` (the flat-buffer wire format, ``core.flatbuf`` +
-  ``kernels.comm`` — every element on the wire format, bytes exact by
-  construction).
+  :class:`LeafwiseIntN` (per-leaf blockwise roundtrip at 8/4/1 bits,
+  ``core.compression``; sub-block leaves bypass the codec and are billed
+  at raw rates), :class:`FlatFusedIntN` (the flat-buffer wire format,
+  ``core.flatbuf`` + ``kernels.comm`` — every element on the wire format,
+  bytes exact by construction). Both take ``error_feedback=True`` for
+  residual-memory compensation (a STATEFUL codec — the engines thread the
+  residual through the round executables as traced data);
+  :class:`LeafwiseInt8` / :class:`FlatFusedInt8` remain the bit-for-bit
+  ``bits=8`` points.
 
 * :class:`Aggregator` — who averages what. Each aggregator is a row-
   stochastic ``(K, K)`` *mixing matrix* per round applied over the
@@ -107,13 +111,38 @@ class WireCodec(abc.ABC):
     """What one participant's upload looks like on the wire.
 
     ``decode(encode(stacked))`` is the in-sim wire emulation (identity for
-    the exact codec, an int8 quantization roundtrip otherwise);
+    the exact codec, a blockwise quantization roundtrip otherwise);
     ``roundtrip`` is that composition and is what aggregators trace into
     the round executable. ``wire_bytes`` is the exact per-participant
     upload byte count, bypasses and padding included.
+
+    A codec may carry per-participant STATE — error-feedback residual
+    memory, the standard trick that keeps sub-int8 quantization convergent.
+    ``stateful`` advertises it, ``init_state(stacked)`` builds the zero
+    residual, and ``roundtrip_ef(stacked, residual)`` is the stateful wire
+    emulation returning ``(roundtripped, new_residual)``. Aggregators then
+    build ``aggregate(stacked, weights, residual) -> (mixed, new_residual)``
+    and the engines thread the residual through the round executables as
+    traced data (no retraces, see ``CoLearner``/``core.engine``).
     """
 
     name: str = "codec"
+
+    @property
+    def stateful(self) -> bool:
+        """True when the codec carries per-participant residual memory."""
+        return False
+
+    def init_state(self, stacked):
+        """Zero codec state for a stacked ``(K, ...)`` tree (accepts
+        ``ShapeDtypeStruct`` trees too); None for stateless codecs."""
+        return None
+
+    def roundtrip_ef(self, stacked, residual):
+        """Stateful wire emulation: quantize ``x + e``, return
+        ``(roundtripped, new_residual)`` with ``e' = (x + e) - dequant``."""
+        raise NotImplementedError(
+            f"codec {self.name!r} is stateless (no error feedback)")
 
     @abc.abstractmethod
     def encode(self, stacked):
@@ -131,14 +160,17 @@ class WireCodec(abc.ABC):
     def wire_bytes(self, stacked) -> int:
         """Exact bytes ONE participant uploads for this stacked tree."""
 
-    def make_fused_mean(self, mesh=None, axis="pod", weighted=False):
+    def make_fused_mean(self, mesh=None, axis="pod", weighted=False,
+                        stateful=False):
         """Optional codec-owned Eq. 2 fast path (wire roundtrip + mean as
         one fused pass). ``None`` means the aggregator composes
         ``roundtrip`` with a generic mean instead. ``FullAverage`` consults
         this so the flat-buffer kernel keeps owning its pod shard_map.
         ``weighted=True`` asks for the example-count-weighted variant —
         ``fn(stacked, wrow)`` with a traced normalized length-K weight row
-        (FedAvg's unequal-shard generalization of Eq. 2)."""
+        (FedAvg's unequal-shard generalization of Eq. 2). ``stateful=True``
+        asks for the error-feedback variant, whose fn takes the residual
+        as its last argument and returns ``(mean_tree, new_residual)``."""
         return None
 
 
@@ -159,19 +191,54 @@ class ExactF32(WireCodec):
 
 
 @dataclasses.dataclass(frozen=True)
-class LeafwiseInt8(WireCodec):
-    """Per-leaf int8 blockwise roundtrip (the tested reference wire path).
+class LeafwiseIntN(WireCodec):
+    """Per-leaf blockwise quantization roundtrip at ``bits`` ∈ {8, 4, 1}
+    (the tested reference wire path; int4 packs two codes per byte, 1-bit
+    is sign + per-block mean-|x| scale — ``repro.kernels.quantize``).
 
     Leaves smaller than one quantization ``block`` (and scalars) bypass the
     codec and travel uncompressed; ``wire_bytes`` bills them at raw-dtype
     rates (``compression.compressed_bytes``). Note the emulation runs on
     the STACKED tree, so the bypass threshold sees ``K * size`` — see
     ``core.compression`` for the accounting caveat at small K.
+
+    ``error_feedback=True`` makes the codec STATEFUL: each participant
+    keeps an f32 residual mirror of the params, quantizes ``x + e`` and
+    carries ``e' = (x + e) - dequant`` to the next round — the standard
+    compensation that keeps int4/1-bit wires convergent. ``bits=8,
+    error_feedback=False`` is bit-for-bit :class:`LeafwiseInt8`.
     """
 
     block: int = DEFAULT_BLOCK
     impl: str = "ref"
-    name = "leafwise"
+    bits: int = 8
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        from repro.kernels.quantize import check_bits
+        check_bits(self.bits)
+
+    @property
+    def name(self):
+        tag = "leafwise" if self.bits == 8 else f"leafwise-int{self.bits}"
+        return tag + "+ef" if self.error_feedback else tag
+
+    @property
+    def stateful(self) -> bool:
+        return self.error_feedback
+
+    def init_state(self, stacked):
+        if not self.error_feedback:
+            return None
+        # f32 mirror of every stacked leaf; bypassed leaves keep zero
+        # residual forever (roundtrip_ef passes them through untouched)
+        return jax.tree.map(
+            lambda t: jnp.zeros(t.shape, jnp.float32), stacked)
+
+    def roundtrip_ef(self, stacked, residual):
+        return compression.quantize_roundtrip_ef(
+            stacked, residual, block=self.block, impl=self.impl,
+            bits=self.bits)
 
     def encode(self, stacked):
         leaves, treedef = jax.tree.flatten(stacked)
@@ -180,8 +247,9 @@ class LeafwiseInt8(WireCodec):
             if t.ndim == 0 or t.size < self.block:
                 enc.append(("raw", t, None))
             else:
-                enc.append(("q8", kops.quantize_blockwise(
-                    t, block=self.block, impl=self.impl), t.dtype))
+                enc.append((f"q{self.bits}", kops.quantize_blockwise(
+                    t, block=self.block, bits=self.bits, impl=self.impl),
+                    t.dtype))
         return (treedef, tuple(enc))
 
     def decode(self, wire):
@@ -193,7 +261,8 @@ class LeafwiseInt8(WireCodec):
             else:
                 q, scale, shape = payload
                 leaves.append(kops.dequantize_blockwise(
-                    q, scale, shape, impl=self.impl).astype(dtype))
+                    q, scale, shape, bits=self.bits,
+                    impl=self.impl).astype(dtype))
         return jax.tree.unflatten(treedef, leaves)
 
     # roundtrip = decode(encode(x)) — the inherited default. It applies the
@@ -203,41 +272,102 @@ class LeafwiseInt8(WireCodec):
 
     def wire_bytes(self, stacked) -> int:
         return compression.compressed_bytes(_one_participant_shapes(stacked),
-                                            block=self.block)
+                                            block=self.block, bits=self.bits)
 
 
 @dataclasses.dataclass(frozen=True)
-class FlatFusedInt8(WireCodec):
-    """The flat-buffer wire format: one contiguous ``(K, N_pad)`` buffer,
-    every leaf on the int8 + per-block-scale format, bytes exact by
-    construction (``core.flatbuf``). Under :class:`FullAverage` the whole
-    quantize->average->dequantize pass runs as ONE kernel
-    (``kernels.comm.quant_avg_dequant``), on the pod mesh as one shard_map
-    psum of one buffer."""
+class LeafwiseInt8(LeafwiseIntN):
+    """The PR-2 int8 reference wire, now the ``bits=8`` point of
+    :class:`LeafwiseIntN` (kept as a named class for the registry and the
+    bit-for-bit compatibility pin in tests/test_api.py)."""
+
+    name = "leafwise"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatFusedIntN(WireCodec):
+    """The flat-buffer wire format at ``bits`` ∈ {8, 4, 1}: one contiguous
+    ``(K, N_pad)`` buffer, every leaf on the packed-payload + per-block-
+    scale format, bytes exact by construction (``core.flatbuf``). Under
+    :class:`FullAverage` the whole quantize->average->dequantize pass runs
+    as ONE kernel (``kernels.comm.quant_avg_dequant``), on the pod mesh as
+    one shard_map psum of one buffer.
+
+    ``error_feedback=True`` makes the codec STATEFUL: the residual is one
+    ``(K, N_pad)`` f32 buffer riding the same flat layout, and the fused
+    kernel becomes ``quant_avg_dequant_ef`` — mean AND new residual in one
+    pass. ``bits=8, error_feedback=False`` is bit-for-bit
+    :class:`FlatFusedInt8`."""
 
     block: int = DEFAULT_BLOCK
     impl: str = "ref"
-    name = "fused"
+    bits: int = 8
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        from repro.kernels.quantize import check_bits
+        check_bits(self.bits)
+
+    @property
+    def name(self):
+        tag = "fused" if self.bits == 8 else f"fused-int{self.bits}"
+        return tag + "+ef" if self.error_feedback else tag
+
+    @property
+    def stateful(self) -> bool:
+        return self.error_feedback
+
+    def init_state(self, stacked):
+        if not self.error_feedback:
+            return None
+        layout = flatbuf.make_layout(stacked, block=self.block)
+        return jnp.zeros((layout.k, layout.n_pad), jnp.float32)
+
+    def roundtrip_ef(self, stacked, residual):
+        layout = flatbuf.make_layout(stacked, block=self.block)
+        buf = flatbuf.flatten(stacked, layout)
+        y = buf + residual
+        q, scale, shape = kops.quantize_blockwise(y, block=self.block,
+                                                  bits=self.bits,
+                                                  impl=self.impl)
+        dq = kops.dequantize_blockwise(q, scale, shape, bits=self.bits,
+                                       impl=self.impl)
+        return flatbuf.unflatten(dq, layout), y - dq
 
     def encode(self, stacked):
         layout = flatbuf.make_layout(stacked, block=self.block)
         buf = flatbuf.flatten(stacked, layout)
         q, scale, shape = kops.quantize_blockwise(buf, block=self.block,
+                                                  bits=self.bits,
                                                   impl=self.impl)
         return (layout, q, scale, shape)
 
     def decode(self, wire):
         layout, q, scale, shape = wire
-        buf = kops.dequantize_blockwise(q, scale, shape, impl=self.impl)
+        buf = kops.dequantize_blockwise(q, scale, shape, bits=self.bits,
+                                        impl=self.impl)
         return flatbuf.unflatten(buf, layout)
 
     def wire_bytes(self, stacked) -> int:
-        return compression.flat_compressed_bytes(stacked, block=self.block)
+        return compression.flat_compressed_bytes(stacked, block=self.block,
+                                                 bits=self.bits)
 
-    def make_fused_mean(self, mesh=None, axis="pod", weighted=False):
+    def make_fused_mean(self, mesh=None, axis="pod", weighted=False,
+                        stateful=False):
+        if stateful and not self.error_feedback:
+            raise ValueError("stateful fused mean requires error_feedback")
         return engine_mod.make_fused_compressed_average(
-            block=self.block, impl=self.impl, mesh=mesh, axis=axis,
-            weighted=weighted)
+            block=self.block, impl=self.impl, bits=self.bits, mesh=mesh,
+            axis=axis, weighted=weighted, stateful=stateful)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatFusedInt8(FlatFusedIntN):
+    """The PR-3 flat-buffer int8 wire, now the ``bits=8`` point of
+    :class:`FlatFusedIntN` (kept as a named class for the registry and the
+    bit-for-bit compatibility pin in tests)."""
+
+    name = "fused"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -297,9 +427,35 @@ def _make_weighted_psum_aggregate(aggregator, codec, mesh, param_specs,
     so the pod path psums each pod's weight-scaled, codec-roundtripped
     local row (one psum per leaf, f32 payloads, combinable by XLA) —
     O(model) cross-pod traffic and never a K-way gather; the single-buffer
-    int8 collective remains the flat-codec weighted/uniform fast path."""
+    quantized collective remains the flat-codec weighted/uniform fast path.
+
+    For a STATEFUL codec the local row's roundtrip is the error-feedback
+    one (``roundtrip_ef``) — each pod's residual stays resident on that
+    pod (it never crosses the wire) and the aggregate returns it alongside
+    the mean: ``aggregate(stacked, weights, residual) -> (mixed, new_res)``
+    with the residual sharded like the params (leafwise mirror tree)."""
     from jax.sharding import PartitionSpec as P
     from repro.sharding import compat
+
+    if getattr(codec, "stateful", False):
+        def aggregate_ef(stacked, weights, residual):
+            _check_one_row_per_pod(aggregator, stacked, mesh, axis)
+
+            def local_mix(local, wrow, lres):
+                rt, new_res = codec.roundtrip_ef(local, lres)
+                k = jax.lax.axis_index(axis)
+
+                def one(t):
+                    s = jax.lax.psum(wrow[k] * t.astype(jnp.float32), axis)
+                    return s.astype(t.dtype)
+                return jax.tree.map(one, rt), new_res
+
+            return compat.shard_map(
+                local_mix, mesh=mesh, in_specs=(param_specs, P(),
+                                                param_specs),
+                out_specs=(param_specs, param_specs),
+                check_vma=False)(stacked, weights[0], residual)
+        return aggregate_ef
 
     def aggregate(stacked, weights):
         _check_one_row_per_pod(aggregator, stacked, mesh, axis)
@@ -386,7 +542,17 @@ class Aggregator(abc.ABC):
         return self._make_host_aggregate_fn(codec)
 
     def _make_host_aggregate_fn(self, codec):
-        """Simulation-path aggregation (single host, all K rows visible)."""
+        """Simulation-path aggregation (single host, all K rows visible).
+
+        Stateful codecs (error feedback) change the signature to
+        ``aggregate(stacked, weights, residual) -> (mixed, new_residual)``
+        — the residual is traced data alongside the params."""
+        if getattr(codec, "stateful", False):
+            def aggregate_ef(stacked, weights, residual):
+                rt, new_res = codec.roundtrip_ef(stacked, residual)
+                return mix_participants(rt, weights), new_res
+            return aggregate_ef
+
         def aggregate(stacked, weights):
             return mix_participants(codec.roundtrip(stacked), weights)
         return aggregate
@@ -472,23 +638,46 @@ class FullAverage(Aggregator):
 
     def make_aggregate_fn(self, codec, *, mesh=None, param_specs=None,
                           axis="pod", dynamic=False):
+        stateful = getattr(codec, "stateful", False)
         if self.weights is not None or dynamic:
             # per-round weight row (explicit weights and/or live-set
             # renormalization) — always the weighted paths
             fused = codec.make_fused_mean(mesh=mesh, axis=axis,
-                                          weighted=True)
+                                          weighted=True, stateful=stateful)
             if fused is not None:
+                if stateful:
+                    return lambda stacked, weights, residual: fused(
+                        stacked, weights[0], residual)
                 return lambda stacked, weights: fused(stacked, weights[0])
             if mesh is not None and param_specs is not None:
                 return _make_weighted_psum_aggregate(
                     self, codec, mesh, param_specs, axis)
             return self._make_host_aggregate_fn(codec)
-        fused = codec.make_fused_mean(mesh=mesh, axis=axis)
+        fused = codec.make_fused_mean(mesh=mesh, axis=axis,
+                                      stateful=stateful)
         if fused is not None:
+            if stateful:
+                return lambda stacked, weights, residual: fused(stacked,
+                                                                residual)
             return lambda stacked, weights=None: fused(stacked)
         if mesh is not None and param_specs is not None:
+            if stateful:
+                # EF uniform mean on the pod mesh without a fused kernel:
+                # the broadcast-weighted psum with a baked uniform row —
+                # each pod's residual stays resident (never on the wire)
+                psum = _make_weighted_psum_aggregate(
+                    self, codec, mesh, param_specs, axis)
+                K = mesh.shape[axis]
+                uni = jnp.full((K, K), 1.0 / K, jnp.float32)
+                return lambda stacked, weights, residual: psum(
+                    stacked, uni, residual)
             sm = averaging.make_average_shard_map(mesh, param_specs, axis)
             return lambda stacked, weights=None: sm(codec.roundtrip(stacked))
+        if stateful:
+            def aggregate_ef(stacked, weights, residual):
+                rt, new_res = codec.roundtrip_ef(stacked, residual)
+                return averaging.average_pjit(rt), new_res
+            return aggregate_ef
         return lambda stacked, weights=None: averaging.average_pjit(
             codec.roundtrip(stacked))
 
@@ -624,11 +813,10 @@ class RingGossip(Aggregator):
         # serverless: a participant's OWN model never crosses the wire, so
         # only the received (off-diagonal) leg goes through the codec —
         # quantizing the diagonal too would overstate compression error
-        def aggregate(stacked, weights):
+        def _mix(stacked, rt, weights):
             W = weights.astype(jnp.float32)
             d = jnp.diagonal(W)
             off = W - jnp.diag(d)
-            rt = codec.roundtrip(stacked)
 
             def one(t, q):
                 local = d.reshape((-1,) + (1,) * (t.ndim - 1)) \
@@ -638,10 +826,23 @@ class RingGossip(Aggregator):
                 return (local + recv).astype(t.dtype)
 
             return jax.tree.map(one, stacked, rt)
+
+        if getattr(codec, "stateful", False):
+            def aggregate_ef(stacked, weights, residual):
+                rt, new_res = codec.roundtrip_ef(stacked, residual)
+                return _mix(stacked, rt, weights), new_res
+            return aggregate_ef
+
+        def aggregate(stacked, weights):
+            return _mix(stacked, codec.roundtrip(stacked), weights)
         return aggregate
 
     def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
                                 dynamic=False):
+        if getattr(codec, "stateful", False):
+            # the static ppermute has no residual plumbing; the host path
+            # carries the error-feedback state correctly
+            return None
         if dynamic:
             # the static ppermute bakes the all-live ring; under elastic
             # membership the routed matrix must be honored per round, so
@@ -1045,6 +1246,7 @@ def _gate_accepts_delta(policy) -> bool:
 class _PythonRunner:
     def __init__(self, learner):
         self.learner = learner
+        self._stateful = getattr(learner.codec, "stateful", False)
         self._jit_agg = jax.jit(learner._aggregate_fn)
 
     def run_round(self, state, epoch_batches_fn):
@@ -1088,29 +1290,44 @@ class _PythonRunner:
         else:
             div, synced = None, True
         if synced:
-            # aggregate (Eq. 2 / partial / gossip) over the codec's wire
-            averaged = self._jit_agg(state["params"],
-                                     learner.round_weights(i, state))
+            # aggregate (Eq. 2 / partial / gossip) over the codec's wire;
+            # a stateful codec (error feedback) threads the residual in
+            # and out of the same jitted aggregate
+            if self._stateful:
+                averaged, new_res = self._jit_agg(
+                    state["params"], learner.round_weights(i, state),
+                    state["residual"])
+            else:
+                averaged = self._jit_agg(state["params"],
+                                         learner.round_weights(i, state))
+                new_res = None
             k0 = 0 if live_np is None else int(np.argmax(live_np))
             new_avg = averaging.unstack_participant(averaged, k0)
             rel = (float("inf") if state["prev_avg"] is None
                    else relative_change(new_avg, state["prev_avg"]))
             fresh_opt = jax.vmap(learner.opt.init)(averaged)
             if live_row is not None:
-                # dead rows: identity carry — no download, own opt kept
+                # dead rows: identity carry — no download, own opt kept,
+                # and (stateful) their residual memory is frozen too
                 averaged = engine_mod.select_live(live_row, averaged,
                                                   state["params"])
                 fresh_opt = engine_mod.select_live(live_row, fresh_opt,
                                                    state["opt"])
+                if self._stateful:
+                    new_res = engine_mod.select_live(live_row, new_res,
+                                                     state["residual"])
         else:
             # quiet round (Kamp): keep local params AND optimizer state,
-            # reference unchanged, nothing crosses the wire
+            # reference unchanged, nothing crosses the wire (the residual
+            # memory is untouched — nothing was quantized)
             averaged, fresh_opt = state["params"], state["opt"]
             new_avg, rel = sync_ref, div
+            new_res = state.get("residual")
         return learner._finish_round(state, i, T_i, rel,
                                      _live_loss_means(losses, live_np),
                                      lrs[0], lrs[-1], averaged, fresh_opt,
-                                     new_avg, synced=synced)
+                                     new_avg, synced=synced,
+                                     residual=new_res)
 
 
 class _FusedRunner:
@@ -1130,16 +1347,22 @@ class _FusedRunner:
         # elastic membership: build the live-row variants once; membership
         # changes then ride in as traced data (zero retraces)
         self._live = learner._churn_active
+        # stateful codec (error feedback): the residual rides through the
+        # round/finalize executables as traced data right after opt_state
+        # (the chunk executables never touch it — EF happens at finalize)
+        self._stateful = getattr(learner.codec, "stateful", False)
         self._round = engine_mod.make_fused_round(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
             aggregate_fn=learner._aggregate_fn, gated=self._gated,
-            gate_fn=gate_fn, masked=self._masked, live=self._live)
+            gate_fn=gate_fn, masked=self._masked, live=self._live,
+            stateful=self._stateful)
         self._epochs = engine_mod.make_fused_epochs(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
             masked=self._masked, live=self._live)
         self._finalize = engine_mod.make_fused_finalize(
             learner.opt, aggregate_fn=learner._aggregate_fn,
-            gated=self._gated, gate_fn=gate_fn, live=self._live)
+            gated=self._gated, gate_fn=gate_fn, live=self._live,
+            stateful=self._stateful)
 
     def run_round(self, state, epoch_batches_fn):
         """One round as one (or, past ``chunk`` epochs, a few chained)
@@ -1182,15 +1405,21 @@ class _FusedRunner:
         if T_i <= self.chunk:
             batches = engine_mod.stack_epoch_batches(
                 [epoch_batches_fn(i, j) for j in range(T_i)])
+            # stateful codec: the residual rides in right after opt_state
+            # and comes back in the aux dict (device-side, like new_avg)
+            lead = ((state["params"], state["opt"], state["residual"])
+                    if self._stateful else (state["params"], state["opt"]))
             if gated:
                 out_p, out_o, aux = self._round(
-                    state["params"], state["opt"], batches, *mask_args,
+                    *lead, batches, *mask_args,
                     ge0, sched, total, sync_ref, delta, agg_w)
             else:
                 out_p, out_o, aux = self._round(
-                    state["params"], state["opt"], batches, *mask_args,
+                    *lead, batches, *mask_args,
                     ge0, sched, total, agg_w)
             state["params"], state["opt"] = out_p, out_o
+            if self._stateful:
+                state["residual"] = aux["residual"]
             new_avg = aux["new_avg"]
             # the round's single host sync (scalars/loss curves only — the
             # aggregated model itself stays on device)
@@ -1221,23 +1450,38 @@ class _FusedRunner:
                 lparts.append(l)
                 rparts.append(r)
                 j0 += C
+            # stateful codec: the residual enters finalize right after
+            # opt_state (after params on the opt-free static variant) and
+            # a new residual is appended to the outputs
+            res_in = (state["residual"],) if self._stateful else ()
             if gated:
                 fin_args = ((sync_ref, delta, live_row, agg_w) if self._live
                             else (sync_ref, delta, agg_w))
-                out_p, out_o, rel_t, div_t, sync_t, new_avg = \
-                    self._finalize(state["params"], state["opt"], *fin_args)
+                out = self._finalize(state["params"], state["opt"],
+                                     *res_in, *fin_args)
+                if self._stateful:
+                    (out_p, out_o, rel_t, div_t, sync_t, new_avg,
+                     out_res) = out
+                    state["residual"] = out_res
+                else:
+                    out_p, out_o, rel_t, div_t, sync_t, new_avg = out
                 state["params"], state["opt"] = out_p, out_o
                 lparts, rparts, rel_dev, div_dev, sync_dev = jax.device_get(
                     (lparts, rparts, rel_t, div_t, sync_t))
             else:
                 if self._live:
                     # live variant threads opt_state so dead rows keep it
-                    out_p, out_o, rel_t, new_avg = self._finalize(
-                        state["params"], state["opt"], old_avg, live_row,
-                        agg_w)
+                    out = self._finalize(
+                        state["params"], state["opt"], *res_in, old_avg,
+                        live_row, agg_w)
                 else:
-                    out_p, out_o, rel_t, new_avg = self._finalize(
-                        state["params"], old_avg, agg_w)
+                    out = self._finalize(
+                        state["params"], *res_in, old_avg, agg_w)
+                if self._stateful:
+                    out_p, out_o, rel_t, new_avg, out_res = out
+                    state["residual"] = out_res
+                else:
+                    out_p, out_o, rel_t, new_avg = out
                 state["params"], state["opt"] = out_p, out_o
                 lparts, rparts, rel_dev = jax.device_get(
                     (lparts, rparts, rel_t))
@@ -1296,12 +1540,31 @@ def register_sync_policy(name, factory):
     return factory
 
 
-register_codec("exact", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
-register_codec("none", lambda block=DEFAULT_BLOCK, impl="ref": ExactF32())
-register_codec("leafwise", LeafwiseInt8)
-register_codec("int8", LeafwiseInt8)           # legacy CLI alias
-register_codec("fused", FlatFusedInt8)
-register_codec("flat", FlatFusedInt8)          # alias
+def _leafwise_codec(block=DEFAULT_BLOCK, impl="ref", bits=8,
+                    error_feedback=False):
+    """``bits=8`` without error feedback resolves to the LeafwiseInt8
+    class so registry/back-compat isinstance pins keep holding."""
+    if bits == 8 and not error_feedback:
+        return LeafwiseInt8(block=block, impl=impl)
+    return LeafwiseIntN(block=block, impl=impl, bits=bits,
+                        error_feedback=error_feedback)
+
+
+def _flat_codec(block=DEFAULT_BLOCK, impl="ref", bits=8,
+                error_feedback=False):
+    if bits == 8 and not error_feedback:
+        return FlatFusedInt8(block=block, impl=impl)
+    return FlatFusedIntN(block=block, impl=impl, bits=bits,
+                         error_feedback=error_feedback)
+
+
+register_codec("exact", lambda block=DEFAULT_BLOCK, impl="ref", bits=8,
+               error_feedback=False: ExactF32())
+register_codec("none", CODECS["exact"])
+register_codec("leafwise", _leafwise_codec)
+register_codec("int8", _leafwise_codec)        # legacy CLI alias
+register_codec("fused", _flat_codec)
+register_codec("flat", _flat_codec)            # alias
 register_aggregator("full", FullAverage)
 register_aggregator("partial", PartialParticipation)
 register_aggregator("ring", RingGossip)
@@ -1350,10 +1613,16 @@ def _resolve(spec, registry, default, proto, kind, **kw):
                     f"{proto.__name__}; got {spec!r}")
 
 
-def get_codec(spec=None, *, block=DEFAULT_BLOCK, impl="ref") -> WireCodec:
-    """None | registry name | WireCodec instance -> WireCodec."""
+def get_codec(spec=None, *, block=DEFAULT_BLOCK, impl="ref", bits=8,
+              error_feedback=False) -> WireCodec:
+    """None | registry name | WireCodec instance -> WireCodec.
+
+    ``bits`` (8 | 4 | 1) and ``error_feedback`` parameterize the
+    quantizing registry names ("leafwise"/"int8", "fused"/"flat"); the
+    exact codecs ignore them and instances pass through unchanged."""
     return _resolve(spec, CODECS, ExactF32, WireCodec, "codec",
-                    block=block, impl=impl)
+                    block=block, impl=impl, bits=bits,
+                    error_feedback=error_feedback)
 
 
 def get_aggregator(spec=None, **kw) -> Aggregator:

@@ -123,6 +123,9 @@ class CoLearner:
 
     def __post_init__(self):
         self.codec = api.get_codec(self.codec)
+        # error-feedback codecs carry per-participant residual memory
+        # through the round state (init/run_round/restart/checkpoint)
+        self._codec_stateful = getattr(self.codec, "stateful", False)
         self.aggregator = api.get_aggregator(self.aggregator)
         self.round_engine = api.get_engine(self.round_engine)
         # None resolves the legacy cfg.schedule / cfg.epochs_rule strings
@@ -221,9 +224,13 @@ class CoLearner:
                 bool(a) for a in self.churn.live_mask(0, K)))
         else:
             mem = membership_mod.Membership.all_live(K)
+        # error-feedback codecs start from zero residual memory (the codec
+        # owns the mirror structure: leafwise trees / the flat wire buffer)
+        residual = (self.codec.init_state(stacked)
+                    if self._codec_stateful else None)
         return {"params": stacked, "opt": opt_state, "ctrl": ctrl,
                 "round": 0, "global_epoch": 0, "prev_avg": None, "log": [],
-                "membership": mem}
+                "membership": mem, "residual": residual}
 
     def epochs_budget(self, state):
         """The ELR anneal denominator for the round about to run: epochs
@@ -337,7 +344,8 @@ class CoLearner:
         return self._runner.run_round(state, epoch_batches_fn)
 
     def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
-                      lr_last, averaged, fresh_opt, new_avg, synced=True):
+                      lr_last, averaged, fresh_opt, new_avg, synced=True,
+                      residual=None):
         """The one round state transition, shared verbatim by both engines.
 
         ``fresh_opt`` is the per-participant opt reset (opt state is
@@ -346,10 +354,14 @@ class CoLearner:
         full-model host transfer per round. On a round a gated sync policy
         skipped (``synced=False``) the runner passes the untouched local
         params/opt, the unchanged sync reference, and the divergence as
-        ``rel`` — and the round bills zero wire bytes.
+        ``rel`` — and the round bills zero wire bytes. ``residual`` is the
+        error-feedback codec's post-round memory (None for stateless
+        codecs or when the runner already stored it on ``state``).
         """
         state["params"], state["opt"] = averaged, fresh_opt
         state["prev_avg"] = new_avg
+        if residual is not None:
+            state["residual"] = residual
         if self._churn_active:
             mem = state["membership"]
             events, n_live = mem.round_events(i), mem.n_live
@@ -447,4 +459,9 @@ class CoLearner:
         fresh = self.opt.init(shared)
         state["opt"] = jax.tree.map(
             lambda o, f: o.at[k].set(f), state["opt"], fresh)
+        if self._codec_stateful and state.get("residual") is not None:
+            # restart also forgets the quantization error memory: the
+            # residual tracked a trajectory that no longer exists
+            state["residual"] = jax.tree.map(
+                lambda e: e.at[k].set(0.0), state["residual"])
         return state

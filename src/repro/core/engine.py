@@ -256,9 +256,10 @@ def _make_epoch_scan(epoch_fn, lr_fn, masked=False, live=False):
     return scan_epochs
 
 
-def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
-                                  axis="pod", weighted=False):
-    """Eq. 2 fast path: int8 wire emulation + averaging as ONE buffer pass.
+def make_fused_compressed_average(*, block=256, impl="ref", bits=8,
+                                  mesh=None, axis="pod", weighted=False,
+                                  stateful=False):
+    """Eq. 2 fast path: quantized wire emulation + averaging as ONE pass.
 
     Returns an ``average_fn`` (stacked tree -> stacked tree, every slot
     holding the mean) that replaces the leafwise pair ``compress_fn=
@@ -289,17 +290,51 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
     up to f32 summation order; the unweighted path itself is untouched
     (bit-compatible Eq. 2).
 
+    ``bits`` ∈ {8, 4, 1} selects the wire precision (one code path —
+    ``kernels.quantize.unpack_codes`` is the identity at 8 bits, so the
+    int8 payloads stay bit-compatible). ``stateful=True`` builds the
+    error-feedback variants: the returned fn takes the ``(K, N_pad)`` f32
+    residual buffer as its LAST argument and returns ``(mean_tree,
+    new_residual)`` — sim path via the fused ``quant_avg_dequant_ef``
+    kernel (uniform) or the quantize/dequantize pair (weighted), pod path
+    still ONE psum with each pod's residual staying resident on that pod.
+
     The layout is recomputed per trace from static shapes only (free); the
     same tree structure always yields the same wire layout.
     """
     if mesh is None:
+        if stateful:
+            if weighted:
+                def average_w_ef(stacked, wrow, residual):
+                    layout = flatbuf.make_layout(stacked, block=block)
+                    buf = flatbuf.flatten(stacked, layout)
+                    y = buf + residual
+                    q, scale, shape = kops.quantize_blockwise(
+                        y, block=block, bits=bits, impl=impl)
+                    dq = kops.dequantize_blockwise(q, scale, shape,
+                                                   bits=bits, impl=impl)
+                    mean = jnp.einsum("k,kn->n", wrow.astype(jnp.float32),
+                                      dq)
+                    return flatbuf.unflatten_mean(mean, layout), y - dq
+                return average_w_ef
+
+            def average_ef(stacked, residual):
+                layout = flatbuf.make_layout(stacked, block=block)
+                buf = flatbuf.flatten(stacked, layout)
+                mean, new_res = kops.quant_avg_dequant_ef(
+                    buf, residual, block=block, bits=bits, impl=impl)
+                return flatbuf.unflatten_mean(mean, layout), new_res
+            return average_ef
+
         if weighted:
             def average_w(stacked, wrow):
                 layout = flatbuf.make_layout(stacked, block=block)
                 buf = flatbuf.flatten(stacked, layout)
                 q, scale, shape = kops.quantize_blockwise(buf, block=block,
+                                                          bits=bits,
                                                           impl=impl)
-                dq = kops.dequantize_blockwise(q, scale, shape, impl=impl)
+                dq = kops.dequantize_blockwise(q, scale, shape, bits=bits,
+                                               impl=impl)
                 mean = jnp.einsum("k,kn->n", wrow.astype(jnp.float32), dq)
                 return flatbuf.unflatten_mean(mean, layout)
             return average_w
@@ -307,12 +342,65 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
         def average(stacked):
             layout = flatbuf.make_layout(stacked, block=block)
             buf = flatbuf.flatten(stacked, layout)
-            mean = kops.quant_avg_dequant(buf, block=block, impl=impl)
+            mean = kops.quant_avg_dequant(buf, block=block, bits=bits,
+                                          impl=impl)
             return flatbuf.unflatten_mean(mean, layout)
         return average
 
+    from repro.kernels.quantize import unpack_codes
     from repro.sharding import compat
     K = mesh.shape[axis]
+
+    def _local_dequant(q, scale):
+        # unpack_codes is the identity at bits=8, so this is the exact
+        # expression the pre-bits pod path computed (bit-compatible)
+        qq = unpack_codes(q, bits)
+        return qq.astype(jnp.int32).astype(jnp.float32) * scale[:, None]
+
+    if stateful:
+        if weighted:
+            def average_w_ef(stacked, wrow, residual):
+                layout = flatbuf.make_layout(stacked, block=block)
+                buf = flatbuf.flatten(stacked, layout)
+
+                def local_avg(lbuf, w, lres):          # (1, N_pad) per pod
+                    y = lbuf + lres
+                    q, scale, _ = kops.quantize_blockwise(
+                        y, block=block, bits=bits, impl=impl)
+                    dq = _local_dequant(q, scale).reshape(
+                        1, -1)[:, :layout.n_pad]
+                    k = jax.lax.axis_index(axis)
+                    s = jax.lax.psum(w[k].astype(jnp.float32) * dq, axis)
+                    return s, y - dq
+
+                avg, new_res = compat.shard_map(
+                    local_avg, mesh=mesh,
+                    in_specs=(P(axis, None), P(), P(axis, None)),
+                    out_specs=(P(axis, None), P(axis, None)),
+                    check_vma=False)(buf, wrow, residual)
+                return flatbuf.unflatten(avg, layout), new_res
+            return average_w_ef
+
+        def average_ef(stacked, residual):
+            layout = flatbuf.make_layout(stacked, block=block)
+            buf = flatbuf.flatten(stacked, layout)
+
+            def local_avg(lbuf, lres):                 # (1, N_pad) per pod
+                y = lbuf + lres
+                q, scale, _ = kops.quantize_blockwise(
+                    y, block=block, bits=bits, impl=impl)
+                dq = _local_dequant(q, scale).reshape(
+                    1, -1)[:, :layout.n_pad]
+                mean = jax.lax.psum(dq, axis) / K
+                return mean, y - dq
+
+            avg, new_res = compat.shard_map(
+                local_avg, mesh=mesh,
+                in_specs=(P(axis, None), P(axis, None)),
+                out_specs=(P(axis, None), P(axis, None)),
+                check_vma=False)(buf, residual)
+            return flatbuf.unflatten(avg, layout), new_res
+        return average_ef
 
     if weighted:
         def average_w(stacked, wrow):
@@ -321,8 +409,8 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
 
             def local_avg(lbuf, w):                    # (1, N_pad) per pod
                 q, scale, _ = kops.quantize_blockwise(lbuf, block=block,
-                                                      impl=impl)
-                dq = q.astype(jnp.int32).astype(jnp.float32) * scale[:, None]
+                                                      bits=bits, impl=impl)
+                dq = _local_dequant(q, scale)
                 k = jax.lax.axis_index(axis)
                 s = jax.lax.psum(w[k].astype(jnp.float32) * dq, axis)
                 return s.reshape(1, -1)[:, :layout.n_pad]
@@ -340,8 +428,8 @@ def make_fused_compressed_average(*, block=256, impl="ref", mesh=None,
 
         def local_avg(lbuf):                           # (1, N_pad) per pod
             q, scale, _ = kops.quantize_blockwise(lbuf, block=block,
-                                                  impl=impl)
-            dq = q.astype(jnp.int32).astype(jnp.float32) * scale[:, None]
+                                                  bits=bits, impl=impl)
+            dq = _local_dequant(q, scale)
             mean = jax.lax.psum(dq, axis) / K
             return mean.reshape(1, -1)[:, :layout.n_pad]
 
@@ -378,7 +466,7 @@ def as_aggregate_fn(aggregate_fn=None, compress_fn=None, average_fn=None):
     return aggregate
 
 
-def _make_finalize(opt, aggregate_fn, live=False):
+def _make_finalize(opt, aggregate_fn, live=False, stateful=False):
     """Aggregation (Eq. 2 / mixing) + Eq. 4 metric + per-participant opt
     reset; ``agg_weights`` is the aggregator's traced mixing matrix.
 
@@ -389,8 +477,30 @@ def _make_finalize(opt, aggregate_fn, live=False):
     from the first LIVE row (the mixing matrix gives every live row the
     same mixed model for averaging schemes; gossip rows differ but the
     shared-model reference is by convention the first live row).
+
+    ``stateful=True`` (error-feedback codec): the residual enters right
+    after ``opt_state`` (right after ``params`` on the opt-free static
+    variant, since the paper discards the local opt state there), the
+    aggregate is ``aggregate_fn(params, agg_weights, residual) -> (mixed,
+    new_residual)``, dead rows additionally FREEZE their residual memory
+    (they never quantized an upload), and the new residual is appended to
+    the outputs.
     """
     if live:
+        if stateful:
+            def finalize_live_ef(params, opt_state, residual, old_avg,
+                                 live_row, agg_weights=None):
+                averaged, new_res = aggregate_fn(params, agg_weights,
+                                                 residual)
+                new_avg = unstack_first_live(averaged, live_row)
+                rel = relative_change_traced(new_avg, old_avg)
+                fresh_opt = jax.vmap(opt.init)(averaged)
+                averaged = select_live(live_row, averaged, params)
+                fresh_opt = select_live(live_row, fresh_opt, opt_state)
+                new_res = select_live(live_row, new_res, residual)
+                return averaged, fresh_opt, rel, new_avg, new_res
+            return finalize_live_ef
+
         def finalize_live(params, opt_state, old_avg, live_row,
                           agg_weights=None):
             averaged = aggregate_fn(params, agg_weights)
@@ -401,6 +511,15 @@ def _make_finalize(opt, aggregate_fn, live=False):
             fresh_opt = select_live(live_row, fresh_opt, opt_state)
             return averaged, fresh_opt, rel, new_avg
         return finalize_live
+
+    if stateful:
+        def finalize_ef(params, residual, old_avg, agg_weights=None):
+            averaged, new_res = aggregate_fn(params, agg_weights, residual)
+            new_avg = averaging.unstack_participant(averaged, 0)
+            rel = relative_change_traced(new_avg, old_avg)
+            fresh_opt = jax.vmap(opt.init)(averaged)
+            return averaged, fresh_opt, rel, new_avg, new_res
+        return finalize_ef
 
     def finalize(params, old_avg, agg_weights=None):
         averaged = aggregate_fn(params, agg_weights)
@@ -417,7 +536,8 @@ def _default_gate(div, delta):
     return div > delta
 
 
-def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False):
+def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False,
+                         stateful=False):
     """Divergence-gated aggregation: compute the Kamp divergence of the
     locals from the last synced model, then branch — on-device, via a
     ``lax.cond`` on the traced ``do_sync`` from ``gate_fn(div, delta)``
@@ -432,11 +552,46 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False):
     ``live=True`` (elastic membership): gfinalize takes the traced
     ``live_row`` after ``delta``; the divergence is measured over live
     rows only, and in the sync branch dead rows keep their own params/opt
-    (identity carry) while ``new_avg`` comes from the first LIVE row."""
+    (identity carry) while ``new_avg`` comes from the first LIVE row.
+
+    ``stateful=True`` (error-feedback codec): gfinalize takes the residual
+    right after ``opt_state``, the aggregate is ``aggregate_fn(params,
+    agg_weights, residual) -> (mixed, new_residual)``, a quiet round
+    carries the residual UNCHANGED through the skip branch (nothing was
+    quantized, so no error accrues), dead rows freeze theirs, and the new
+    residual is appended LAST to the outputs."""
     if gate_fn is None:
         gate_fn = _default_gate
 
     if live:
+        if stateful:
+            def gfinalize_live_ef(params, opt_state, residual, sync_ref,
+                                  delta, live_row, agg_weights=None):
+                div = divergence_traced(params, sync_ref, live_row)
+                do_sync = gate_fn(div, delta)
+
+                def sync_branch(operands):
+                    params, opt_state, residual = operands
+                    averaged, new_res = aggregate_fn(params, agg_weights,
+                                                     residual)
+                    new_avg = unstack_first_live(averaged, live_row)
+                    rel = relative_change_traced(new_avg, sync_ref)
+                    fresh_opt = jax.vmap(opt.init)(averaged)
+                    averaged = select_live(live_row, averaged, params)
+                    fresh_opt = select_live(live_row, fresh_opt, opt_state)
+                    new_res = select_live(live_row, new_res, residual)
+                    return averaged, fresh_opt, rel, new_avg, new_res
+
+                def skip_branch(operands):
+                    params, opt_state, residual = operands
+                    return params, opt_state, div, sync_ref, residual
+
+                out_p, out_o, rel, new_ref, out_res = jax.lax.cond(
+                    do_sync, sync_branch, skip_branch,
+                    (params, opt_state, residual))
+                return out_p, out_o, rel, div, do_sync, new_ref, out_res
+            return gfinalize_live_ef
+
         def gfinalize_live(params, opt_state, sync_ref, delta, live_row,
                            agg_weights=None):
             div = divergence_traced(params, sync_ref, live_row)
@@ -461,6 +616,31 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False):
             return out_p, out_o, rel, div, do_sync, new_ref
         return gfinalize_live
 
+    if stateful:
+        def gfinalize_ef(params, opt_state, residual, sync_ref, delta,
+                         agg_weights=None):
+            div = divergence_traced(params, sync_ref)
+            do_sync = gate_fn(div, delta)
+
+            def sync_branch(operands):
+                params, opt_state, residual = operands
+                averaged, new_res = aggregate_fn(params, agg_weights,
+                                                 residual)
+                new_avg = averaging.unstack_participant(averaged, 0)
+                rel = relative_change_traced(new_avg, sync_ref)
+                fresh_opt = jax.vmap(opt.init)(averaged)
+                return averaged, fresh_opt, rel, new_avg, new_res
+
+            def skip_branch(operands):
+                params, opt_state, residual = operands
+                return params, opt_state, div, sync_ref, residual
+
+            out_p, out_o, rel, new_ref, out_res = jax.lax.cond(
+                do_sync, sync_branch, skip_branch,
+                (params, opt_state, residual))
+            return out_p, out_o, rel, div, do_sync, new_ref, out_res
+        return gfinalize_ef
+
     def gfinalize(params, opt_state, sync_ref, delta, agg_weights=None):
         div = divergence_traced(params, sync_ref)
         do_sync = gate_fn(div, delta)
@@ -483,32 +663,41 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False):
     return gfinalize
 
 
-def _bind_mask_live(body, masked, live):
-    """Adapt a ``body(params, opt, batches, mask, live_row, *rest)`` to the
-    public signature for the (masked, live) combination: enabled features
+def _bind_mask_live(body, masked, live, stateful=False):
+    """Adapt a ``body(params, opt, residual, batches, mask, live_row,
+    *rest)`` to the public signature for the (masked, live, stateful)
+    combination: the codec residual appears right after ``opt_state`` when
+    ``stateful`` (bound to None otherwise), and enabled mask/live features
     appear as positional args right after ``batches`` (mask first, then
     live_row); disabled ones are bound to None."""
     if masked and live:
-        return body
-    if masked:
-        def fn(stacked_params, opt_state, batches, mask, *rest, **kw):
-            return body(stacked_params, opt_state, batches, mask, None,
-                        *rest, **kw)
+        bound = body
+    elif masked:
+        def bound(stacked_params, opt_state, residual, batches, mask,
+                  *rest, **kw):
+            return body(stacked_params, opt_state, residual, batches, mask,
+                        None, *rest, **kw)
     elif live:
-        def fn(stacked_params, opt_state, batches, live_row, *rest, **kw):
-            return body(stacked_params, opt_state, batches, None, live_row,
-                        *rest, **kw)
+        def bound(stacked_params, opt_state, residual, batches, live_row,
+                  *rest, **kw):
+            return body(stacked_params, opt_state, residual, batches, None,
+                        live_row, *rest, **kw)
     else:
-        def fn(stacked_params, opt_state, batches, *rest, **kw):
-            return body(stacked_params, opt_state, batches, None, None,
-                        *rest, **kw)
+        def bound(stacked_params, opt_state, residual, batches, *rest, **kw):
+            return body(stacked_params, opt_state, residual, batches, None,
+                        None, *rest, **kw)
+    if stateful:
+        return bound
+
+    def fn(stacked_params, opt_state, batches, *rest, **kw):
+        return bound(stacked_params, opt_state, None, batches, *rest, **kw)
     return fn
 
 
 def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
                      spmd_axis_name=None, average_fn=None, aggregate_fn=None,
                      gated=False, gate_fn=None, masked=False, live=False,
-                     donate=True):
+                     stateful=False, donate=True):
     """Build the single-executable round: epoch scan + aggregation + Eq. 4.
 
     loss_fn(params, batch) -> (loss, aux) for ONE participant.
@@ -552,6 +741,13 @@ def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
     the entry/exit shared model is read from the first LIVE row, and in
     the gated variant the divergence is live-masked. Membership changes
     are traced data: crash/rejoin/flaky rounds never recompile.
+
+    ``stateful=True`` (error-feedback codec): round_fn takes the traced
+    per-participant residual pytree right after ``opt_state`` —
+    ``aggregate_fn`` must be the 3-arg stateful form ``(stacked, weights,
+    residual) -> (mixed, new_residual)`` — the residual is donated with
+    params/opt, and aux grows ``{"residual": new_residual}``. Dead rows
+    freeze their residual; a gated quiet round carries it unchanged.
     """
     if lr_fn is None:
         lr_fn = switch_lr
@@ -561,30 +757,38 @@ def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
     agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
 
     if gated:
-        gfinalize = _make_gated_finalize(opt, agg, gate_fn, live=live)
+        gfinalize = _make_gated_finalize(opt, agg, gate_fn, live=live,
+                                         stateful=stateful)
 
-        def round_body(stacked_params, opt_state, batches, mask, live_row,
-                       global_epoch0, sched, total, sync_ref, delta,
-                       agg_weights=None):
+        def round_body(stacked_params, opt_state, residual, batches, mask,
+                       live_row, global_epoch0, sched, total, sync_ref,
+                       delta, agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
                 sched, total, mask, live_row)
+            res_in = (residual,) if stateful else ()
             if live:
-                out = gfinalize(params, opt_out, sync_ref, delta, live_row,
-                                agg_weights)
+                out = gfinalize(params, opt_out, *res_in, sync_ref, delta,
+                                live_row, agg_weights)
             else:
-                out = gfinalize(params, opt_out, sync_ref, delta,
+                out = gfinalize(params, opt_out, *res_in, sync_ref, delta,
                                 agg_weights)
-            out_p, out_o, rel, div, do_sync, new_ref = out
-            return out_p, out_o, {"losses": losses, "lrs": lrs, "rel": rel,
-                                  "div": div, "synced": do_sync,
-                                  "new_avg": new_ref}
+            if stateful:
+                out_p, out_o, rel, div, do_sync, new_ref, out_res = out
+            else:
+                out_p, out_o, rel, div, do_sync, new_ref = out
+            aux = {"losses": losses, "lrs": lrs, "rel": rel, "div": div,
+                   "synced": do_sync, "new_avg": new_ref}
+            if stateful:
+                aux["residual"] = out_res
+            return out_p, out_o, aux
     else:
-        finalize = _make_finalize(opt, agg, live=live)
+        finalize = _make_finalize(opt, agg, live=live, stateful=stateful)
 
-        def round_body(stacked_params, opt_state, batches, mask, live_row,
-                       global_epoch0, sched, total, agg_weights=None):
+        def round_body(stacked_params, opt_state, residual, batches, mask,
+                       live_row, global_epoch0, sched, total,
+                       agg_weights=None):
             T_i = jax.tree.leaves(batches)[0].shape[0]
             if live:
                 # round entry: every LIVE slot holds the shared model
@@ -597,19 +801,26 @@ def make_fused_round(loss_fn, opt, *, lr_fn=None, compress_fn=None,
             (params, opt_out), (losses, lrs) = scan_epochs(
                 stacked_params, opt_state, batches, 0, T_i, global_epoch0,
                 sched, total, mask, live_row)
+            res_in = (residual,) if stateful else ()
             if live:
                 # dead rows carry their opt state through the round
-                averaged, fresh_opt, rel, new_avg = finalize(
-                    params, opt_out, old_avg, live_row, agg_weights)
+                out = finalize(params, opt_out, *res_in, old_avg, live_row,
+                               agg_weights)
             else:
                 del opt_out  # paper: local opt state is discarded at agg
-                averaged, fresh_opt, rel, new_avg = finalize(
-                    params, old_avg, agg_weights)
-            return averaged, fresh_opt, {"losses": losses, "lrs": lrs,
-                                         "rel": rel, "new_avg": new_avg}
+                out = finalize(params, *res_in, old_avg, agg_weights)
+            if stateful:
+                averaged, fresh_opt, rel, new_avg, new_res = out
+            else:
+                averaged, fresh_opt, rel, new_avg = out
+            aux = {"losses": losses, "lrs": lrs, "rel": rel,
+                   "new_avg": new_avg}
+            if stateful:
+                aux["residual"] = new_res
+            return averaged, fresh_opt, aux
 
-    round_fn = _bind_mask_live(round_body, masked, live)
-    donate_argnums = (0, 1) if donate else ()
+    round_fn = _bind_mask_live(round_body, masked, live, stateful=stateful)
+    donate_argnums = ((0, 1, 2) if stateful else (0, 1)) if donate else ()
     return jax.jit(round_fn, donate_argnums=donate_argnums)
 
 
@@ -634,8 +845,10 @@ def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
         make_epoch_fn(loss_fn, opt, spmd_axis_name, masked=masked,
                       live=live), lr_fn, masked=masked, live=live)
 
-    def epochs_body(stacked_params, opt_state, batches, mask, live_row, j0,
-                    T_i, global_epoch0, sched, total):
+    def epochs_body(stacked_params, opt_state, _residual, batches, mask,
+                    live_row, j0, T_i, global_epoch0, sched, total):
+        # epochs never touch the codec residual (it only moves at the
+        # finalize); _bind_mask_live binds it to None here
         (params, ostate), (losses, lrs) = scan_epochs(
             stacked_params, opt_state, batches, j0, T_i, global_epoch0,
             sched, total, mask, live_row)
@@ -648,7 +861,7 @@ def make_fused_epochs(loss_fn, opt, *, lr_fn=None, spmd_axis_name=None,
 
 def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
                         aggregate_fn=None, gated=False, gate_fn=None,
-                        live=False, donate=True):
+                        live=False, stateful=False, donate=True):
     """End-of-round executable for the chunked path: aggregation + Eq. 4 +
     opt reset. finalize_fn(params, old_avg, agg_weights=None) ->
     (aggregated, fresh_opt, rel, new_avg); ``params`` is donated. The
@@ -665,13 +878,25 @@ def make_fused_finalize(opt, *, compress_fn=None, average_fn=None,
     — opt_state rides along so dead rows keep theirs — and the gated one
     takes the traced ``live_row`` after ``delta``; dead rows are identity
     carries and ``new_avg``/divergence follow the live set (see
-    ``make_fused_round``)."""
+    ``make_fused_round``).
+
+    ``stateful=True`` (error-feedback codec): the residual enters right
+    after ``opt_state`` (right after ``params`` on the opt-free ungated
+    static variant), is donated with it, ``aggregate_fn`` must be the
+    3-arg stateful form, and the new residual is appended LAST to the
+    returned tuple (see ``_make_finalize`` / ``_make_gated_finalize``)."""
     agg = as_aggregate_fn(aggregate_fn, compress_fn, average_fn)
     if gated:
-        return jax.jit(_make_gated_finalize(opt, agg, gate_fn, live=live),
-                       donate_argnums=(0, 1) if donate else ())
+        return jax.jit(
+            _make_gated_finalize(opt, agg, gate_fn, live=live,
+                                 stateful=stateful),
+            donate_argnums=((0, 1, 2) if stateful else (0, 1))
+            if donate else ())
     if live:
-        return jax.jit(_make_finalize(opt, agg, live=True),
-                       donate_argnums=(0, 1) if donate else ())
-    return jax.jit(_make_finalize(opt, agg),
-                   donate_argnums=(0,) if donate else ())
+        return jax.jit(
+            _make_finalize(opt, agg, live=True, stateful=stateful),
+            donate_argnums=((0, 1, 2) if stateful else (0, 1))
+            if donate else ())
+    return jax.jit(
+        _make_finalize(opt, agg, stateful=stateful),
+        donate_argnums=((0, 1) if stateful else (0,)) if donate else ())

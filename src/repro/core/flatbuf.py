@@ -148,7 +148,15 @@ def unflatten_mean(mean, layout: FlatLayout):
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
-def wire_bytes(layout: FlatLayout) -> int:
+def wire_bytes(layout: FlatLayout, bits: int = 8,
+               scale_bytes: int = 4) -> int:
     """Exact bytes one participant puts on the wire for this layout:
-    int8 payload for every (padded) element + one f32 scale per block row."""
-    return layout.n_pad + 4 * (layout.n_pad // layout.block)
+    the packed ``bits``-wide payload for every (padded) element + one
+    ``scale_bytes``-wide scale per block row. ``n_pad`` is a whole number
+    of ``rows x block`` tiles, so the packed payload is always a whole
+    number of bytes (``kernels.quantize.pack_codes`` packs per block row).
+    """
+    from repro.kernels.quantize import check_bits
+    check_bits(bits)
+    return (layout.n_pad * bits) // 8 + scale_bytes * (
+        layout.n_pad // layout.block)

@@ -53,24 +53,36 @@ def mlstm(q, k, v, ig, fg, *, impl="pallas", **kw):
     return h, None
 
 
-def quantize_blockwise(x, *, block=256, impl="pallas", **kw):
+def quantize_blockwise(x, *, block=256, bits=8, impl="pallas", **kw):
     if impl == "ref":
-        return _ref.quantize_blockwise_ref(x, block=block)
-    return _qz.quantize_blockwise_fwd(x, block=block,
+        return _ref.quantize_blockwise_ref(x, block=block, bits=bits)
+    return _qz.quantize_blockwise_fwd(x, block=block, bits=bits,
                                       interpret=_interp(impl), **kw)
 
 
-def dequantize_blockwise(q, scale, shape, *, impl="pallas", **kw):
+def dequantize_blockwise(q, scale, shape, *, bits=8, impl="pallas", **kw):
     if impl == "ref":
-        return _ref.dequantize_blockwise_ref(q, scale, shape)
-    return _qz.dequantize_blockwise_fwd(q, scale, shape,
+        return _ref.dequantize_blockwise_ref(q, scale, shape, bits=bits)
+    return _qz.dequantize_blockwise_fwd(q, scale, shape, bits=bits,
                                         interpret=_interp(impl), **kw)
 
 
-def quant_avg_dequant(buf, *, block=256, impl="pallas", **kw):
-    """Fused Eq. 2 wire pass over a (K, n) flat buffer: int8-quantize every
-    participant row blockwise, dequantize, mean -> (n,) f32."""
+def quant_avg_dequant(buf, *, block=256, bits=8, impl="pallas", **kw):
+    """Fused Eq. 2 wire pass over a (K, n) flat buffer: quantize every
+    participant row blockwise at ``bits``, dequantize, mean -> (n,) f32."""
     if impl == "ref":
-        return _ref.quant_avg_dequant_ref(buf, block=block)
-    return _comm.quant_avg_dequant_fwd(buf, block=block,
+        return _ref.quant_avg_dequant_ref(buf, block=block, bits=bits)
+    return _comm.quant_avg_dequant_fwd(buf, block=block, bits=bits,
                                        interpret=_interp(impl), **kw)
+
+
+def quant_avg_dequant_ef(buf, residual, *, block=256, bits=8, impl="pallas",
+                         **kw):
+    """Error-feedback fused Eq. 2 wire pass: quantize ``buf + residual``
+    per participant row, return ((n,) mean, (K, n) new residual)."""
+    if impl == "ref":
+        return _ref.quant_avg_dequant_ef_ref(buf, residual, block=block,
+                                             bits=bits)
+    return _comm.quant_avg_dequant_ef_fwd(buf, residual, block=block,
+                                          bits=bits, interpret=_interp(impl),
+                                          **kw)

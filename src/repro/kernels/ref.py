@@ -43,20 +43,40 @@ def mlstm_ref(q, k, v, ig, fg, state=None):
     return _impl(q, k, v, ig, fg, state)
 
 
-def quantize_blockwise_ref(x, block=256):
-    """x: any shape -> (q int8 (nblocks, block), scale f32 (nblocks,), shape)."""
+def _code_blocks_ref(blocks, bits):
+    """(nb, block) f32 -> (codes int8, scale (nb,)) for bits in {8, 4, 1}."""
+    from repro.kernels.quantize import QMAX
+    if bits == 1:
+        scale = jnp.mean(jnp.abs(blocks), axis=1)
+        q = jnp.where(blocks > 0, 1, -1).astype(jnp.int8)
+    else:
+        qmax = QMAX[bits]
+        amax = jnp.max(jnp.abs(blocks), axis=1)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        q = jnp.clip(jnp.round(blocks / scale[:, None]),
+                     -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_blockwise_ref(x, block=256, bits=8):
+    """x: any shape -> (q packed (nblocks, block*bits//8), scale f32
+    (nblocks,), shape). Packing shared with the Pallas path — identical
+    wire payload bytes (modulo the kernel's extra ROWS row padding)."""
+    from repro.kernels.quantize import check_bits, pack_codes
+    check_bits(bits)
     flat = x.astype(jnp.float32).reshape(-1)
     n = flat.shape[0]
     pad = (-n) % block
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, block)
-    amax = jnp.max(jnp.abs(blocks), axis=1)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
-    return q, scale, x.shape
+    q, scale = _code_blocks_ref(blocks, bits)
+    return pack_codes(q, bits), scale, x.shape
 
 
-def dequantize_blockwise_ref(q, scale, shape):
+def dequantize_blockwise_ref(q, scale, shape, bits=8):
+    from repro.kernels.quantize import check_bits, unpack_codes
+    check_bits(bits)
+    q = unpack_codes(q, bits)
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
     n = 1
     for s in shape:
@@ -64,14 +84,41 @@ def dequantize_blockwise_ref(q, scale, shape):
     return flat[:n].reshape(shape)
 
 
-def quant_avg_dequant_ref(buf, block=256):
-    """buf: (K, n) f32 -> (n,) f32 — int8-roundtrip every participant row
-    blockwise (absmax scale per (participant, block)), then Eq. 2 mean."""
+def _roundtrip_rows_ref(xb, bits):
+    """(K, nb, block) f32 -> dequantized wire roundtrip, same shape."""
+    from repro.kernels.quantize import QMAX
+    if bits == 1:
+        scale = jnp.mean(jnp.abs(xb), axis=2, keepdims=True)
+        q = jnp.where(xb > 0, 1, -1).astype(jnp.int8)
+    else:
+        qmax = QMAX[bits]
+        amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+        scale = jnp.where(amax > 0, amax / qmax, 1.0)
+        q = jnp.clip(jnp.round(xb / scale), -qmax, qmax).astype(jnp.int8)
+    return q.astype(jnp.int32).astype(jnp.float32) * scale
+
+
+def quant_avg_dequant_ref(buf, block=256, bits=8):
+    """buf: (K, n) f32 -> (n,) f32 — wire-roundtrip every participant row
+    blockwise (one scale per (participant, block)), then Eq. 2 mean."""
+    from repro.kernels.quantize import check_bits
+    check_bits(bits)
     K, n = buf.shape
     pad = (-n) % block
     xb = jnp.pad(buf, ((0, 0), (0, pad))).reshape(K, -1, block)
-    amax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
-    dq = q.astype(jnp.int32).astype(jnp.float32) * scale
+    dq = _roundtrip_rows_ref(xb, bits)
     return (jnp.sum(dq, axis=0) / K).reshape(-1)[:n]
+
+
+def quant_avg_dequant_ef_ref(buf, residual, block=256, bits=8):
+    """Error-feedback oracle: quantize ``buf + residual`` per row, return
+    (Eq. 2 mean of the dequantized rows (n,), new residual (K, n))."""
+    from repro.kernels.quantize import check_bits
+    check_bits(bits)
+    K, n = buf.shape
+    pad = (-n) % block
+    yb = jnp.pad(buf + residual, ((0, 0), (0, pad))).reshape(K, -1, block)
+    dq = _roundtrip_rows_ref(yb, bits)
+    mean = (jnp.sum(dq, axis=0) / K).reshape(-1)[:n]
+    new_res = (yb - dq).reshape(K, -1)[:, :n]
+    return mean, new_res

@@ -139,7 +139,8 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
                           schedule=None, round_index=0,
                           expose_schedule_args=False, masked=False,
                           live=False, compress=None, compress_block=256,
-                          compress_impl="ref"):
+                          compress_impl="ref", codec_bits=8,
+                          error_feedback=False):
     """Pod-path fused round: the whole communication round as one program.
 
     Shares ``repro.core.engine`` with the simulation path, but pins the
@@ -193,6 +194,14 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     live set (``Membership.live_mask()`` feeds both the row and
     ``aggregator.mixing_matrix(..., live=...)``). Membership changes ride
     in as data — the compiled executable is reused across churn.
+
+    ``codec_bits``/``error_feedback`` parameterize the quantizing codecs
+    (registry-name or legacy ``compress=`` spellings): payload bit width
+    in {8, 4, 1} and error-feedback residual memory. An error-feedback
+    codec is STATEFUL — the returned round_fn then takes the (K,)-leading
+    residual pytree right after ``opt_state`` (``codec.init_state`` builds
+    the zero residual; the pod paths keep each pod's residual resident on
+    that pod) and its aux dict grows ``{"residual": new_residual}``.
     """
     from repro.core import api, engine as engine_mod
     from repro.optim.optimizers import get_optimizer as _get_opt
@@ -207,7 +216,9 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
         if compress not in ("leafwise", "fused"):
             raise ValueError(f"unknown compress {compress!r}")
         codec = compress
-    codec = api.get_codec(codec, block=compress_block, impl=compress_impl)
+    codec = api.get_codec(codec, block=compress_block, impl=compress_impl,
+                          bits=codec_bits, error_feedback=error_feedback)
+    stateful = getattr(codec, "stateful", False)
     aggregator = api.get_aggregator(aggregator)
     schedule = api.get_schedule(schedule, ccfg)
     aggregate_fn = aggregator.make_aggregate_fn(
@@ -216,33 +227,35 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     fused = engine_mod.make_fused_round(
         loss_fn, _get_opt(optimizer), lr_fn=api.traced_body(schedule),
         spmd_axis_name="pod", aggregate_fn=aggregate_fn, masked=masked,
-        live=live, donate=False)
+        live=live, stateful=stateful, donate=False)
 
     # the engine's vmap consumes the pod axis; in-model "dp" hints must
     # then resolve to data only (same contract as the colearn step)
     if expose_schedule_args:
-        def round_fn(stacked_params, opt_state, batches, *rest):
-            """round_fn(params, opt, batches[, batch_mask][, live_row],
-            ge0, sched, total_epochs[, agg_weights]) — the bracketed args
-            appear per the step's masked=/live= flags and the aggregator's
-            uses_weights."""
+        def round_fn(stacked_params, opt_state, *rest):
+            """round_fn(params, opt[, residual], batches[, batch_mask]
+            [, live_row], ge0, sched, total_epochs[, agg_weights]) — the
+            bracketed args appear per the step's error_feedback=/masked=/
+            live= flags and the aggregator's uses_weights."""
             with batch_axes(("data",)):
-                return fused(stacked_params, opt_state, batches, *rest)
+                return fused(stacked_params, opt_state, *rest)
         return round_fn
 
     sched = schedule.device_round_params(round_index)
     total = jnp.int32(max(ccfg.T0 * ccfg.max_rounds, 1))
-    # (batch_mask?, live_row?, ge0) lead the varargs; agg_weights trails.
-    # The baked sched/total pair splices in between — one wrapper covers
-    # every masked × live × uses_weights combination.
-    n_lead = 1 + int(masked) + int(live)
+    # (residual?, batches, batch_mask?, live_row?, ge0) lead the varargs;
+    # agg_weights trails. The baked sched/total pair splices in between —
+    # one wrapper covers every stateful × masked × live × uses_weights
+    # combination.
+    n_lead = 2 + int(stateful) + int(masked) + int(live)
 
-    def round_fn(stacked_params, opt_state, batches, *rest):
-        """round_fn(params, opt, batches[, batch_mask][, live_row], ge0
-        [, agg_weights]) — bracketed args per masked=/live=/uses_weights."""
+    def round_fn(stacked_params, opt_state, *rest):
+        """round_fn(params, opt[, residual], batches[, batch_mask]
+        [, live_row], ge0[, agg_weights]) — bracketed args per
+        error_feedback=/masked=/live=/uses_weights."""
         lead, tail = rest[:n_lead], rest[n_lead:]
         with batch_axes(("data",)):
-            return fused(stacked_params, opt_state, batches,
+            return fused(stacked_params, opt_state,
                          *lead, sched, total, *tail)
     return round_fn
 

@@ -153,6 +153,15 @@ def main(argv=None):
                     help="wire codec for uploads: exact f32 | leafwise "
                          "int8 quantize-roundtrip | fused flat-buffer "
                          "(one quant->avg->dequant kernel pass)")
+    ap.add_argument("--codec-bits", type=int, default=8, choices=[8, 4, 1],
+                    help="wire payload bit width for the quantizing codecs "
+                         "(leafwise/fused): 8 = int8, 4 = packed int4, "
+                         "1 = sign + per-block scale")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="error-feedback residual memory for the quantizing "
+                         "codecs: each participant quantizes x + e and "
+                         "carries e' = (x + e) - dequant to the next round "
+                         "(recommended at 4/1 bits)")
     ap.add_argument("--aggregator", default="full",
                     choices=["full", "partial", "ring"],
                     help="aggregation strategy: full = paper Eq. 2; "
@@ -192,9 +201,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.codec and args.compress != "none":
         ap.error("pass --codec or the legacy --compress, not both")
+    codec_spec = args.codec or args.compress
+    if (args.codec_bits != 8 or args.error_feedback) and codec_spec in (
+            "", "none", "exact"):
+        ap.error("--codec-bits/--error-feedback require a quantizing codec "
+                 "(--codec leafwise|fused or --compress int8|fused)")
     # the legacy --compress spellings ("none"/"int8"/"fused") are registry
     # aliases in api.CODECS, so both flags resolve through the one registry
-    codec = api.get_codec(args.codec or args.compress)
+    codec = api.get_codec(codec_spec, bits=args.codec_bits,
+                          error_feedback=args.error_feedback)
 
     # partial participation samples from the participant pool — a sample
     # size beyond the pool is a config bug, caught here instead of rounds

@@ -90,7 +90,8 @@ def test_wire_bytes_exact_no_leaf_escapes():
     wb = flatbuf.wire_bytes(lo)
     assert wb == lo.n_pad + 4 * (lo.n_pad // lo.block)
     assert flat_compressed_bytes(tree) == wb
-    # leafwise accounting now reports the bypassed leaves at raw rates
+    # leafwise accounting reports bypassed leaves at raw rates and bills
+    # quantized leaves as whole padded blocks (packed payload + f32 scale)
     one = jax.tree.map(lambda t: t[0], tree)
     lb = compressed_bytes(one)
     expect = 0
@@ -98,8 +99,14 @@ def test_wire_bytes_exact_no_leaf_escapes():
         if t.ndim == 0 or t.size < 256:
             expect += t.size * t.dtype.itemsize
         else:
-            expect += t.size + 4 * (-(-t.size // 256))
+            expect += (-(-t.size // 256)) * (256 + 4)
     assert lb == expect
+    # sub-int8 payloads: bytes shrink with the bit width, scales don't
+    for bits in (4, 1):
+        wb_n = flatbuf.wire_bytes(lo, bits=bits)
+        assert wb_n == (lo.n_pad * bits) // 8 + 4 * (lo.n_pad // lo.block)
+        assert flat_compressed_bytes(tree, bits=bits) == wb_n
+        assert wb_n < wb
 
 
 def test_fused_average_within_quant_bound_and_broadcast():

@@ -190,3 +190,122 @@ def test_quant_avg_dequant_is_quantized_mean():
     exact = np.asarray(buf.mean(0))
     bound = np.abs(np.asarray(buf)).max() / 127.0 + 1e-6
     assert np.abs(np.asarray(got) - exact).max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# sub-int8 bit widths (packed int4, 1-bit sign) + error feedback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits,qmax", [(8, 127.0), (4, 7.0)])
+@pytest.mark.parametrize("shape", [(1000, 37), (256,), (3 * 256 + 100,)])
+def test_quantize_bits_roundtrip_bound(bits, qmax, shape):
+    x = jax.random.normal(KEY, shape) * 5
+    q_p, s_p, shp = ops.quantize_blockwise(x, bits=bits, impl="interpret")
+    q_r, s_r, _ = ref.quantize_blockwise_ref(x, bits=bits)
+    dq = np.abs(np.asarray(q_p[:q_r.shape[0]], np.int32)
+                - np.asarray(q_r, np.int32))
+    assert dq.max() <= 1 and (dq > 0).mean() < 1e-3
+    x_back = ops.dequantize_blockwise(q_p, s_p, shp, bits=bits,
+                                      impl="interpret")
+    assert x_back.shape == shape
+    scale = float(jnp.abs(x).max())
+    err = float(jnp.abs(x - x_back).max())
+    assert err <= scale / qmax + 1e-6
+
+
+@pytest.mark.parametrize("shape", [(256,), (1000, 37)])
+def test_quantize_1bit_semantics(shape):
+    """1-bit codes are the sign; the per-block scale is mean(|x|)."""
+    from repro.kernels.quantize import DEFAULT_BLOCK, unpack_codes
+    x = jax.random.normal(KEY, shape) * 3
+    q, s, shp = ref.quantize_blockwise_ref(x, bits=1)
+    assert q.shape[-1] == DEFAULT_BLOCK // 8     # packed wire payload
+    flat = np.asarray(x).reshape(-1)
+    pad = -len(flat) % DEFAULT_BLOCK
+    flat = np.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, DEFAULT_BLOCK)
+    np.testing.assert_array_equal(np.asarray(unpack_codes(q, 1), np.int32),
+                                  np.where(blocks > 0, 1, -1))
+    np.testing.assert_allclose(np.asarray(s),
+                               np.abs(blocks).mean(axis=1), rtol=1e-6)
+    back = ref.dequantize_blockwise_ref(q, s, shp, bits=1)
+    assert back.shape == shape
+    # sign * mean|x| keeps every element within 2*mean|x| of the input
+    err = np.abs(np.asarray(back) - np.asarray(x).reshape(back.shape))
+    assert err.max() <= 2 * np.abs(np.asarray(x)).max()
+
+
+@pytest.mark.parametrize("bits", [8, 4, 1])
+def test_pack_unpack_codes_roundtrip(bits):
+    from repro.kernels.quantize import pack_codes, unpack_codes
+    lo, hi = (-1, 2) if bits == 1 else (-(2 ** (bits - 1) - 1),
+                                        2 ** (bits - 1))
+    q = jax.random.randint(KEY, (6, 256), lo, hi, jnp.int32)
+    if bits == 1:
+        q = jnp.where(q >= 0, 1, -1)       # valid 1-bit codes are +-1
+    q = q.astype(jnp.int8)
+    p = pack_codes(q, bits)
+    assert p.dtype == jnp.int8 if bits == 8 else p.dtype == jnp.uint8
+    assert p.shape[-1] == 256 * bits // 8
+    back = unpack_codes(p, bits)
+    np.testing.assert_array_equal(np.asarray(back, np.int32),
+                                  np.asarray(q, np.int32))
+    if bits == 8:
+        assert p is q                      # identity, not a copy
+
+
+@pytest.mark.parametrize("bits", [8, 4, 1])
+@pytest.mark.parametrize("K,n", [(3, 16 * 256), (5, 8 * 256 + 300)])
+def test_quant_avg_dequant_bits_matches_ref(bits, K, n):
+    buf = jax.random.normal(KEY, (K, n)) * 3
+    m_ref = ref.quant_avg_dequant_ref(buf, bits=bits)
+    m_pal = ops.quant_avg_dequant(buf, bits=bits, impl="interpret")
+    assert m_pal.shape == (n,)
+    np.testing.assert_allclose(np.asarray(m_pal), np.asarray(m_ref),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 1])
+def test_quant_avg_dequant_ef_oracle_and_kernel(bits):
+    """EF fused pass: mean == plain pass on (buf + residual); new residual
+    is exactly (buf + residual) - per-row dequant. Kernel == oracle."""
+    K, n = 3, 8 * 256 + 300
+    k1, k2 = jax.random.split(KEY)
+    buf = jax.random.normal(k1, (K, n)) * 2
+    res = jax.random.normal(k2, (K, n)) * 0.1
+    m_ref, e_ref = ref.quant_avg_dequant_ef_ref(buf, res, bits=bits)
+    m_pal, e_pal = ops.quant_avg_dequant_ef(buf, res, bits=bits,
+                                            impl="interpret")
+    np.testing.assert_allclose(np.asarray(m_pal), np.asarray(m_ref),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(e_pal), np.asarray(e_ref),
+                               rtol=2e-6, atol=2e-6)
+    # the mean is the plain fused pass over the compensated buffer
+    m_plain = ref.quant_avg_dequant_ref(buf + res, bits=bits)
+    np.testing.assert_allclose(np.asarray(m_ref), np.asarray(m_plain),
+                               rtol=1e-6, atol=1e-6)
+    # residual identity: y - dequant(quant(y)) row by row
+    for k in range(K):
+        q, s, shp = ref.quantize_blockwise_ref(buf[k] + res[k], bits=bits)
+        dq = ref.dequantize_blockwise_ref(q, s, shp, bits=bits)
+        np.testing.assert_allclose(np.asarray(e_ref[k]),
+                                   np.asarray(buf[k] + res[k] - dq),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 1])
+def test_quant_avg_dequant_ef_zero_residual_is_plain(bits):
+    K, n = 4, 8 * 256
+    buf = jax.random.normal(KEY, (K, n)) * 2
+    m_plain = ref.quant_avg_dequant_ref(buf, bits=bits)
+    m_ef, e = ref.quant_avg_dequant_ef_ref(buf, jnp.zeros_like(buf),
+                                           bits=bits)
+    np.testing.assert_array_equal(np.asarray(m_ef), np.asarray(m_plain))
+    # the residual is bounded by the quantization step of each block
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_check_bits_rejects_unknown_widths():
+    from repro.kernels.quantize import check_bits
+    for bad in (2, 3, 16, 0):
+        with pytest.raises(ValueError):
+            check_bits(bad)

@@ -154,3 +154,63 @@ def test_softmax_xent_ignores_masked_positions(B, S, seed):
     logits2 = logits.at[:, 0].add(100.0)
     l2 = softmax_xent(logits2, labels)
     np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+# odd/block-unaligned per-participant leaf shapes for the wire-bytes law
+_WIRE_SHAPES = ((1,), (5,), (256,), (300,), (2, 256), (7, 131), (1000, 3))
+
+
+def _encoded_payload_bytes(codec, stacked, K):
+    """Measure the ACTUAL per-participant bytes of ``codec.encode``."""
+    from repro.core.api import ExactF32, FlatFusedIntN, LeafwiseIntN
+    if isinstance(codec, FlatFusedIntN):
+        _, q, scale, _ = codec.encode(stacked)
+        return (q.nbytes + scale.nbytes) // K
+    if isinstance(codec, LeafwiseIntN):
+        # leafwise uploads are per participant — encode a K=1 stack
+        one = jax.tree.map(lambda t: t[:1], stacked)
+        _, enc = codec.encode(one)
+        total = 0
+        for kind, payload, _ in enc:
+            if kind == "raw":
+                total += payload.nbytes
+            else:
+                q, scale, _ = payload
+                total += q.nbytes + scale.nbytes
+        return total
+    assert isinstance(codec, ExactF32)
+    return sum(t.nbytes for t in jax.tree.leaves(codec.encode(stacked))) // K
+
+
+@given(st.integers(1, 4),
+       st.lists(st.integers(0, len(_WIRE_SHAPES) - 1), min_size=1,
+                max_size=5),
+       st.sampled_from(["exact", "leafwise", "fused"]),
+       st.sampled_from([8, 4, 1]),
+       st.booleans(),
+       st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_wire_bytes_equals_encoded_payload(K, shape_idx, name, bits, ef,
+                                           seed):
+    """``codec.wire_bytes(stacked)`` == the byte size of the encoded
+    payload that actually goes on the wire, for every registered codec x
+    bit width x odd/block-unaligned shapes (error feedback never changes
+    the wire). The ref impl emits exactly the canonical padded blocks the
+    accounting bills (the pallas path only adds kernel-internal ROWS
+    padding that never leaves the device)."""
+    from repro.core import api
+    rng = np.random.RandomState(seed)
+    stacked = {
+        f"leaf{i}": jnp.asarray(
+            rng.randn(K, *_WIRE_SHAPES[si]).astype(np.float32))
+        for i, si in enumerate(shape_idx)
+    }
+    codec = api.get_codec(name, bits=bits, error_feedback=ef, impl="ref")
+    billed = codec.wire_bytes(stacked)
+    actual = _encoded_payload_bytes(codec, stacked, K)
+    if isinstance(codec, api.LeafwiseIntN):
+        # the billing is per-participant by contract; the K=1 measurement
+        # can only differ on leaves whose bypass threshold flips with K —
+        # compare against the K=1 bill, which shares the measurement's view
+        billed = codec.wire_bytes(jax.tree.map(lambda t: t[:1], stacked))
+    assert billed == actual

@@ -181,6 +181,53 @@ out["masked_round_slots_equal"] = max(
     float(jnp.abs(t[0] - t[1]).max())
     for t in jax.tree.leaves(averaged_m)) < 1e-4
 
+# 4f) sub-int8 wire on the pod mesh: the bit-width-general codecs reduce
+#     bitwise to the legacy int8 classes at bits=8, and the error-feedback
+#     (stateful) paths — psum aggregate and the fused round step — run on
+#     the mesh with each pod's residual resident on that pod
+gen8 = api.FullAverage().make_aggregate_fn(
+    api.FlatFusedIntN(bits=8, impl="ref"), mesh=mesh)
+with compat.use_mesh(mesh):
+    favg_gen = jax.jit(gen8)(new_stacked)
+out["intn_bits8_pod_bit_identical"] = max(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+    for a, b in zip(jax.tree.leaves(favg_gen), jax.tree.leaves(favg))) == 0.0
+lgen8 = api.FullAverage().make_aggregate_fn(
+    api.LeafwiseIntN(bits=8, impl="ref"), mesh=mesh,
+    param_specs=pspecs_part)
+with compat.use_mesh(mesh):
+    lavg_gen = jax.jit(lgen8)(new_stacked)
+out["leafwise_bits8_pod_bit_identical"] = max(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+    for a, b in zip(jax.tree.leaves(lavg_gen), jax.tree.leaves(lavg))) == 0.0
+
+ef_codec = api.FlatFusedIntN(bits=4, error_feedback=True, impl="ref")
+res0 = ef_codec.init_state(new_stacked)
+ef_mesh = api.FullAverage().make_aggregate_fn(ef_codec, mesh=mesh)
+ef_host = api.FullAverage().make_aggregate_fn(ef_codec)
+with compat.use_mesh(mesh):
+    mixed_m, res_m = jax.jit(ef_mesh)(new_stacked, None, res0)
+mixed_h, res_h = ef_host(new_stacked, None, res0)
+out["ef_int4_pod_matches_host"] = max(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+    for a, b in zip(jax.tree.leaves(mixed_m), jax.tree.leaves(mixed_h))) < 1e-5
+out["ef_int4_pod_residual_matches_host"] = float(
+    jnp.abs(res_m - res_h).max()) < 1e-5
+out["ef_int4_pod_residual_nonzero"] = float(jnp.abs(res_m).max()) > 0.0
+
+round_fn_ef = steps_mod.make_fused_round_step(
+    cfg, ccfg, mesh=mesh, codec="fused", codec_bits=4, error_feedback=True,
+    param_specs=pspecs_part)
+with compat.use_mesh(mesh):
+    averaged_ef, _, aux_ef = round_fn_ef(stacked, (), res0, rbatch,
+                                         jnp.int32(0))
+out["ef_round_losses_finite"] = bool(jnp.isfinite(aux_ef["losses"]).all())
+out["ef_round_slots_equal"] = max(
+    float(jnp.abs(t[0] - t[1]).max())
+    for t in jax.tree.leaves(averaged_ef)) < 1e-4
+out["ef_round_residual_nonzero"] = (
+    float(jnp.abs(aux_ef["residual"]).max()) > 0.0)
+
 # 5) decode step lowers on the mesh
 cache = tr.init_cache(cfg, 8, 16, jnp.float32)
 csh = sp.named(mesh, sp.cache_specs(
@@ -249,6 +296,17 @@ def test_fused_round_on_pod_mesh(mesh_results):
     assert mesh_results["fused_round_losses_finite"]
     assert mesh_results["fused_round_rel_finite"]
     assert mesh_results["fused_round_slots_equal"]
+
+
+def test_sub_int8_wire_on_pod_mesh(mesh_results):
+    assert mesh_results["intn_bits8_pod_bit_identical"]
+    assert mesh_results["leafwise_bits8_pod_bit_identical"]
+    assert mesh_results["ef_int4_pod_matches_host"]
+    assert mesh_results["ef_int4_pod_residual_matches_host"]
+    assert mesh_results["ef_int4_pod_residual_nonzero"]
+    assert mesh_results["ef_round_losses_finite"]
+    assert mesh_results["ef_round_slots_equal"]
+    assert mesh_results["ef_round_residual_nonzero"]
 
 
 def test_decode_on_mesh(mesh_results):

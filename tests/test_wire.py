@@ -1,0 +1,262 @@
+"""The bit-width-general error-feedback wire (LeafwiseIntN / FlatFusedIntN).
+
+Pins the tentpole contracts:
+  * ``bits=8, error_feedback=False`` reduces bit-for-bit to the legacy
+    LeafwiseInt8 / FlatFusedInt8 codecs — both engines;
+  * error feedback threads the residual through init/run_round/checkpoint/
+    restart consistently (resume == uninterrupted);
+  * wire-byte accounting matches the actual encoded payload and int4 cuts
+    the quantized payload ~2x vs int8;
+  * EF at 4 bits converges comparably to the int8 wire on a small task.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import api
+from repro.core.colearn import CoLearner
+from repro.checkpoint import io as ckpt_io
+
+K, D = 3, 48
+CFG = CoLearnConfig(n_participants=K, T0=2, max_rounds=6)
+
+
+def loss_fn(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2), {}
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(D,)), jnp.float32),
+            "b": jnp.float32(0.0)}
+
+
+def make_batches(seed):
+    """Deterministic (round, epoch) -> batch pytree (cached, replayable)."""
+    cache = {}
+
+    def fn(i, j):
+        if (i, j) not in cache:
+            r = np.random.default_rng((seed, i, j))
+            x = jnp.asarray(r.normal(size=(K, 2, 8, D)), jnp.float32)
+            w = np.arange(1.0, D + 1) / D
+            y = jnp.asarray(x @ w + 0.01 * r.normal(size=(K, 2, 8)),
+                            jnp.float32)
+        else:
+            return cache[(i, j)]
+        cache[(i, j)] = (x, y)
+        return cache[(i, j)]
+    return fn
+
+
+def run(codec, engine, rounds=3, seed=1, **kw):
+    learner = CoLearner(CFG, loss_fn, codec=codec, round_engine=engine, **kw)
+    state = learner.init(init_params())
+    bf = make_batches(seed)
+    for _ in range(rounds):
+        state = learner.run_round(state, bf)
+    return learner, state
+
+
+ENGINES = ["python", api.FusedEngine(chunk=32), api.FusedEngine(chunk=1)]
+
+
+# ---------------------------------------------------------------------------
+# bits=8, error_feedback=False == the legacy int8 codecs, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("family,legacy", [
+    (api.LeafwiseIntN, api.LeafwiseInt8),
+    (api.FlatFusedIntN, api.FlatFusedInt8),
+])
+def test_bits8_no_ef_bit_identical_to_legacy(engine, family, legacy):
+    _, s_new = run(family(bits=8), engine)
+    _, s_old = run(legacy(), engine)
+    for a, b in zip(jax.tree.leaves(s_new["params"]),
+                    jax.tree.leaves(s_old["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_registry_returns_legacy_classes_at_bits8():
+    """The registry factories collapse to the pinned Int8 classes at the
+    legacy point, so isinstance pins (and their pod fast paths) hold."""
+    assert isinstance(api.get_codec("leafwise"), api.LeafwiseInt8)
+    assert isinstance(api.get_codec("fused"), api.FlatFusedInt8)
+    c4 = api.get_codec("leafwise", bits=4)
+    assert isinstance(c4, api.LeafwiseIntN)
+    assert not isinstance(c4, api.LeafwiseInt8) and c4.bits == 4
+    cef = api.get_codec("fused", bits=1, error_feedback=True)
+    assert isinstance(cef, api.FlatFusedIntN) and cef.stateful
+    assert cef.name == "fused-int1+ef"
+    assert api.get_codec("leafwise", bits=4, error_feedback=True).name == \
+        "leafwise-int4+ef"
+
+
+# ---------------------------------------------------------------------------
+# EF threading: engines agree; gated rounds / churn / restart semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", [api.LeafwiseIntN, api.FlatFusedIntN])
+@pytest.mark.parametrize("bits", [4, 1])
+def test_ef_python_and_fused_engines_agree(family, bits):
+    codec = family(bits=bits, error_feedback=True)
+    _, sp = run(codec, "python")
+    _, sf = run(codec, api.FusedEngine(chunk=32))
+    _, sc = run(codec, api.FusedEngine(chunk=1))       # chunked finalize
+    for s_other in (sf, sc):
+        for a, b in zip(jax.tree.leaves(sp["params"]),
+                        jax.tree.leaves(s_other["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=1e-6)
+        for a, b in zip(jax.tree.leaves(sp["residual"]),
+                        jax.tree.leaves(s_other["residual"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_ef_quiet_round_leaves_residual_untouched(engine):
+    """A divergence-gated quiet round quantizes nothing — the residual must
+    carry through unchanged (zero, since no sync ever happened)."""
+    learner = CoLearner(
+        CFG, loss_fn, codec=api.LeafwiseIntN(bits=4, error_feedback=True),
+        round_engine=engine, sync_policy=api.DivergenceTrigger(delta=1e9))
+    state = learner.init(init_params())
+    bf = make_batches(2)
+    for _ in range(2):
+        state = learner.run_round(state, bf)
+    assert not state["log"][-1].synced
+    for leaf in jax.tree.leaves(state["residual"]):
+        assert np.allclose(np.asarray(leaf), 0.0)
+
+
+def test_ef_restart_zeroes_participant_residual():
+    learner, state = run(api.FlatFusedIntN(bits=4, error_feedback=True),
+                         api.FusedEngine(chunk=32))
+    assert not np.allclose(np.asarray(state["residual"]), 0.0)
+    learner.restart_participant(state, 1)
+    res = np.asarray(state["residual"])
+    assert np.allclose(res[1], 0.0)
+    assert not np.allclose(res[0], 0.0)    # other slots keep their memory
+
+
+def test_ef_dead_slot_freezes_residual():
+    from repro.core.membership import ScriptedChurn
+    codec = api.FlatFusedIntN(bits=4, error_feedback=True)
+    learner = CoLearner(CFG, loss_fn, codec=codec,
+                        round_engine=api.FusedEngine(chunk=32),
+                        churn=ScriptedChurn(events=(("crash", 1, 2),)))
+    state = learner.init(init_params())
+    bf = make_batches(3)
+    state = learner.run_round(state, bf)              # round 0: all live
+    frozen = np.asarray(state["residual"])[2].copy()
+    assert not np.allclose(frozen, 0.0)
+    for _ in range(2):                                # rounds 1-2: slot 2 dead
+        state = learner.run_round(state, bf)
+    np.testing.assert_array_equal(np.asarray(state["residual"])[2], frozen)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: resumed EF run == uninterrupted EF run
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["python", api.FusedEngine(chunk=32)])
+@pytest.mark.parametrize("codec", [
+    api.LeafwiseIntN(bits=4, error_feedback=True),
+    api.FlatFusedIntN(bits=1, error_feedback=True),
+])
+def test_ef_resume_matches_uninterrupted(tmp_path, engine, codec):
+    bf = make_batches(5)
+    straight_learner = CoLearner(CFG, loss_fn, codec=codec,
+                                 round_engine=engine)
+    straight = straight_learner.init(init_params())
+    for _ in range(4):
+        straight = straight_learner.run_round(straight, bf)
+
+    first = CoLearner(CFG, loss_fn, codec=codec, round_engine=engine)
+    state = first.init(init_params())
+    for _ in range(2):
+        state = first.run_round(state, bf)
+    path = os.path.join(tmp_path, "ck")
+    ckpt_io.save_round_state(path, state)
+    assert os.path.exists(path + ".residual.npz")
+
+    resumed_learner = CoLearner(CFG, loss_fn, codec=codec,
+                                round_engine=engine)
+    resumed = resumed_learner.init(init_params())
+    resumed = ckpt_io.restore_round_state(path, resumed)
+    for _ in range(2):
+        resumed = resumed_learner.run_round(resumed, bf)
+
+    for a, b in zip(jax.tree.leaves(straight["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(straight["residual"]),
+                    jax.tree.leaves(resumed["residual"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_legacy_checkpoint_restores_zero_residual(tmp_path):
+    """A checkpoint written without EF memory (pre-EF or stateless-codec
+    run) restores into an EF learner with the documented zero residual."""
+    codec = api.FlatFusedIntN(bits=4, error_feedback=True)
+    learner, state = run(codec, "python", rounds=2)
+    path = os.path.join(tmp_path, "ck")
+    ckpt_io.save_round_state(path, state)
+    os.remove(path + ".residual.npz")
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    del meta["has_residual"]
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    fresh = learner.init(init_params())
+    fresh = ckpt_io.restore_round_state(path, fresh)
+    for leaf in jax.tree.leaves(fresh["residual"]):
+        assert np.allclose(np.asarray(leaf), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting + convergence
+# ---------------------------------------------------------------------------
+def big_tree(K=3, seed=11):
+    """Stacked tree dominated by quantizable leaves (realistic billing)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"w": jax.random.normal(ks[0], (K, 8, 256)),
+            "odd": jax.random.normal(ks[1], (K, 700)),
+            "tiny": jax.random.normal(ks[2], (K, 5))}
+
+
+@pytest.mark.parametrize("name", ["leafwise", "fused"])
+def test_int4_wire_bytes_at_least_1p9x_smaller(name):
+    tree = big_tree()
+    b8 = api.get_codec(name).wire_bytes(tree)
+    b4 = api.get_codec(name, bits=4).wire_bytes(tree)
+    b1 = api.get_codec(name, bits=1).wire_bytes(tree)
+    assert b8 / b4 >= 1.9
+    assert b4 / b1 > 1.9           # 1-bit keeps shrinking (scales remain)
+    # error feedback is device-side state — it never changes the wire
+    assert api.get_codec(name, bits=4,
+                         error_feedback=True).wire_bytes(tree) == b4
+
+
+def test_ef_int4_converges_within_tolerance_of_int8():
+    """On the quadratic task, the int4+EF wire's final round loss stays
+    within 10% of the int8 wire's (1-bit+EF within 2x) — the residual
+    memory is what makes the sub-int8 wire trainable."""
+    losses = {}
+    for label, codec in [
+        ("int8", api.FlatFusedIntN(bits=8)),
+        ("int4+ef", api.FlatFusedIntN(bits=4, error_feedback=True)),
+        ("1bit+ef", api.FlatFusedIntN(bits=1, error_feedback=True)),
+    ]:
+        _, state = run(codec, api.FusedEngine(chunk=32), rounds=5, seed=9)
+        losses[label] = float(np.mean(state["log"][-1].local_losses))
+    assert losses["int4+ef"] <= losses["int8"] * 1.10
+    assert losses["1bit+ef"] <= losses["int8"] * 2.0
