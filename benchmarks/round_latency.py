@@ -296,11 +296,50 @@ def check_retrace():
     assert n_round6 == 1, \
         f"EF round executable retraced: {n_round6} compiles"
 
+    # 7) time-varying topology: the per-round gossip matrix of the one-
+    #    peer exponential graph is traced data, so the graph changing
+    #    EVERY round (and the D² correction riding the stateful slot on
+    #    top) must reuse one executable per program — a topology change
+    #    never recompiles
+    cfg7 = CoLearnConfig(n_participants=4, T0=2, epsilon=0.0, max_rounds=8,
+                         epochs_rule="fle")
+    k7 = jax.random.PRNGKey(0)
+    x7 = jax.random.normal(k7, (4, 1, 2, 4))
+    batches7 = (x7, x7 @ jnp.ones((4, 1)))
+    learner7 = CoLearner(cfg7, zero_loss, round_engine="fused",
+                         aggregator=api.GraphGossip("exponential"))
+    state7 = learner7.init(params)
+    for _ in range(4):                   # period 2: every matrix seen twice
+        state7 = learner7.run_round(state7, lambda i, j: batches7)
+    n_round7 = learner7._fused_round._cache_size()
+    assert n_round7 == 1, \
+        f"round executable retraced under time-varying topology: " \
+        f"{n_round7} compiles"
+
+    cfg7b = CoLearnConfig(n_participants=4, T0=2, epsilon=0.01,
+                          epochs_rule="ile", max_rounds=8)
+    learner7b = CoLearner(cfg7b, zero_loss,
+                          aggregator=api.D2Gossip("exponential"),
+                          round_engine=api.FusedEngine(chunk=2))
+    state7b = learner7b.init(params)
+    for _ in range(4):
+        state7b = learner7b.run_round(state7b, lambda i, j: batches7)
+    assert state7b["residual"] is not None
+    n_epochs7 = learner7b._fused_epochs._cache_size()
+    n_final7 = learner7b._fused_finalize._cache_size()
+    assert n_epochs7 == 1, \
+        f"chunk executable retraced under D2+time-varying topology: " \
+        f"{n_epochs7} compiles"
+    assert n_final7 == 1, \
+        f"stateful finalize retraced under D2+time-varying topology: " \
+        f"{n_final7} compiles"
+
     print("check-retrace OK: chunk/finalize/round executables compiled "
           "once across an ILE doubling, 4 schedule swaps, a warmup "
           "ramp, the masked+weighted heterogeneity scenario, "
-          "per-round membership churn, and the stateful error-feedback "
-          "wire (residual traced through both engine paths)")
+          "per-round membership churn, the stateful error-feedback "
+          "wire (residual traced through both engine paths), and a "
+          "per-round time-varying gossip topology (plain and D²)")
     return 0
 
 

@@ -1,0 +1,235 @@
+"""Topology sweep: graph gossip x D² on the non-IID Dirichlet task.
+
+The PR-5 heterogeneity sweep measured plain averaging collapsing at
+Dirichlet alpha=0.1 (0.30 unweighted vs 0.93 IID; example-count weighting
+recovers 0.49 — the committed BENCH_heterogeneity.json baseline). This
+benchmark puts the topology subsystem on that same task: each arm is a
+communication graph (ring | time-varying one-peer exponential | complete)
+x {plain GraphGossip, D2Gossip}, against the weighted FullAverage
+baseline. Decentralized gossip rows stay distinct within a round, so
+every arm is ALSO evaluated on the consensus mean of the K replicas —
+doubly-stochastic mixing preserves it, and it is what the deployment
+would serve. Expected shape (committed BENCH_topology.json): plain
+sparse gossip degrades under the shard drift, D² over the well-mixing
+sparse graphs (torus, exponential) recovers the weighted
+full-averaging baseline at a fraction of the per-round wire bytes
+(O(degree), not O(K)); on the slowly-mixing DIRECTED ring the D²
+correction hurts instead — Exact Diffusion assumes symmetric
+well-conditioned W — and that negative row is kept on purpose.
+
+``--check`` is the CI smoke (forced 8-device host platform, no timings):
+
+  * sparse pod path == dense host reference: GraphGossip / D2Gossip
+    mesh specializations (one ppermute per neighbor permutation) match
+    the dense-einsum host mixing on an 8-pod mesh;
+  * D² >= plain gossip on a reduced non-IID (alpha=0.1) smoke, compared
+    on consensus-mean accuracy;
+  * comm bill O(degree), never O(K): ring K-independent, hypercube
+    log2(K), complete (K-1)-proportional;
+  * every registered topology yields a doubly-stochastic matrix.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.topology \
+      [--out benchmarks/BENCH_topology.json]
+  PYTHONPATH=src python -m benchmarks.topology --check      # CI smoke
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--check" in sys.argv:
+    # the mesh-parity smoke needs a multi-device pod axis; flags must be
+    # set before jax initializes
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.harness import accuracy, run_colearn
+from repro.core import api
+from repro.core import topology as topo_mod
+from repro.data.synthetic import image_like
+from repro.models.convnets import IMAGE_MODELS
+
+#: (arm name, aggregator factory) — None = weighted FullAverage baseline.
+#: ring (directed legacy gossip) vs torus (symmetric MH cycle — at prime K
+#: the 2-d torus degenerates to the K-cycle) separates the D² story: the
+#: Exact-Diffusion correction assumes symmetric well-mixing W, so it wins
+#: on torus/exponential and loses on the slowly-mixing directed ring —
+#: the committed JSON keeps that negative row on purpose.
+ARMS = [
+    ("full_weighted", None),
+    ("ring_plain", lambda: api.GraphGossip("ring")),
+    ("ring_d2", lambda: api.D2Gossip("ring")),
+    ("torus_plain", lambda: api.GraphGossip("torus")),
+    ("torus_d2", lambda: api.D2Gossip("torus")),
+    ("exponential_plain", lambda: api.GraphGossip("exponential")),
+    ("exponential_d2", lambda: api.D2Gossip("exponential")),
+    ("complete_plain", lambda: api.GraphGossip("complete")),
+]
+
+
+def consensus_mean(state):
+    """Mean of the K replicas — what decentralized deployment serves.
+    Doubly-stochastic mixing preserves it round to round."""
+    return jax.tree.map(lambda t: t.mean(0), state["params"])
+
+
+def sweep(model="resnet_tiny", rounds=10, n=4000, K=5, seed=0,
+          batch_size=32, alpha=0.1, quiet=False):
+    """One row per arm on the alpha-Dirichlet task: slot-0 accuracy curve,
+    final consensus-mean accuracy, and the per-round wire bill."""
+    xtr, ytr = image_like(seed, n=n)
+    xte, yte = image_like(seed + 1000, n=1000)
+    init_fn, apply_fn = IMAGE_MODELS[model]
+    rows = []
+    for name, make_agg in ARMS:
+        kw = (dict(weighted=True) if make_agg is None
+              else dict(aggregator=make_agg()))
+        r = run_colearn(init_fn, apply_fn, (xtr, ytr), (xte, yte),
+                        K=K, rounds=rounds, T0=1, epsilon=0.03,
+                        batch_size=batch_size, seed=seed, engine="fused",
+                        partition="dirichlet", dirichlet_alpha=alpha, **kw)
+        acc_mean = accuracy(apply_fn, consensus_mean(r["state"]),
+                            xte, yte)
+        rows.append({
+            "arm": name, "alpha": alpha, "rounds": rounds,
+            "final_acc_slot0": r["acc"][-1],
+            "final_acc_mean": float(acc_mean),
+            "curve_slot0": r["acc"],
+            "comm_bytes_per_round": r["comm_bytes"],
+            "total_comm_bytes": r["total_comm_bytes"],
+            "shard_sizes": list(r["shard_sizes"]),
+        })
+        if not quiet:
+            print(f"topology,{model},alpha={alpha},{name},"
+                  f"slot0={r['acc'][-1]:.4f},mean={acc_mean:.4f},"
+                  f"comm={r['comm_bytes']}", flush=True)
+    return rows
+
+
+def _check_mesh_parity():
+    """Sparse pod wire pattern == dense host reference on an 8-pod mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_sim_mesh
+
+    mesh = make_sim_mesh((8,), ("pod",))
+    K = 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    stacked = {"w": jax.random.normal(ks[0], (K, 4, 16)),
+               "b": jax.random.normal(ks[1], (K, 7))}
+    specs = {"w": P("pod"), "b": P("pod")}
+    sharded = jax.tree.map(
+        lambda t, s: jax.device_put(t, NamedSharding(mesh, s)),
+        stacked, specs)
+    codec = api.ExactF32()
+
+    def maxdiff(a, b):
+        return max(float(jnp.abs(jnp.asarray(x, jnp.float32)
+                                 - jnp.asarray(y, jnp.float32)).max())
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    for tname in ("ring", "grid2d", "hypercube", "complete"):
+        agg = api.GraphGossip(tname)
+        W = jnp.asarray(agg.mixing_matrix(0, K))
+        mesh_fn = agg._make_mesh_aggregate_fn(codec, mesh, specs, "pod")
+        assert mesh_fn is not None, f"{tname}: sparse path not engaged"
+        got = jax.jit(mesh_fn)(sharded, W)
+        want = agg._make_host_aggregate_fn(codec)(stacked, W)
+        d = maxdiff(got, want)
+        assert d <= 1e-6, f"{tname}: sparse pod path != dense ({d})"
+
+    d2 = api.D2Gossip("hypercube")
+    W = jnp.asarray(d2.mixing_matrix(0, K))
+    corr = jax.tree.map(lambda t: 0.01 * jnp.ones(t.shape, jnp.float32),
+                        stacked)
+    mesh_fn = d2._make_mesh_aggregate_fn(codec, mesh, specs, "pod")
+    assert mesh_fn is not None, "d2: sparse path not engaged"
+    gm, gc = jax.jit(mesh_fn)(sharded, W, corr)
+    wm, wc = d2._make_host_aggregate_fn(codec)(stacked, W, corr)
+    assert maxdiff((gm, gc), (wm, wc)) <= 1e-6, "d2 sparse != dense"
+
+
+def _check_comm_and_matrices():
+    """Comm bill O(degree) not O(K); registry matrices doubly stochastic."""
+    codec = api.ExactF32()
+    for K in (4, 8, 16):
+        stacked = {"w": jnp.zeros((K, 64))}
+        wire = codec.wire_bytes(stacked)
+        assert (api.GraphGossip("ring").comm_bytes(codec, stacked, 0)
+                == 2 * wire), "ring bill must be K-independent"
+        assert (api.GraphGossip("hypercube").comm_bytes(codec, stacked, 0)
+                == 2 * int(np.log2(K)) * wire)
+        assert (api.GraphGossip("complete").comm_bytes(codec, stacked, 0)
+                == 2 * (K - 1) * wire)
+    for name in ("ring", "grid2d", "hypercube", "exponential", "complete"):
+        t = topo_mod.get_topology(name)
+        for K in (4, 8):
+            for r in range(t.period(K)):
+                W = t.mixing_matrix(r, K)
+                assert np.allclose(W.sum(0), 1.0, atol=1e-6)
+                assert np.allclose(W.sum(1), 1.0, atol=1e-6)
+
+
+def check(quiet=False):
+    """CI smoke: structural invariants + a reduced non-IID D² comparison,
+    no timings."""
+    _check_mesh_parity()
+    _check_comm_and_matrices()
+
+    # reduced alpha=0.1 smoke: D² must not lose to plain gossip on the
+    # consensus mean — the whole point of carrying the correction
+    n, K, rounds = 800, 4, 6
+    xtr, ytr = image_like(0, n=n)
+    xte, yte = image_like(1000, n=400)
+    init_fn, apply_fn = IMAGE_MODELS["vgg_tiny"]
+    accs = {}
+    for name, agg in (("plain", api.GraphGossip("ring")),
+                      ("d2", api.D2Gossip("ring"))):
+        r = run_colearn(init_fn, apply_fn, (xtr, ytr), (xte, yte),
+                        K=K, rounds=rounds, T0=1, epsilon=0.03,
+                        batch_size=16, seed=0, engine="fused",
+                        partition="dirichlet", dirichlet_alpha=0.1,
+                        aggregator=agg)
+        accs[name] = float(accuracy(apply_fn, consensus_mean(r["state"]),
+                                    xte, yte))
+        assert np.isfinite(accs[name]) and 0 < accs[name] <= 1
+        if not quiet:
+            print(f"smoke,{name},mean_acc={accs[name]:.4f}", flush=True)
+    assert accs["d2"] >= accs["plain"] - 1e-9, accs
+    print("topology --check OK: sparse pod paths match the dense host "
+          "reference, comm bills scale O(degree), registry matrices "
+          "doubly stochastic, and D2 >= plain gossip on the non-IID "
+          f"smoke ({accs['d2']:.3f} vs {accs['plain']:.3f})")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--model", default="resnet_tiny")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(quiet=args.quiet)
+    rows = sweep(model=args.model, rounds=args.rounds, quiet=args.quiet)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"task": f"image_like dirichlet alpha=0.1 "
+                               f"{args.model}",
+                       "rows": rows}, f, indent=1)
+        print(f"wrote {args.out}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

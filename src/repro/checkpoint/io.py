@@ -80,8 +80,9 @@ def save_round_state(path: str, state):
     if state.get("prev_avg") is not None:
         save_pytree(path + ".prev_avg.npz", state["prev_avg"])
     if state.get("residual") is not None:
-        # error-feedback codec memory: without it a resumed run would
-        # re-quantize from zero error and diverge from the uninterrupted one
+        # round-state memory (error-feedback residual and/or the D²
+        # correction): without it a resumed run would restart from zero
+        # memory and diverge from the uninterrupted one
         save_pytree(path + ".residual.npz", state["residual"])
     ctrl = state["ctrl"]
     meta = {"round": state["round"], "global_epoch": state["global_epoch"],

@@ -30,8 +30,14 @@ class, not another constructor flag plus an ``if`` in three files:
   uniform matrix, routed through the codec's fused-mean kernel when it has
   one), :class:`PartialParticipation` (FedAvg-style: ``m <= K`` sampled
   participants per round, weighted by shard size, broadcast back to all),
-  :class:`RingGossip` (one neighbor-exchange step over a fixed ring; no
-  central server, the rows stay distinct). Aggregators also own the
+  :class:`GraphGossip` (serverless gossip over any
+  :mod:`repro.core.topology` graph — ring, torus, hypercube, time-varying
+  one-peer exponential, Erdős–Rényi — the rows stay distinct),
+  :class:`RingGossip` (the legacy fixed ring, now
+  ``GraphGossip(RingTopology())``), :class:`D2Gossip` (graph gossip plus
+  the D² variance-reduction correction for non-IID shards — a STATEFUL
+  aggregator whose per-participant correction rides the same engine state
+  slot as the codec error-feedback residual). Aggregators also own the
   per-round comm-byte accounting, priced through the codec.
 
 * :class:`RoundEngine` — how the round executes. :class:`PythonEngine`
@@ -74,7 +80,7 @@ import abc
 import dataclasses
 import inspect
 import math
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -577,6 +583,30 @@ class Aggregator(abc.ABC):
         live rows upload/download, so the per-live-participant bill
         changes with the live set."""
 
+    @property
+    def stateful(self) -> bool:
+        """True when the AGGREGATOR carries per-participant round state
+        (e.g. :class:`D2Gossip`'s variance-reduction correction). The
+        engines thread ONE state slot — ``state["residual"]`` — through
+        the donated round executables; it holds the codec's
+        error-feedback memory, the aggregator's state, or both (see
+        ``init_round_state``), and the aggregate fn takes the 3-arg
+        stateful form ``aggregate(stacked, weights, state) ->
+        (mixed, new_state)`` whenever either side is stateful."""
+        return False
+
+    def init_round_state(self, codec: WireCodec, stacked):
+        """Zero per-participant round state for this (codec, aggregator)
+        pair — the pytree the engines thread through the round
+        executables, or None when neither side is stateful. Whatever
+        structure this returns is persisted by ``checkpoint/io.py``,
+        carried unchanged through quiet sync-policy rounds, frozen for
+        dead slots via ``select_live``, and zeroed per-row on
+        ``restart_participant`` — all generically over the pytree."""
+        if getattr(codec, "stateful", False):
+            return codec.init_state(stacked)
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class FullAverage(Aggregator):
@@ -769,44 +799,72 @@ class PartialParticipation(Aggregator):
 
 
 @dataclasses.dataclass(frozen=True)
-class RingGossip(Aggregator):
-    """One neighbor-exchange step over a fixed ring (decentralized, no
-    server): participant k averages its model with its ring predecessor's,
-    ``w_k' = (w_k + w_{(k-1) mod K}) / 2``. The mixing matrix is doubly
-    stochastic, so repeated rounds contract toward consensus while models
-    stay distinct within a round (``shared_model`` tracks slot 0)."""
+class GraphGossip(Aggregator):
+    """One gossip exchange per round over an arbitrary sparse topology
+    (consensus SGD, Jiang et al., 1706.07880): no server — participant k
+    mixes its model with its graph neighbors' through the topology's
+    row-stochastic (all-live: doubly stochastic) mixing matrix, so
+    repeated rounds contract toward consensus at the graph's
+    spectral-gap rate while models stay distinct within a round.
 
-    name = "ring"
+    ``topology`` is a :mod:`repro.core.topology` instance or registry
+    name (``"ring"`` | ``"grid2d"`` | ``"hypercube"`` | ``"exponential"``
+    | ``"erdos_renyi"`` | ``"complete"``); None is the ring. Time-varying
+    graphs ride the per-round matrix into the unchanged donated
+    executables as traced data — a graph change is never a recompile.
+    Disconnected topologies are rejected at learner construction
+    (``validate``). Liveness renormalizes over the live subgraph: the
+    topology routes around dead nodes or drops their edges, a sole
+    survivor keeps its own model, and if churn splits the graph, mixing
+    proceeds component-wise with a logged warning. Per-round matrices
+    are memoized per (round-key, K, live-set), so a static all-live
+    graph builds its matrix exactly once.
+
+    Pod path: the wire pattern is one ``jax.lax.ppermute`` per neighbor
+    permutation (``topology.edge_perms``) — O(degree) cross-pod traffic,
+    never the dense-einsum K-way gather; irregular graphs (erdos_renyi)
+    fall back to the dense traced mixing."""
+
+    topology: Any = None
+
+    def __post_init__(self):
+        from repro.core import topology as topo_mod
+        object.__setattr__(self, "topology",
+                           topo_mod.get_topology(self.topology))
+        object.__setattr__(self, "_mix_cache", {})
+
+    @property
+    def name(self):  # noqa: D401 — shadowed by subclass class attrs
+        return f"graph[{self.topology.name}]"
+
+    @property
+    def static_comm(self):
+        # a time-varying graph's live edge count (and so its bill) can
+        # change per round even with every participant up
+        return not self.topology.time_varying
+
+    def validate(self, K: int) -> "GraphGossip":
+        """Connectivity guard — raises ValueError when the topology can
+        never reach consensus at this K (CoLearner calls this once at
+        construction)."""
+        self.topology.validate(K)
+        return self
+
+    def _round_key(self, round_index, K):
+        topo = self.topology
+        return (round_index % topo.period(K)) if topo.time_varying else 0
 
     def mixing_matrix(self, round_index, K, live=None):
-        if live is None:
-            W = np.zeros((K, K), np.float32)
-            for k in range(K):
-                W[k, k] += 0.5
-                W[k, (k - 1) % K] += 0.5
-            return W
-        # elastic membership: route around dead neighbors — each live
-        # participant averages with its nearest LIVE ring predecessor; a
-        # sole survivor (or a dead row, which the engine identity-carries
-        # anyway) keeps its own model
-        live = np.asarray(live, bool)
-        if not live.any():
-            raise ValueError(
-                f"ring gossip has zero live participants at round "
-                f"{round_index}")
-        W = np.zeros((K, K), np.float32)
-        for k in range(K):
-            if not live[k]:
-                W[k, k] = 1.0
-                continue
-            prev = (k - 1) % K
-            while prev != k and not live[prev]:
-                prev = (prev - 1) % K
-            if prev == k:                       # sole live participant
-                W[k, k] = 1.0
-            else:
-                W[k, k] += 0.5
-                W[k, prev] += 0.5
+        lkey = (None if live is None
+                else tuple(bool(x) for x in np.asarray(live, bool)))
+        key = (self._round_key(round_index, K), K, lkey)
+        W = self._mix_cache.get(key)
+        if W is None:
+            W = self.topology.mixing_matrix(round_index, K, live=live)
+            W.flags.writeable = False           # cached: nobody may edit
+            if len(self._mix_cache) >= 512:     # random churn could grow
+                self._mix_cache.clear()         # the live-key space: bound
+            self._mix_cache[key] = W
         return W
 
     def _make_host_aggregate_fn(self, codec):
@@ -836,6 +894,119 @@ class RingGossip(Aggregator):
         def aggregate(stacked, weights):
             return _mix(stacked, codec.roundtrip(stacked), weights)
         return aggregate
+
+    def _mesh_perm_setup(self, mesh, axis, dynamic):
+        """The sparse pod wire pattern: the graph's edge permutations and,
+        per permutation, the (K,) "k receives from src[k]" gather map used
+        to pick each leg's weight out of the traced matrix. None — dense
+        fallback — when the graph is irregular (no circulant/regular perm
+        decomposition), time-varying (per-round wire pattern), or elastic
+        membership may route edges outside the baked pattern."""
+        if dynamic:
+            return None
+        topo = self.topology
+        if topo.time_varying:
+            return None
+        K = mesh.shape[axis]
+        perms = topo.edge_perms(0, K)
+        if not perms:
+            return None
+        srcs = []
+        for perm in perms:
+            if len(perm) != K or len({d for _, d in perm}) != K:
+                return None         # partial permute: some pod gets zeros
+            src = np.zeros(K, np.int64)
+            for s, d in perm:
+                src[d] = s
+            srcs.append(jnp.asarray(src))
+        return tuple(tuple(p) for p in perms), tuple(srcs)
+
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
+                                dynamic=False):
+        if getattr(codec, "stateful", False):
+            # the permute pattern has no residual plumbing; the host path
+            # carries the error-feedback state correctly
+            return None
+        setup = self._mesh_perm_setup(mesh, axis, dynamic)
+        if setup is None:
+            return None
+        perms, srcs = setup
+        # the graph's wire pattern is one collective permute per neighbor
+        # permutation: each pod codec-roundtrips its own row (the send
+        # leg) and receives exactly degree rows (per-leaf ppermutes, f32
+        # payloads, combinable by XLA) — O(degree) point-to-point traffic,
+        # no all-gather, the local half stays exact, and the per-leg
+        # weights are gathered from the traced matrix at the pod's index
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import compat
+
+        def aggregate(stacked, weights):
+            _check_one_row_per_pod(self, stacked, mesh, axis)
+
+            def local_mix(local, W):
+                rt = codec.roundtrip(local)
+                k = jax.lax.axis_index(axis)
+                Wf = W.astype(jnp.float32)
+                w_self = Wf[k, k]
+                w_recv = [Wf[k, src[k]] for src in srcs]
+
+                def one(t, q):
+                    acc = w_self * t.astype(jnp.float32)
+                    qf = q.astype(jnp.float32)
+                    for perm, w in zip(perms, w_recv):
+                        acc = acc + w * jax.lax.ppermute(qf, axis,
+                                                         list(perm))
+                    return acc.astype(t.dtype)
+                return jax.tree.map(one, local, rt)
+
+            return compat.shard_map(
+                local_mix, mesh=mesh, in_specs=(param_specs, P()),
+                out_specs=param_specs, check_vma=False)(stacked, weights)
+        return aggregate
+
+    def comm_bytes(self, codec, stacked, round_index, live=None):
+        # serverless: every directed live edge moves one encoded model
+        # across the wire, and each participant pays for its send AND
+        # receive legs — amortized per live participant that is
+        # 2 * live_edges / n_live encoded models, O(degree), never O(K)
+        K = jax.tree.leaves(stacked)[0].shape[0]
+        n = K
+        if live is not None:
+            n = int(np.asarray(live, bool).sum())
+            if n <= 1:
+                return 0             # a sole survivor has nobody to gossip
+        W = self.mixing_matrix(round_index, K, live=live)
+        n_edges = (int(np.count_nonzero(W))
+                   - int(np.count_nonzero(np.diagonal(W))))
+        if n_edges == 0:
+            return 0
+        return math.ceil(2 * n_edges * codec.wire_bytes(stacked) / n)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingGossip(GraphGossip):
+    """One neighbor-exchange step over a fixed ring (decentralized, no
+    server): participant k averages its model with its ring predecessor's,
+    ``w_k' = (w_k + w_{(k-1) mod K}) / 2``. The mixing matrix is doubly
+    stochastic, so repeated rounds contract toward consensus while models
+    stay distinct within a round (``shared_model`` tracks slot 0).
+
+    Since the topology subsystem this IS ``GraphGossip(RingTopology())``
+    — the named class survives for the ``"ring"`` registry name and to
+    pin the legacy behavior: the all-live and routed live matrices, host
+    mixing, comm bill, and the static per-leaf ppermute pod fast path
+    below are bit-identical to the original hand-rolled aggregator
+    (asserted in tests/test_topology.py)."""
+
+    name = "ring"
+
+    def __post_init__(self):
+        super().__post_init__()
+        from repro.core.topology import RingTopology
+        if not isinstance(self.topology, RingTopology):
+            raise ValueError(
+                "RingGossip is fixed to the ring topology; use "
+                f"GraphGossip(topology={self.topology.name!r}) instead")
 
     def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
                                 dynamic=False):
@@ -880,9 +1051,143 @@ class RingGossip(Aggregator):
     def comm_bytes(self, codec, stacked, round_index, live=None):
         # each participant sends its encoded model to one neighbor and
         # receives one encoded model back — both legs on the wire format
+        # (kept verbatim from the pre-topology aggregator: the general
+        # per-live-edge bill reduces to this for every ring live set)
         if live is not None and int(np.asarray(live, bool).sum()) <= 1:
             return 0                 # a sole survivor has nobody to gossip
         return 2 * codec.wire_bytes(stacked)
+
+
+@dataclasses.dataclass(frozen=True)
+class D2Gossip(GraphGossip):
+    """:class:`GraphGossip` plus the D² variance-reduction correction
+    (Tang et al., 1803.07068) in round form: plain gossip over non-IID
+    shards drags each participant toward its local optimum between
+    exchanges, leaving a bias sparse mixing never clears (the Dirichlet
+    α=0.1 collapse measured in benchmarks/ablation.py). D² cancels it
+    with one extra model-shaped memory per participant and ZERO extra
+    wire traffic:
+
+        v_k   = y_k + c_k        post-training model + correction
+        x_k'  = Σ_j W[k,j] v_j   the usual gossip mix (v on the wire)
+        c_k'  = x_k' - y_k       next round's correction
+
+    With c = x - y_prev this telescopes to x' = W (x + y - y_prev) —
+    D²'s update ``W (2 X_t - X_{t-1} - γ (G_t - G_{t-1}))`` generalized
+    from one SGD step to a local training round. On identical shards the
+    correction stays exactly zero and D² IS plain gossip (pinned in
+    tests); on non-IID shards it removes the across-shard drift so
+    sparse gossip recovers full-averaging accuracy
+    (benchmarks/topology.py).
+
+    The correction is AGGREGATOR round state riding the same engine slot
+    as the codec error-feedback residual (``stateful`` /
+    ``init_round_state``): threaded traced through round/chunk/finalize
+    executables, persisted by ``checkpoint/io.py``, carried unchanged
+    through quiet ``DivergenceTrigger`` rounds, frozen for dead slots
+    via ``select_live``, and zeroed per-row on ``restart_participant``.
+    With an error-feedback codec both memories ride together as
+    ``{"corr": ..., "res": ...}``."""
+
+    @property
+    def name(self):
+        return f"d2[{self.topology.name}]"
+
+    @property
+    def stateful(self):
+        return True
+
+    def init_round_state(self, codec, stacked):
+        corr = jax.tree.map(
+            lambda t: jnp.zeros(t.shape, jnp.float32), stacked)
+        if getattr(codec, "stateful", False):
+            return {"corr": corr, "res": codec.init_state(stacked)}
+        return corr
+
+    def _make_host_aggregate_fn(self, codec):
+        codec_ef = getattr(codec, "stateful", False)
+
+        def aggregate(stacked, weights, state):
+            corr = state["corr"] if codec_ef else state
+            # corrected value v = y + c, carried in f32; v replaces the
+            # raw model on the wire, and as in plain gossip only the
+            # received (off-diagonal) leg goes through the codec
+            vf = jax.tree.map(lambda t, c: t.astype(jnp.float32) + c,
+                              stacked, corr)
+            vw = jax.tree.map(lambda t, v: v.astype(t.dtype), stacked, vf)
+            if codec_ef:
+                rt, new_res = codec.roundtrip_ef(vw, state["res"])
+            else:
+                rt = codec.roundtrip(vw)
+            W = weights.astype(jnp.float32)
+            d = jnp.diagonal(W)
+            off = W - jnp.diag(d)
+
+            def one(v, q):
+                local = d.reshape((-1,) + (1,) * (v.ndim - 1)) * v
+                recv = jnp.einsum("kj,j...->k...", off,
+                                  q.astype(jnp.float32))
+                return local + recv
+
+            mixed_f = jax.tree.map(one, vf, rt)
+            mixed = jax.tree.map(lambda t, m: m.astype(t.dtype),
+                                 stacked, mixed_f)
+            new_corr = jax.tree.map(
+                lambda m, t: m - t.astype(jnp.float32), mixed_f, stacked)
+            return mixed, ({"corr": new_corr, "res": new_res}
+                           if codec_ef else new_corr)
+        return aggregate
+
+    def _make_mesh_aggregate_fn(self, codec, mesh, param_specs, axis,
+                                dynamic=False):
+        if getattr(codec, "stateful", False):
+            # composing the EF residual with the correction on the pod
+            # path needs codec state plumbing the permutes don't have;
+            # the host path carries both correctly
+            return None
+        setup = self._mesh_perm_setup(mesh, axis, dynamic)
+        if setup is None:
+            return None
+        perms, srcs = setup
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import compat
+
+        def aggregate(stacked, weights, corr):
+            _check_one_row_per_pod(self, stacked, mesh, axis)
+
+            def local_mix(local, W, lcorr):
+                vf = jax.tree.map(lambda t, c: t.astype(jnp.float32) + c,
+                                  local, lcorr)
+                vw = jax.tree.map(lambda t, v: v.astype(t.dtype),
+                                  local, vf)
+                rt = codec.roundtrip(vw)
+                k = jax.lax.axis_index(axis)
+                Wf = W.astype(jnp.float32)
+                w_self = Wf[k, k]
+                w_recv = [Wf[k, src[k]] for src in srcs]
+
+                def one(v, q):
+                    acc = w_self * v
+                    qf = q.astype(jnp.float32)
+                    for perm, w in zip(perms, w_recv):
+                        acc = acc + w * jax.lax.ppermute(qf, axis,
+                                                         list(perm))
+                    return acc
+
+                mixed_f = jax.tree.map(one, vf, rt)
+                mixed = jax.tree.map(lambda t, m: m.astype(t.dtype),
+                                     local, mixed_f)
+                new_c = jax.tree.map(
+                    lambda m, t: m - t.astype(jnp.float32),
+                    mixed_f, local)
+                return mixed, new_c
+
+            return compat.shard_map(
+                local_mix, mesh=mesh,
+                in_specs=(param_specs, P(), param_specs),
+                out_specs=(param_specs, param_specs),
+                check_vma=False)(stacked, weights, corr)
+        return aggregate
 
 
 # ---------------------------------------------------------------------------
@@ -1246,7 +1551,8 @@ def _gate_accepts_delta(policy) -> bool:
 class _PythonRunner:
     def __init__(self, learner):
         self.learner = learner
-        self._stateful = getattr(learner.codec, "stateful", False)
+        self._stateful = getattr(learner, "_round_stateful",
+                                 getattr(learner.codec, "stateful", False))
         self._jit_agg = jax.jit(learner._aggregate_fn)
 
     def run_round(self, state, epoch_batches_fn):
@@ -1347,10 +1653,12 @@ class _FusedRunner:
         # elastic membership: build the live-row variants once; membership
         # changes then ride in as traced data (zero retraces)
         self._live = learner._churn_active
-        # stateful codec (error feedback): the residual rides through the
-        # round/finalize executables as traced data right after opt_state
-        # (the chunk executables never touch it — EF happens at finalize)
-        self._stateful = getattr(learner.codec, "stateful", False)
+        # stateful round (codec error feedback and/or aggregator state,
+        # e.g. the D² correction): the state rides through the round/
+        # finalize executables as traced data right after opt_state (the
+        # chunk executables never touch it — it is consumed at finalize)
+        self._stateful = getattr(learner, "_round_stateful",
+                                 getattr(learner.codec, "stateful", False))
         self._round = engine_mod.make_fused_round(
             learner.loss_fn, learner.opt, lr_fn=self._traced_lr,
             aggregate_fn=learner._aggregate_fn, gated=self._gated,
@@ -1568,6 +1876,8 @@ register_codec("flat", _flat_codec)            # alias
 register_aggregator("full", FullAverage)
 register_aggregator("partial", PartialParticipation)
 register_aggregator("ring", RingGossip)
+register_aggregator("graph", GraphGossip)
+register_aggregator("d2", D2Gossip)
 register_engine("python", lambda chunk=32: PythonEngine())
 register_engine("fused", FusedEngine)
 register_schedule("clr", lambda eta0=0.01, decay_rate=0.25:
@@ -1626,7 +1936,15 @@ def get_codec(spec=None, *, block=DEFAULT_BLOCK, impl="ref", bits=8,
 
 
 def get_aggregator(spec=None, **kw) -> Aggregator:
-    """None | registry name | Aggregator instance -> Aggregator."""
+    """None | registry name | Aggregator instance -> Aggregator.
+
+    Registered names: ``"full"`` (Eq. 2 / example-count-weighted FedAvg),
+    ``"partial"`` (FedAvg-style sampled participation), ``"ring"`` (the
+    legacy directed-ring gossip — ``GraphGossip`` over ``RingTopology``),
+    ``"graph"`` (gossip over any :mod:`repro.core.topology` graph; pass
+    ``topology="grid2d" | "hypercube" | "exponential" | "erdos_renyi" |
+    "complete"`` or a Topology instance), ``"d2"`` (``GraphGossip`` plus
+    the D² variance-reduction correction for non-IID shards)."""
     return _resolve(spec, AGGREGATORS, FullAverage, Aggregator,
                     "aggregator", **kw)
 

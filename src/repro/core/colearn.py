@@ -127,6 +127,16 @@ class CoLearner:
         # through the round state (init/run_round/restart/checkpoint)
         self._codec_stateful = getattr(self.codec, "stateful", False)
         self.aggregator = api.get_aggregator(self.aggregator)
+        # stateful aggregators (D² correction) ride the same round-state
+        # slot; either side being stateful turns on the residual plumbing
+        self._round_stateful = (self._codec_stateful
+                                or getattr(self.aggregator, "stateful",
+                                           False))
+        # topology-backed aggregators carry a connectivity guard: reject
+        # graphs that can never reach consensus at this K up front
+        validate = getattr(self.aggregator, "validate", None)
+        if validate is not None:
+            validate(self.cfg.n_participants)
         self.round_engine = api.get_engine(self.round_engine)
         # None resolves the legacy cfg.schedule / cfg.epochs_rule strings
         # through the same registries the names go through
@@ -224,10 +234,10 @@ class CoLearner:
                 bool(a) for a in self.churn.live_mask(0, K)))
         else:
             mem = membership_mod.Membership.all_live(K)
-        # error-feedback codecs start from zero residual memory (the codec
-        # owns the mirror structure: leafwise trees / the flat wire buffer)
-        residual = (self.codec.init_state(stacked)
-                    if self._codec_stateful else None)
+        # stateful rounds start from zero memory — the codec's EF residual
+        # (codec owns the mirror structure: leafwise trees / the flat wire
+        # buffer), the aggregator's state (D² correction), or both
+        residual = self.aggregator.init_round_state(self.codec, stacked)
         return {"params": stacked, "opt": opt_state, "ctrl": ctrl,
                 "round": 0, "global_epoch": 0, "prev_avg": None, "log": [],
                 "membership": mem, "residual": residual}
@@ -459,9 +469,10 @@ class CoLearner:
         fresh = self.opt.init(shared)
         state["opt"] = jax.tree.map(
             lambda o, f: o.at[k].set(f), state["opt"], fresh)
-        if self._codec_stateful and state.get("residual") is not None:
-            # restart also forgets the quantization error memory: the
-            # residual tracked a trajectory that no longer exists
+        if self._round_stateful and state.get("residual") is not None:
+            # restart also forgets the round-state memory (quantization
+            # error residual and/or D² correction): it tracked a
+            # trajectory that no longer exists
             state["residual"] = jax.tree.map(
                 lambda e: e.at[k].set(0.0), state["residual"])
         return state

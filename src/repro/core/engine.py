@@ -478,13 +478,15 @@ def _make_finalize(opt, aggregate_fn, live=False, stateful=False):
     same mixed model for averaging schemes; gossip rows differ but the
     shared-model reference is by convention the first live row).
 
-    ``stateful=True`` (error-feedback codec): the residual enters right
+    ``stateful=True`` (error-feedback codec and/or stateful aggregator —
+    the D² correction rides the same slot): the round state enters right
     after ``opt_state`` (right after ``params`` on the opt-free static
     variant, since the paper discards the local opt state there), the
     aggregate is ``aggregate_fn(params, agg_weights, residual) -> (mixed,
-    new_residual)``, dead rows additionally FREEZE their residual memory
-    (they never quantized an upload), and the new residual is appended to
-    the outputs.
+    new_residual)``, dead rows additionally FREEZE their state rows
+    (they neither uploaded nor mixed), and the new state is appended to
+    the outputs. Everything here is generic over the state PYTREE — the
+    codec residual, the D² correction tree, or a dict of both.
     """
     if live:
         if stateful:
@@ -554,12 +556,13 @@ def _make_gated_finalize(opt, aggregate_fn, gate_fn=None, live=False,
     rows only, and in the sync branch dead rows keep their own params/opt
     (identity carry) while ``new_avg`` comes from the first LIVE row.
 
-    ``stateful=True`` (error-feedback codec): gfinalize takes the residual
-    right after ``opt_state``, the aggregate is ``aggregate_fn(params,
-    agg_weights, residual) -> (mixed, new_residual)``, a quiet round
-    carries the residual UNCHANGED through the skip branch (nothing was
-    quantized, so no error accrues), dead rows freeze theirs, and the new
-    residual is appended LAST to the outputs."""
+    ``stateful=True`` (error-feedback codec and/or stateful aggregator):
+    gfinalize takes the round state right after ``opt_state``, the
+    aggregate is ``aggregate_fn(params, agg_weights, residual) -> (mixed,
+    new_residual)``, a quiet round carries the state UNCHANGED through
+    the skip branch (nothing was quantized or mixed, so no memory moves),
+    dead rows freeze theirs, and the new state is appended LAST to the
+    outputs."""
     if gate_fn is None:
         gate_fn = _default_gate
 

@@ -198,10 +198,12 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
     ``codec_bits``/``error_feedback`` parameterize the quantizing codecs
     (registry-name or legacy ``compress=`` spellings): payload bit width
     in {8, 4, 1} and error-feedback residual memory. An error-feedback
-    codec is STATEFUL — the returned round_fn then takes the (K,)-leading
-    residual pytree right after ``opt_state`` (``codec.init_state`` builds
-    the zero residual; the pod paths keep each pod's residual resident on
-    that pod) and its aux dict grows ``{"residual": new_residual}``.
+    codec is STATEFUL, and so is a stateful aggregator (``"d2"``'s
+    variance-reduction correction) — the returned round_fn then takes the
+    (K,)-leading round-state pytree right after ``opt_state``
+    (``aggregator.init_round_state(codec, stacked)`` builds the zero
+    state; the pod paths keep each pod's rows resident on that pod) and
+    its aux dict grows ``{"residual": new_state}``.
     """
     from repro.core import api, engine as engine_mod
     from repro.optim.optimizers import get_optimizer as _get_opt
@@ -218,8 +220,12 @@ def make_fused_round_step(cfg, ccfg, *, optimizer="sgd", lowering="scan",
         codec = compress
     codec = api.get_codec(codec, block=compress_block, impl=compress_impl,
                           bits=codec_bits, error_feedback=error_feedback)
-    stateful = getattr(codec, "stateful", False)
     aggregator = api.get_aggregator(aggregator)
+    # the round is stateful when either side carries per-participant
+    # memory: the codec's EF residual and/or the aggregator's state
+    # (D² correction) — one slot, one plumbing
+    stateful = (getattr(codec, "stateful", False)
+                or getattr(aggregator, "stateful", False))
     schedule = api.get_schedule(schedule, ccfg)
     aggregate_fn = aggregator.make_aggregate_fn(
         codec, mesh=mesh, param_specs=param_specs, dynamic=live)

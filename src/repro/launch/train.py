@@ -12,8 +12,10 @@ Usage:
 Round strategy (see repro.core.api): --codec picks the wire format of the
 uploads (exact f32 | leafwise int8 | fused flat-buffer), --aggregator picks
 who averages what (full Eq. 2 | FedAvg-style partial participation with
---partial-m sampled uploads per round | ring gossip), --engine picks the
-round executor, --lr-schedule the Eq. 3 family member (clr | elr |
+--partial-m sampled uploads per round | ring gossip | graph gossip over an
+arbitrary --topology sparse graph | d2 graph gossip with the D² non-IID
+correction), --engine picks the round executor, --lr-schedule the Eq. 3
+family member (clr | elr |
 warmup_clr | cosine; defaults to the legacy --schedule flag), and
 --sync-policy the Eq. 4 rule (ile | fle | divtrigger with --trigger-delta;
 defaults to the legacy --epochs-rule flag). --compress remains the legacy
@@ -163,13 +165,28 @@ def main(argv=None):
                          "carries e' = (x + e) - dequant to the next round "
                          "(recommended at 4/1 bits)")
     ap.add_argument("--aggregator", default="full",
-                    choices=["full", "partial", "ring"],
+                    choices=["full", "partial", "ring", "graph", "d2"],
                     help="aggregation strategy: full = paper Eq. 2; "
                          "partial = FedAvg-style sampled uploads "
                          "(--partial-m per round); ring = one neighbor-"
-                         "exchange gossip step over a fixed ring")
+                         "exchange gossip step over a fixed ring; graph = "
+                         "gossip over --topology; d2 = graph gossip + the "
+                         "D2 variance-reduction correction (non-IID "
+                         "shards)")
     ap.add_argument("--partial-m", type=int, default=2,
                     help="participants sampled per round (partial only)")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "grid2d", "torus", "hypercube",
+                             "exponential", "erdos_renyi", "complete"],
+                    help="gossip graph for --aggregator graph|d2 "
+                         "(repro.core.topology registry): ring cycle | "
+                         "2-D torus | hypercube (K a power of two) | "
+                         "time-varying one-peer exponential | Erdos-Renyi "
+                         "G(K, --er-p) | complete")
+    ap.add_argument("--er-p", type=float, default=0.5,
+                    help="edge probability for --topology erdos_renyi")
+    ap.add_argument("--er-seed", type=int, default=0,
+                    help="graph draw seed for --topology erdos_renyi")
     ap.add_argument("--engine", default="fused", choices=["fused", "python"],
                     help="round engine: fused = one executable per round "
                          "(repro.core.engine); python = reference loop")
@@ -219,6 +236,13 @@ def main(argv=None):
                  f"{args.participants}")
     if args.aggregator == "partial" and args.partial_m < 1:
         ap.error("--partial-m must be >= 1")
+
+    # topology sub-flags only make sense for the graph-structured gossips
+    if args.topology != "ring" and args.aggregator not in ("graph", "d2"):
+        ap.error("--topology requires --aggregator graph|d2")
+    if ((args.er_p != 0.5 or args.er_seed)
+            and args.topology != "erdos_renyi"):
+        ap.error("--er-p/--er-seed require --topology erdos_renyi")
 
     # elastic-membership flag surface: churn sub-flags must match --churn
     if args.churn_events and args.churn != "scripted":
@@ -294,6 +318,15 @@ def main(argv=None):
                                               seed=args.seed)
     elif args.weighted_avg:
         aggregator = api.FullAverage(weights=data.sizes)
+    elif args.aggregator in ("graph", "d2"):
+        from repro.core import topology as topo_mod
+        if args.topology == "erdos_renyi":
+            topo = topo_mod.ErdosRenyiTopology(p=args.er_p,
+                                               seed=args.er_seed)
+        else:
+            topo = topo_mod.get_topology(args.topology)
+        cls = api.D2Gossip if args.aggregator == "d2" else api.GraphGossip
+        aggregator = cls(topology=topo)
     else:
         aggregator = api.get_aggregator(args.aggregator)
     # ragged shards (unequal batch counts): thread the validity mask into

@@ -214,3 +214,56 @@ def test_wire_bytes_equals_encoded_payload(K, shape_idx, name, bits, ef,
         # compare against the K=1 bill, which shares the measurement's view
         billed = codec.wire_bytes(jax.tree.map(lambda t: t[:1], stacked))
     assert billed == actual
+
+
+# graph topologies x K: names valid at any K >= 2 (hypercube constrains
+# K to powers of two and is covered with its own strategy below)
+_TOPO_FACTORIES = (
+    lambda: __import__("repro.core.topology",
+                       fromlist=["RingTopology"]).RingTopology(),
+    lambda: __import__("repro.core.topology",
+                       fromlist=["Grid2DTopology"]).Grid2DTopology(),
+    lambda: __import__("repro.core.topology",
+                       fromlist=["ExponentialTopology"]
+                       ).ExponentialTopology(),
+    lambda: __import__("repro.core.topology",
+                       fromlist=["CompleteTopology"]).CompleteTopology(),
+)
+
+
+@given(st.integers(0, len(_TOPO_FACTORIES)), st.integers(2, 12),
+       st.integers(0, 5),
+       st.lists(st.booleans(), min_size=2, max_size=12))
+@settings(**SETTINGS)
+def test_topology_mixing_matrix_invariants(ti, K, round_index, live_bits):
+    """Every registered topology x K: the all-live mixing matrix is
+    nonnegative, doubly stochastic (rows AND columns sum to 1 +- 1e-6),
+    symmetric when the topology declares itself symmetric, and its
+    spectral gap is > 0 (the graph is connected); any live-masked matrix
+    stays row-stochastic with identity dead rows."""
+    from repro.core import topology as topo
+    if ti == len(_TOPO_FACTORIES):
+        K = 1 << (K.bit_length() - 1)       # hypercube: snap K to 2^m
+        t = topo.HypercubeTopology()
+    else:
+        t = _TOPO_FACTORIES[ti]()
+    t.validate(K)
+    W = t.mixing_matrix(round_index, K)
+    assert W.shape == (K, K) and (W >= 0).all()
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+    if t.symmetric:
+        np.testing.assert_allclose(W, W.T, atol=1e-7)
+    assert t.spectral_gap(K) > 0.0
+    live = np.resize(np.asarray(live_bits, bool), K)
+    if not live.any():
+        live[0] = True
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        Wl = t.mixing_matrix(round_index, K, live=live)
+    assert (Wl >= 0).all()
+    np.testing.assert_allclose(Wl.sum(1), 1.0, atol=1e-6)
+    for k in np.nonzero(~live)[0]:
+        assert Wl[k, k] == 1.0 and np.count_nonzero(Wl[k]) == 1
+    assert (Wl[live][:, ~live] == 0).all()

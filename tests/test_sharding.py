@@ -141,6 +141,41 @@ for nm, agg in (("partial", api.PartialParticipation(m=2, seed=0)),
         float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
         for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want))) < 1e-5
 
+# 4f) graph-structured gossip on the pod mesh: GraphGossip's sparse
+#     per-permutation ppermute specialization and its D2 variant (the
+#     correction tree rides the shard_map sharded like the params) must
+#     match the host-side dense-mixing reference
+for nm, agg in (("graph_hypercube", api.GraphGossip("hypercube")),
+                ("graph_grid2d", api.GraphGossip("grid2d"))):
+    W = jnp.asarray(agg.mixing_matrix(0, K))
+    mesh_fn = agg._make_mesh_aggregate_fn(api.ExactF32(), mesh,
+                                          pspecs_part, "pod")
+    out[f"{nm}_sparse_path_engaged"] = mesh_fn is not None
+    host_fn = agg._make_host_aggregate_fn(api.ExactF32())
+    with compat.use_mesh(mesh):
+        got = jax.jit(mesh_fn)(new_stacked, W)
+    want = host_fn(new_stacked, W)
+    out[f"{nm}_mesh_matches_host"] = max(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want))) < 1e-5
+
+d2 = api.D2Gossip("hypercube")
+W = jnp.asarray(d2.mixing_matrix(0, K))
+corr0 = jax.tree.map(
+    lambda t: 0.01 * jnp.arange(t.size, dtype=jnp.float32
+                                ).reshape(t.shape), new_stacked)
+d2_mesh = d2._make_mesh_aggregate_fn(api.ExactF32(), mesh,
+                                     pspecs_part, "pod")
+out["d2_sparse_path_engaged"] = d2_mesh is not None
+d2_host = d2._make_host_aggregate_fn(api.ExactF32())
+with compat.use_mesh(mesh):
+    gmix, gcorr = jax.jit(d2_mesh)(new_stacked, W, corr0)
+wmix, wcorr = d2_host(new_stacked, W, corr0)
+out["d2_mesh_matches_host"] = max(
+    float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+    for a, b in zip(jax.tree.leaves((gmix, gcorr)),
+                    jax.tree.leaves((wmix, wcorr)))) < 1e-5
+
 # 4e) heterogeneity scenario on the pod mesh: example-count-weighted Eq. 2
 #     rides the shared weighted-psum specialization (matches the host
 #     dense-mixing reference), the flat codec keeps a weighted single-
@@ -283,6 +318,18 @@ def test_leafwise_compressed_average_on_pod_mesh(mesh_results):
 def test_weighted_aggregators_on_pod_mesh(mesh_results):
     assert mesh_results["partial_mesh_matches_host"]
     assert mesh_results["ring_mesh_matches_host"]
+
+
+def test_graph_gossip_on_pod_mesh(mesh_results):
+    assert mesh_results["graph_hypercube_sparse_path_engaged"]
+    assert mesh_results["graph_hypercube_mesh_matches_host"]
+    assert mesh_results["graph_grid2d_sparse_path_engaged"]
+    assert mesh_results["graph_grid2d_mesh_matches_host"]
+
+
+def test_d2_gossip_on_pod_mesh(mesh_results):
+    assert mesh_results["d2_sparse_path_engaged"]
+    assert mesh_results["d2_mesh_matches_host"]
 
 
 def test_heterogeneity_scenario_on_pod_mesh(mesh_results):

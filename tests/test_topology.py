@@ -1,0 +1,414 @@
+"""Communication-topology subsystem (repro.core.topology) and the
+graph-structured gossip aggregators (api.GraphGossip / api.D2Gossip):
+matrix invariants, connectivity guards, liveness routing, the legacy
+RingGossip parity pins, and the D² round-state plumbing."""
+import math
+import os
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import api
+from repro.core import topology as topo
+from repro.core.colearn import CoLearner
+from repro.core.membership import ScriptedChurn
+from repro.checkpoint.io import restore_round_state, save_round_state
+
+
+def tiny_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {"loss": loss}
+
+
+def tiny_params(key=0, d=4):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, 1)), "b": jnp.zeros((1,))}
+
+
+def tiny_batches(K, seed=0, identical=False):
+    k = jax.random.PRNGKey(seed)
+    shape = (1 if identical else K, 3, 8, 4)
+    x = jax.random.normal(k, shape)
+    if identical:
+        x = jnp.broadcast_to(x, (K,) + shape[1:])
+    w_true = jnp.arange(1.0, 5.0)[:, None]
+    return (x, x @ w_true)
+
+
+def max_abs_diff(a, b):
+    return max(float(jnp.abs(jnp.asarray(x, jnp.float32)
+                             - jnp.asarray(y, jnp.float32)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def run_rounds(agg, K=4, rounds=3, engine="python", codec=None,
+               batches=None, **kw):
+    cfg = CoLearnConfig(n_participants=K, T0=1, eta0=0.05, epsilon=0.5,
+                        max_rounds=rounds + 2)
+    learner = CoLearner(cfg, tiny_loss, codec=codec, aggregator=agg,
+                        round_engine=engine, **kw)
+    state = learner.init(tiny_params())
+    b = tiny_batches(K) if batches is None else batches
+    for _ in range(rounds):
+        state = learner.run_round(state, lambda i, j: b)
+    return learner, state
+
+
+# every registered topology with the Ks it is defined at (hypercube needs
+# powers of two; default erdos_renyi draws are only guaranteed connected
+# at the pinned (p, seed) choices below)
+TOPO_CASES = [
+    ("ring", topo.RingTopology(), (1, 2, 3, 4, 5, 8)),
+    ("grid2d", topo.Grid2DTopology(), (1, 2, 3, 4, 6, 8, 9)),
+    ("hypercube", topo.HypercubeTopology(), (1, 2, 4, 8)),
+    ("exponential", topo.ExponentialTopology(), (1, 2, 3, 4, 5, 8)),
+    ("erdos_renyi", topo.ErdosRenyiTopology(p=0.9, seed=2), (2, 4, 6)),
+    ("complete", topo.CompleteTopology(), (1, 2, 3, 5, 8)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Topology invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,t,Ks", TOPO_CASES,
+                         ids=[c[0] for c in TOPO_CASES])
+def test_mixing_matrix_doubly_stochastic(name, t, Ks):
+    """All-live mixing is nonnegative and doubly stochastic (rows AND
+    columns sum to 1 +- 1e-6) at every round of the period; symmetric
+    topologies yield symmetric matrices; spectral gap > 0."""
+    for K in Ks:
+        t.validate(K)
+        for r in range(t.period(K)):
+            W = t.mixing_matrix(r, K)
+            assert W.shape == (K, K) and W.dtype == np.float32
+            assert (W >= 0).all()
+            np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+            np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+            if t.symmetric:
+                np.testing.assert_allclose(W, W.T, atol=1e-7)
+        assert t.spectral_gap(K) > 0.0
+
+
+@pytest.mark.parametrize("name,t,Ks", TOPO_CASES,
+                         ids=[c[0] for c in TOPO_CASES])
+def test_edge_perms_cover_adjacency(name, t, Ks):
+    """Where a permutation decomposition exists, each perm is a whole
+    permutation of {0..K-1} and together they cover the directed edge
+    set exactly once."""
+    for K in Ks:
+        for r in range(t.period(K)):
+            perms = t.edge_perms(r, K)
+            if perms is None:
+                continue
+            A = t.adjacency(r, K)
+            covered = np.zeros((K, K), int)
+            for perm in perms:
+                assert len(perm) == K
+                assert sorted(s for s, _ in perm) == list(range(K))
+                assert sorted(d for _, d in perm) == list(range(K))
+                for s, d in perm:
+                    covered[d, s] += 1
+            assert (covered[A] == 1).all(), (name, K, r)
+            assert (covered[~A] == 0).all(), (name, K, r)
+
+
+@pytest.mark.parametrize("name,t,Ks", TOPO_CASES,
+                         ids=[c[0] for c in TOPO_CASES])
+def test_live_masked_matrix_row_stochastic(name, t, Ks):
+    """Liveness keeps every row stochastic, gives dead rows identity
+    carries, and never mixes a live row with a dead column."""
+    for K in [k for k in Ks if k >= 3]:
+        live = np.ones(K, bool)
+        live[1] = False
+        for r in range(t.period(K)):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                W = t.mixing_matrix(r, K, live=live)
+            assert (W >= 0).all()
+            np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+            assert W[1, 1] == 1.0 and np.count_nonzero(W[1]) == 1
+            assert (W[live][:, ~live] == 0).all()
+        # sole survivor: identity row
+        alone = np.zeros(K, bool)
+        alone[0] = True
+        W = t.mixing_matrix(0, K, live=alone)
+        assert W[0, 0] == 1.0 and np.count_nonzero(W[0]) == 1
+
+
+def test_connectivity_guard_rejects_disconnected():
+    with pytest.raises(ValueError, match="disconnected at K=4"):
+        topo.ErdosRenyiTopology(p=0.05, seed=0).validate(4)
+    # the error carries the reseed hint
+    with pytest.raises(ValueError, match="different seed or a larger p"):
+        topo.ErdosRenyiTopology(p=0.05, seed=0).validate(4)
+
+
+def test_hypercube_rejects_non_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        topo.HypercubeTopology().validate(6)
+
+
+def test_component_split_warns_and_mixes_blockwise():
+    """2x2 torus with the diagonal pair {0, 3} live: no surviving edge
+    connects them, so the live subgraph is split — mixing degrades to
+    identity (component-wise) and a RuntimeWarning is logged."""
+    t = topo.Grid2DTopology()
+    live = np.array([True, False, False, True])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        W = t.mixing_matrix(0, 4, live=live)
+    assert any("component-wise" in str(x.message) for x in w)
+    np.testing.assert_array_equal(W, np.eye(4, dtype=np.float32))
+
+
+def test_ring_matrix_pins_legacy_gossip():
+    """RingTopology (and so RingGossip) reproduces the pre-topology
+    hand-rolled matrices bit-for-bit: all-live 0.5/0.5 predecessor rows,
+    and liveness routing to the nearest LIVE predecessor."""
+    t = topo.RingTopology()
+    for K in (1, 2, 3, 5, 8):
+        W = t.mixing_matrix(0, K)
+        ref = np.zeros((K, K), np.float32)
+        for k in range(K):
+            ref[k, k] += 0.5
+            ref[k, (k - 1) % K] += 0.5
+        np.testing.assert_array_equal(W, ref)
+    # routed live case: 0 receives from 4 (skipping dead 1..2 is wrap),
+    # 3 receives from 0, 4 receives from 3; dead rows identity
+    W = t.mixing_matrix(0, 5, live=[1, 0, 0, 1, 1])
+    assert W[0, 4] == 0.5 and W[3, 0] == 0.5 and W[4, 3] == 0.5
+    assert W[1, 1] == 1.0 and W[2, 2] == 1.0
+    with pytest.raises(ValueError, match="zero live participants"):
+        t.mixing_matrix(3, 4, live=[0, 0, 0, 0])
+
+
+def test_exponential_period_union_is_exponential_graph():
+    t = topo.ExponentialTopology()
+    K = 8
+    assert t.period(K) == 3
+    U = t.union_adjacency(K)
+    k = np.arange(K)
+    for d in (1, 2, 4):
+        assert U[k, (k - d) % K].all()
+    assert topo.is_connected(U)
+    # a single round is one offset: degree 1, O(1) wire
+    for r in range(t.period(K)):
+        assert t.degree(r, K) == 1
+
+
+def test_registry_and_get_topology():
+    assert isinstance(topo.get_topology(None), topo.RingTopology)
+    assert isinstance(topo.get_topology("torus"), topo.Grid2DTopology)
+    er = topo.get_topology("erdos_renyi", p=0.9, seed=2)
+    assert er.p == 0.9 and er.seed == 2
+    inst = topo.HypercubeTopology()
+    assert topo.get_topology(inst) is inst
+    with pytest.raises(KeyError, match="unknown topology"):
+        topo.get_topology("moebius")
+    with pytest.raises(TypeError):
+        topo.get_topology(3)
+
+
+# ---------------------------------------------------------------------------
+# GraphGossip / D2Gossip aggregators
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["python", "fused"])
+@pytest.mark.parametrize("codec", ["exact", "fused"])
+def test_ring_bit_identical_to_graph_ring(engine, codec):
+    """The acceptance pin: all-live "ring" (the legacy aggregator, now a
+    GraphGossip subclass) is bit-identical to GraphGossip(RingTopology())
+    on both engines x exact/flat codecs."""
+    _, s1 = run_rounds(api.RingGossip(), engine=engine, codec=codec)
+    _, s2 = run_rounds(api.GraphGossip("ring"), engine=engine, codec=codec)
+    assert max_abs_diff(s1["params"], s2["params"]) == 0.0
+    assert ([l.comm_bytes for l in s1["log"]]
+            == [l.comm_bytes for l in s2["log"]])
+
+
+def test_ring_gossip_is_fixed_to_ring_topology():
+    assert isinstance(api.RingGossip().topology, topo.RingTopology)
+    with pytest.raises(ValueError, match="fixed to the ring"):
+        api.RingGossip(topology="grid2d")
+
+
+@pytest.mark.parametrize(
+    "tname", ["ring", "grid2d", "hypercube", "complete", "exponential"])
+def test_d2_matches_plain_gossip_on_identical_shards(tname):
+    """With identical shards every local model stays identical, so the D²
+    correction is (up to the f32 weight-row rounding) zero and D² IS
+    plain gossip — exactly zero for the ring's dyadic weights."""
+    b = tiny_batches(4, identical=True)
+    _, sg = run_rounds(api.GraphGossip(tname), batches=b)
+    _, sd = run_rounds(api.D2Gossip(tname), batches=b)
+    tol = 0.0 if tname == "ring" else 1e-5
+    assert max_abs_diff(sg["params"], sd["params"]) <= tol
+    corr_max = max(float(jnp.abs(t).max())
+                   for t in jax.tree.leaves(sd["residual"]))
+    assert corr_max <= tol
+
+
+def test_d2_matches_plain_gossip_on_iid_shards():
+    """Satellite pin: on IID (statistically interchangeable) shards D²
+    tracks plain gossip within tolerance — the variance it removes is the
+    NON-IID drift. Compared on the consensus mean: doubly-stochastic
+    mixing preserves it and the D² corrections sum to zero, so the two
+    runs drive it to the same optimum."""
+    b = tiny_batches(4, seed=3)          # same distribution per shard
+    _, sg = run_rounds(api.GraphGossip("grid2d"), batches=b, rounds=8)
+    _, sd = run_rounds(api.D2Gossip("grid2d"), batches=b, rounds=8)
+    mg = jax.tree.map(lambda t: t.mean(0), sg["params"])
+    md = jax.tree.map(lambda t: t.mean(0), sd["params"])
+    scale = max(float(jnp.abs(t).max()) for t in jax.tree.leaves(mg))
+    assert max_abs_diff(mg, md) <= 0.01 * max(scale, 1.0)
+    for s in (sg, sd):                   # both converge on the tiny task
+        assert float(np.mean(s["log"][-1].local_losses)) < 1e-4
+
+
+@pytest.mark.parametrize("engine", ["python", "fused"])
+def test_d2_checkpoint_resume_parity(engine):
+    """Acceptance pin: resumed-vs-uninterrupted parity for the D² state
+    across a checkpoint (the correction rides the PR-7 residual slot and
+    must survive save/restore bit-for-bit)."""
+    b = tiny_batches(4)
+
+    def fresh():
+        cfg = CoLearnConfig(n_participants=4, T0=1, eta0=0.05,
+                            epsilon=0.5, max_rounds=6)
+        learner = CoLearner(cfg, tiny_loss,
+                            aggregator=api.D2Gossip("grid2d"),
+                            round_engine=engine)
+        return learner, learner.init(tiny_params())
+
+    l1, s1 = fresh()
+    for _ in range(4):
+        s1 = l1.run_round(s1, lambda i, j: b)
+    l2, s2 = fresh()
+    for _ in range(2):
+        s2 = l2.run_round(s2, lambda i, j: b)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck")
+        save_round_state(path, s2)
+        l3, s3 = fresh()
+        s3 = restore_round_state(path, s3)
+    for _ in range(2):
+        s3 = l3.run_round(s3, lambda i, j: b)
+    assert max_abs_diff(s1["params"], s3["params"]) == 0.0
+    assert max_abs_diff(s1["residual"], s3["residual"]) == 0.0
+
+
+def test_d2_with_error_feedback_codec_composes():
+    """An EF codec and D² both carry round state: they ride together as
+    {"corr", "res"} through the same slot, and restart_participant zeroes
+    participant k's row of BOTH."""
+    codec = api.LeafwiseIntN(bits=4, error_feedback=True)
+    learner, state = run_rounds(api.D2Gossip("grid2d"), codec=codec,
+                                engine="fused", rounds=2)
+    assert set(state["residual"].keys()) == {"corr", "res"}
+    state = learner.restart_participant(state, 2)
+    assert max(float(jnp.abs(t[2]).max())
+               for t in jax.tree.leaves(state["residual"])) == 0.0
+    assert max(float(jnp.abs(t[0]).max())
+               for t in jax.tree.leaves(state["residual"])) > 0.0
+
+
+def test_d2_under_churn_freezes_dead_rows():
+    """Elastic membership: a dead slot's correction rows are frozen (it
+    neither uploads nor mixes) and thaw when the slot rejoins."""
+    churn = ScriptedChurn(events=(("crash", 2, 1), ("rejoin", 4, 1)))
+    cfg = CoLearnConfig(n_participants=4, T0=1, eta0=0.05, epsilon=0.5,
+                        max_rounds=6)
+    learner = CoLearner(cfg, tiny_loss, aggregator=api.D2Gossip("grid2d"),
+                        round_engine="fused", churn=churn)
+    state = learner.init(tiny_params())
+    b = tiny_batches(4)
+    frozen = None
+    for i in range(5):
+        state = learner.run_round(state, lambda i, j: b)
+        row = jax.tree.map(lambda t: np.asarray(t[1]), state["residual"])
+        if i == 2:
+            frozen = row
+        elif i == 3:
+            assert max_abs_diff(frozen, row) == 0.0
+    assert all(np.isfinite(l.local_losses).all() for l in state["log"])
+
+
+def test_d2_quiet_divergence_trigger_rounds_carry_state():
+    """A quiet DivergenceTrigger round skips the mix: the D² correction
+    must pass through the skip branch unchanged."""
+    learner, state = run_rounds(
+        api.D2Gossip("grid2d"), engine="fused", rounds=1,
+        sync_policy=api.DivergenceTrigger(delta=1e9))
+    r0 = jax.tree.map(np.asarray, state["residual"])
+    state = learner.run_round(state, lambda i, j: tiny_batches(4))
+    assert max_abs_diff(r0, state["residual"]) == 0.0
+    assert not any(l.synced for l in state["log"])
+
+
+def test_comm_bytes_scale_with_degree_not_K():
+    """Acceptance pin: graph gossip bills O(degree) encoded models per
+    participant — the ring's bill is K-independent, the complete graph's
+    is (K-1)-proportional, the hypercube's log2(K)-proportional."""
+    codec = api.ExactF32()
+    for K in (4, 8):
+        stacked = {"w": jnp.zeros((K, 64))}
+        wire = codec.wire_bytes(stacked)
+        assert (api.GraphGossip("ring").comm_bytes(codec, stacked, 0)
+                == 2 * wire)
+        assert (api.GraphGossip("complete").comm_bytes(codec, stacked, 0)
+                == 2 * (K - 1) * wire)
+        assert (api.GraphGossip("hypercube").comm_bytes(codec, stacked, 0)
+                == 2 * int(math.log2(K)) * wire)
+    # sole survivor bills zero, like the legacy ring
+    stacked = {"w": jnp.zeros((4, 64))}
+    assert api.GraphGossip("grid2d").comm_bytes(
+        codec, stacked, 0, live=[1, 0, 0, 0]) == 0
+
+
+def test_mixing_matrix_cached_per_round_key():
+    """Satellite pin: static graphs build their dense matrix once — the
+    same (immutable) array comes back every round; a time-varying graph
+    keys the cache by round-within-period."""
+    g = api.GraphGossip("grid2d")
+    W1, W2 = g.mixing_matrix(0, 6), g.mixing_matrix(5, 6)
+    assert W1 is W2 and not W1.flags.writeable
+    e = api.GraphGossip("exponential")
+    assert e.mixing_matrix(0, 8) is e.mixing_matrix(3, 8)   # period 3
+    assert e.mixing_matrix(0, 8) is not e.mixing_matrix(1, 8)
+    # live sets key separately and do not clobber the all-live entry
+    Wl = g.mixing_matrix(0, 6, live=[1, 1, 1, 1, 1, 0])
+    assert Wl is not W1 and g.mixing_matrix(0, 6) is W1
+
+
+def test_learner_construction_rejects_disconnected_topology():
+    with pytest.raises(ValueError, match="disconnected"):
+        run_rounds(api.GraphGossip(topo.ErdosRenyiTopology(p=0.05,
+                                                           seed=0)),
+                   rounds=0)
+
+
+def test_graph_gossip_time_varying_runs_and_converges():
+    """The exponential one-peer graph runs end-to-end on the fused engine
+    (per-round matrix as traced data) with O(1) comm per round."""
+    learner, state = run_rounds(api.GraphGossip("exponential"),
+                                engine="fused", rounds=4)
+    losses = [float(np.mean(l.local_losses)) for l in state["log"]]
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]
+    wire = learner.codec.wire_bytes(state["params"])
+    assert all(l.comm_bytes == 2 * wire for l in state["log"])
+    assert not learner.aggregator.static_comm
+
+
+def test_aggregator_registry_names():
+    assert isinstance(api.get_aggregator("graph"), api.GraphGossip)
+    assert isinstance(api.get_aggregator("d2"), api.D2Gossip)
+    g = api.get_aggregator("graph", topology="hypercube")
+    assert g.name == "graph[hypercube]"
+    assert api.get_aggregator("d2", topology="grid2d").name == "d2[grid2d]"
+    assert api.get_aggregator("ring").name == "ring"
