@@ -13,10 +13,19 @@ The committed result lives in benchmarks/BENCH_heterogeneity.json;
 invariants (exact example coverage, finite accuracies, weighted==uniform
 bit-closeness on equal shards) without timing anything.
 
+Drift sweep (``--drift`` — ISSUE 9 continuous operation): abrupt-task-
+switch severity × sync policy (FLE every-round | ILE doubling |
+divergence-triggered). Each cell trains on a drifting ``ShardStream`` and
+scores per round on the drifted test set; rows report pre-drift / crater /
+recovered accuracy plus how many rounds actually synced (the comm the
+trigger saves). Committed in benchmarks/BENCH_drift.json.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.ablation                # Figure 2 CSV
   PYTHONPATH=src python -m benchmarks.ablation --heterogeneity \
       [--out benchmarks/BENCH_heterogeneity.json]
+  PYTHONPATH=src python -m benchmarks.ablation --drift \
+      [--out benchmarks/BENCH_drift.json]
   PYTHONPATH=src python -m benchmarks.ablation --check        # CI smoke
 """
 from __future__ import annotations
@@ -97,6 +106,59 @@ def heterogeneity(model="resnet_tiny", rounds=5, n=4000, K=5, seed=0,
     return rows
 
 
+#: drift sweep axes: relabeled label-space fraction x Eq.4 sync policy
+SEVERITIES = (0.5, 1.0)
+POLICIES = ("fle", "ile", "divtrigger")
+
+
+def drift_sweep(model="resnet_tiny", rounds=10, drift_round=6, n=2000, K=4,
+                seed=0, delta=0.12, quiet=False):
+    """Drift severity x sync policy: recovery after an abrupt task switch.
+
+    One row per (severity, policy) cell, trained on a ``ShardStream`` with
+    ``AbruptDrift(at_round=drift_round, severity=...)`` and evaluated per
+    round on the drifted test set (``run_colearn(drift=...)`` plumbing).
+    The headline: ``divtrigger`` recovers like the every-round policies
+    while syncing only the rounds the divergence forces — the quiet-round
+    comm it skips is the benefit measured here.
+    """
+    from repro.core import api
+    from repro.data.stream import AbruptDrift
+
+    xtr, ytr = image_like(seed, n=n)
+    xte, yte = image_like(seed + 1000, n=max(400, n // 4))
+    init_fn, apply_fn = IMAGE_MODELS[model]
+    rows = []
+    for severity in SEVERITIES:
+        for policy in POLICIES:
+            kw = (dict(sync_policy=api.DivergenceTrigger(delta=delta))
+                  if policy == "divtrigger" else dict(epochs_rule=policy))
+            r = run_colearn(init_fn, apply_fn, (xtr, ytr), (xte, yte),
+                            K=K, rounds=rounds, T0=2, eta0=0.05,
+                            epsilon=0.03, batch_size=32, seed=seed,
+                            engine="fused",
+                            drift=AbruptDrift(at_round=drift_round,
+                                              severity=severity), **kw)
+            # acc[i] is scored at stream round i+1: the drift first hits
+            # the eval at index drift_round - 1
+            post = r["acc"][drift_round - 1:]
+            rows.append({"model": model, "severity": severity,
+                         "policy": policy, "drift_round": drift_round,
+                         "pre_drift_acc": max(r["acc"][:drift_round - 1]),
+                         "crater_acc": min(post),
+                         "recovered_acc": max(post),
+                         "final_acc": r["acc"][-1], "curve": r["acc"],
+                         "synced_rounds": r["synced_rounds"],
+                         "total_comm_bytes": r["total_comm_bytes"]})
+            if not quiet:
+                row = rows[-1]
+                print(f"drift,{model},sev={severity},{policy},"
+                      f"{row['pre_drift_acc']:.3f}->{row['crater_acc']:.3f}"
+                      f"->{row['recovered_acc']:.3f},"
+                      f"synced={row['synced_rounds']}/{rounds}", flush=True)
+    return rows
+
+
 def check(quiet=False):
     """CI smoke: reduced sweep, structural invariants only (no timings)."""
     n, K, rounds = 800, 4, 2
@@ -133,8 +195,11 @@ def main(argv=None):
     ap.add_argument("--heterogeneity", action="store_true",
                     help="run the alpha x weighting sweep instead of the "
                          "Figure 2 combo ablation")
+    ap.add_argument("--drift", action="store_true",
+                    help="run the drift severity x sync policy sweep "
+                         "(abrupt task switch, recovery per policy)")
     ap.add_argument("--out", default="",
-                    help="write the heterogeneity rows as JSON")
+                    help="write the heterogeneity/drift rows as JSON")
     ap.add_argument("--check", action="store_true",
                     help="CI smoke: reduced heterogeneity sweep, "
                          "structural invariants only")
@@ -142,6 +207,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.check:
         return check()
+    if args.drift:
+        rows = drift_sweep()
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"task": "image_like", "drift": "abrupt",
+                           "rows": rows}, f, indent=1)
+            print(f"wrote {args.out}")
+        return 0
     if args.heterogeneity:
         rows = heterogeneity(rounds=args.rounds)
         if args.out:

@@ -61,7 +61,8 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 compress=None, codec=None, aggregator=None,
                 lr_schedule=None, sync_policy=None, partition="iid",
                 dirichlet_alpha=1.0, sizes=None, weighted=False,
-                churn=None, liveness_aware=True, k_max=None):
+                churn=None, liveness_aware=True, k_max=None,
+                drift=None, stream=None, on_round_end=None):
     """Returns dict with per-round accuracy, controller history, comm stats.
 
     engine: "python" (reference per-epoch loop) or "fused" (one compiled
@@ -88,15 +89,35 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     (the naive ablation — dead rows pollute the mean); ``k_max`` reserves
     standby slots beyond K (the extra slots cycle the real shards). The
     result dict gains ``live`` (per-round live counts) when churn is on.
+
+    Continuous operation: ``drift`` takes a ``repro.data.stream`` schedule
+    (or registry name) and stages each round on a drifting ``ShardStream``
+    instead of the frozen stack — per-round accuracy is then measured on
+    the test set AS THAT ROUND'S DISTRIBUTION SEES IT (``transform_test``),
+    the honest serving metric under drift. ``stream`` passes a prebuilt
+    ``ShardStream`` directly (overrides the partition kwargs).
+    ``on_round_end(learner, state)`` fires after every round's state
+    transition — the ``ModelBank.publish_from`` hook.
     """
     if compress is not None:
         if codec is not None:
             raise ValueError("pass codec= or the legacy compress=, not both")
         codec = compress
-    data = build_participant_data(train, K, batch_size, seed,
-                                  partition=partition,
-                                  dirichlet_alpha=dirichlet_alpha,
-                                  sizes=sizes, k_max=k_max)
+    if stream is not None:
+        if drift is not None:
+            raise ValueError("pass stream= (prebuilt) or drift=, not both")
+        data = stream
+    elif drift is not None:
+        from repro.data.stream import ShardStream
+        data = ShardStream(list(train), K, batch_size, seed, drift=drift,
+                           partition=partition,
+                           dirichlet_alpha=dirichlet_alpha, sizes=sizes,
+                           k_max=k_max)
+    else:
+        data = build_participant_data(train, K, batch_size, seed,
+                                      partition=partition,
+                                      dirichlet_alpha=dirichlet_alpha,
+                                      sizes=sizes, k_max=k_max)
     if k_max is not None:
         K = k_max
     if weighted:
@@ -127,10 +148,15 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
                 bx, by = bx[:, :steps_cap], by[:, :steps_cap]
             return (jnp.asarray(bx), jnp.asarray(by))
 
-        state = learner.run_round(state, eb)
+        state = learner.run_round(state, eb, on_round_end=on_round_end)
         times.append(time.time() - t0)
         Ts.append(state["log"][-1].T)
-        accs.append(accuracy(apply_fn, learner.shared_model(state), *test))
+        # under drift, score against the test set as THIS round's
+        # distribution sees it (content drift moves the eval too)
+        round_test = (data.transform_test(test, state["round"])
+                      if hasattr(data, "transform_test") else test)
+        accs.append(accuracy(apply_fn, learner.shared_model(state),
+                             *round_test))
     # per-round wire cost of a SYNCED round (round 0 may be quiet and bill
     # 0 under a divergence-gated policy); totals cover the whole run
     per_round = next((l.comm_bytes for l in state["log"] if l.synced), 0)

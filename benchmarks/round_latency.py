@@ -334,12 +334,49 @@ def check_retrace():
         f"stateful finalize retraced under D2+time-varying topology: " \
         f"{n_final7} compiles"
 
+    # 8) streaming drift restage: a ShardStream re-stages DIFFERENT shard
+    #    contents every round (covariate rotation re-transforms, label
+    #    shift re-deals the assignment), but shapes are a round-0
+    #    invariant — the drifted snapshots ride into the executables as
+    #    traced arguments, so a drifting stream never recompiles
+    from repro.data.stream import CovariateDrift, LabelShift, ShardStream
+    x8 = _np.asarray(jax.random.normal(k, (32, 4)), _np.float32)
+    y8 = _np.arange(32) % 4
+    for drift8 in (CovariateDrift(rate=0.3), LabelShift(rate=0.25)):
+        stream8 = ShardStream([x8, y8], 2, 4, 0, drift=drift8)
+        # the stream actually moved: round 3 stages different contents
+        b0 = stream8.epoch_batches(0, 0)
+        b3 = stream8.epoch_batches(3, 0)
+        assert not all(_np.array_equal(a, b) for a, b in zip(b0, b3)), \
+            f"{drift8.name} staged identical contents at rounds 0 and 3"
+        cfg8 = CoLearnConfig(n_participants=2, T0=2, epsilon=0.01,
+                             epochs_rule="ile", max_rounds=8)
+        learner8 = CoLearner(cfg8, zero_loss,
+                             round_engine=api.FusedEngine(chunk=2))
+        state8 = learner8.init(params)
+        for _ in range(4):
+            state8 = learner8.run_round(
+                state8,
+                lambda i, j: tuple(map(jnp.asarray,
+                                       stream8.epoch_batches(i, j))))
+        assert [l.T for l in state8["log"]] == [2, 2, 4, 8], \
+            [l.T for l in state8["log"]]
+        n_epochs8 = learner8._fused_epochs._cache_size()
+        n_final8 = learner8._fused_finalize._cache_size()
+        assert n_epochs8 == 1, \
+            f"chunk executable retraced under {drift8.name} drift: " \
+            f"{n_epochs8} compiles"
+        assert n_final8 == 1, \
+            f"finalize retraced under {drift8.name} drift: " \
+            f"{n_final8} compiles"
+
     print("check-retrace OK: chunk/finalize/round executables compiled "
           "once across an ILE doubling, 4 schedule swaps, a warmup "
           "ramp, the masked+weighted heterogeneity scenario, "
           "per-round membership churn, the stateful error-feedback "
-          "wire (residual traced through both engine paths), and a "
-          "per-round time-varying gossip topology (plain and D²)")
+          "wire (residual traced through both engine paths), a "
+          "per-round time-varying gossip topology (plain and D²), and "
+          "a drifting ShardStream restaged every round")
     return 0
 
 

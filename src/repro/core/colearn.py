@@ -325,7 +325,7 @@ class CoLearner:
                   if self._churn_active else ())
         return self.sync_policy.round_delta(events)
 
-    def run_round(self, state, epoch_batches_fn):
+    def run_round(self, state, epoch_batches_fn, on_round_end=None):
         """One communication round.
 
         epoch_batches_fn(round, epoch) -> (K, n_batches, B, ...) pytree for
@@ -338,6 +338,11 @@ class CoLearner:
         round mask is stepped into ``state["membership"]`` (logging
         join/leave events) and every slot that joined this round warm-
         starts from the last synced shared model before any epoch runs.
+
+        ``on_round_end(learner, state)``, when given, fires after the
+        round's state transition lands — the publication hook for
+        continuous operation (e.g. ``ModelBank.publish_from``). Its
+        return value is ignored; the round's state is returned unchanged.
         """
         if self._churn_active:
             i = state["round"]
@@ -351,7 +356,10 @@ class CoLearner:
                 # warm join: restart local training from the last SYNCED
                 # shared model (paper failure semantics, elastic form)
                 self.restart_participant(state, k)
-        return self._runner.run_round(state, epoch_batches_fn)
+        state = self._runner.run_round(state, epoch_batches_fn)
+        if on_round_end is not None:
+            on_round_end(self, state)
+        return state
 
     def _finish_round(self, state, i, T_i, rel, local_losses, lr_first,
                       lr_last, averaged, fresh_opt, new_avg, synced=True,

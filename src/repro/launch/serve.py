@@ -1,7 +1,8 @@
 """Batched KV-cache decode driver (CPU-scale serving of a reduced model).
 
-Prefills a batch of prompts then greedily decodes, exercising the same
-serve_step the dry-run lowers at production shapes.
+Thin CLI over :class:`repro.serving.ServeLoop` — prefills a batch of
+prompts then greedily decodes through the loop's single jitted step.
+``launch/continuous.py`` drives the same loop interleaved with training.
 
 Usage: PYTHONPATH=src python -m repro.launch.serve --arch jamba-v0.1-52b \
            --batch 4 --prompt-len 16 --new-tokens 24
@@ -9,22 +10,20 @@ Usage: PYTHONPATH=src python -m repro.launch.serve --arch jamba-v0.1-52b \
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import transformer as tr
+from repro.serving import ServeLoop
 
 
-def prefill_into_cache(params, cfg, tokens, cache):
-    """Sequential prefill via serve_step (token-by-token; CPU-scale)."""
-    logits = None
-    for t in range(tokens.shape[1]):
-        logits, cache = tr.decode_step(params, cfg, cache,
-                                       tokens[:, t:t + 1], jnp.int32(t))
-    return logits, cache
+def prefill_into_cache(loop: ServeLoop, tokens):
+    """Sequential prefill through the loop's jitted step (one compiled
+    executable reused per position — not the eager per-token dispatch
+    this driver used to pay)."""
+    return loop.prefill(tokens)
 
 
 def main(argv=None):
@@ -36,30 +35,23 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.max_seq < args.prompt_len + args.new_tokens:
+        ap.error(f"--max-seq {args.max_seq} < --prompt-len {args.prompt_len}"
+                 f" + --new-tokens {args.new_tokens}: decode would index "
+                 "past the KV cache")
 
     cfg = get_smoke_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = tr.init_params(key, cfg, jnp.float32)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    cache = tr.init_cache(cfg, args.batch, args.max_seq, jnp.float32)
 
-    step = jax.jit(lambda p, c, t, i: tr.decode_step(p, cfg, c, t, i))
-    t0 = time.time()
-    logits, cache = prefill_into_cache(params, cfg, prompts, cache)
-    t1 = time.time()
-    out = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    for i in range(args.new_tokens):
-        out.append(tok)
-        logits, cache = step(params, cache, tok,
-                             jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    gen = jnp.concatenate(out, axis=1)
-    t2 = time.time()
-    print(f"{cfg.name}: prefill {args.prompt_len} tok in {t1-t0:.2f}s, "
-          f"decoded {args.new_tokens} tok in {t2-t1:.2f}s "
-          f"({args.batch*args.new_tokens/(t2-t1):.1f} tok/s batch={args.batch})")
+    loop = ServeLoop(cfg, params, batch=args.batch, max_seq=args.max_seq)
+    gen, stats = loop.generate(prompts, args.new_tokens)
+    print(f"{cfg.name}: prefill {args.prompt_len} tok in "
+          f"{stats['prefill_s']:.2f}s, decoded {args.new_tokens} tok in "
+          f"{stats['decode_s']:.2f}s ({stats['tokens_per_s']:.1f} tok/s "
+          f"batch={args.batch}, {stats['compile_count']} compile)")
     print("generated[0]:", gen[0].tolist())
     return 0
 

@@ -1,0 +1,14 @@
+"""Continuous-operation serving subsystem: train -> publish -> hot-swap.
+
+``ModelBank`` (``repro.serving.bank``) versions each round's shared model
+(or the stacked ensemble baseline) with staleness metadata and an atomic
+swap; ``ServeLoop`` (``repro.serving.loop``) is the reusable batched
+KV-cache decode loop that polls the bank and hot-swaps params into its
+one compiled decode step between rounds. ``launch/continuous.py`` closes
+the loop end-to-end; ``benchmarks/serving.py`` measures it.
+"""
+from repro.serving.bank import MODES, ModelBank, ModelSnapshot
+from repro.serving.loop import ServeLoop, serve_rounds_stats
+
+__all__ = ["MODES", "ModelBank", "ModelSnapshot", "ServeLoop",
+           "serve_rounds_stats"]

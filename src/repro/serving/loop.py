@@ -1,0 +1,154 @@
+"""ServeLoop: reusable batched KV-cache decode with between-round hot-swap.
+
+The serving half of the continuous-operation loop. One ``ServeLoop`` owns
+ONE jitted decode step (compiled against a fixed config / batch / cache
+geometry); the model parameters are plain arguments to that step, so
+swapping to a newly-published ``ModelBank`` version is a pointer update —
+same treedef and shapes mean the next decode reuses the already-compiled
+executable (compile count asserted flat across swaps in
+``benchmarks/serving.py --check`` and tests/test_serving.py).
+
+Prefill reuses the SAME jitted step, one token at a time with the
+position as a traced scalar: the old ``launch/serve.py`` called the
+un-jitted ``tr.decode_step`` per prefill token, paying an op-by-op eager
+dispatch for every prompt position; here prompt length costs one compiled
+call per token and zero extra compiles.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+
+
+def _tree_signature(params):
+    """(treedef, leaf shapes+dtypes) — the swap-compatibility contract."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return treedef, tuple((t.shape, jnp.asarray(t).dtype) for t in leaves)
+
+
+class ServeLoop:
+    """Batched greedy decode against a KV cache, hot-swappable params.
+
+    ``generate(prompts, new_tokens)`` validates that the prompt and the
+    requested continuation fit the cache (``max_seq``) before touching the
+    device, prefills through the jitted step, then decodes greedily.
+    ``poll(bank)`` swaps in the bank's current version when it is newer
+    than what is being served; ``swap(params, version)`` is the low-level
+    entry (used by tests and by restarts restoring from a persisted bank).
+    """
+
+    def __init__(self, cfg, params, *, batch: int, max_seq: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.batch = int(batch)
+        self.max_seq = int(max_seq)
+        self.dtype = dtype
+        self.params = params
+        self.version = 0          # bank version currently served (0 = init)
+        self._signature = _tree_signature(params)
+        self._step = jax.jit(
+            lambda p, c, t, i: tr.decode_step(p, cfg, c, t, i))
+        #: lifetime counters for the benchmark's tokens/s-during-training
+        self.tokens_served = 0
+        self.batches_served = 0
+
+    # -- hot swap ------------------------------------------------------------
+    def compile_count(self) -> int:
+        """Distinct compiled decode executables (must stay 1 across
+        swaps — params are traced arguments, never constants)."""
+        return self._step._cache_size()
+
+    def swap(self, params, version: int) -> None:
+        """Atomically point the loop at new params (same treedef/shapes)."""
+        sig = _tree_signature(params)
+        if sig[0] != self._signature[0] or sig[1] != self._signature[1]:
+            raise ValueError(
+                "hot-swap params have a different treedef/shapes than the "
+                "compiled decode step was built for — that swap would "
+                "recompile; publish a matching model or build a new loop")
+        self.params = params
+        self.version = int(version)
+
+    def poll(self, bank) -> bool:
+        """Swap to the bank's current version if newer. Returns whether a
+        swap happened. Ensemble-mode snapshots are not decodable (K
+        stacked replicas, one cache) — the bank's own ``predict_logits``
+        serves those; this loop rejects them loudly."""
+        snap = bank.current()
+        if snap is None:
+            return False
+        if snap.mode != "shared":
+            raise ValueError(
+                f"ServeLoop decodes a single shared model; bank publishes "
+                f"mode={snap.mode!r} (use ModelBank.predict_logits for the "
+                "ensemble serving path)")
+        if snap.version <= self.version:
+            return False
+        self.swap(snap.params, snap.version)
+        return True
+
+    # -- decode --------------------------------------------------------------
+    def prefill(self, prompts):
+        """Prefill a (B, P) prompt batch through the jitted step; returns
+        (last logits, cache). One compiled executable, P calls."""
+        cache = tr.init_cache(self.cfg, prompts.shape[0], self.max_seq,
+                              self.dtype)
+        logits = None
+        for t in range(prompts.shape[1]):
+            logits, cache = self._step(self.params, cache,
+                                       prompts[:, t:t + 1], jnp.int32(t))
+        return logits, cache
+
+    def generate(self, prompts, new_tokens: int):
+        """Greedy-decode ``new_tokens`` continuations for a prompt batch.
+
+        Returns ``(tokens (B, new_tokens), stats)`` where stats carries
+        prefill/decode wall seconds, tokens/s, and the served version.
+        """
+        prompts = jnp.asarray(prompts)
+        B, P = prompts.shape
+        if B != self.batch:
+            raise ValueError(f"prompt batch {B} != loop batch {self.batch}")
+        if P + new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt_len {P} + new_tokens {new_tokens} overruns the "
+                f"KV cache (max_seq={self.max_seq}) — decode would index "
+                "past the cache")
+        t0 = time.perf_counter()
+        logits, cache = self.prefill(prompts)
+        t1 = time.perf_counter()
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(new_tokens):
+            out.append(tok)
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(P + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        gen = jnp.concatenate(out, axis=1)
+        gen.block_until_ready()
+        t2 = time.perf_counter()
+        self.tokens_served += B * new_tokens
+        self.batches_served += 1
+        decode_s = max(t2 - t1, 1e-9)
+        stats = {"prefill_s": t1 - t0, "decode_s": t2 - t1,
+                 "tokens": B * new_tokens,
+                 "tokens_per_s": B * new_tokens / decode_s,
+                 "version": self.version,
+                 "compile_count": self.compile_count()}
+        return gen, stats
+
+
+def serve_rounds_stats(per_round):
+    """Aggregate per-round ``generate`` stats dicts into the benchmark's
+    summary row (total tokens, mean tokens/s, served versions)."""
+    toks = sum(s["tokens"] for s in per_round)
+    secs = sum(s["decode_s"] for s in per_round)
+    return {"rounds_served": len(per_round),
+            "total_tokens": toks,
+            "tokens_per_s_mean": toks / max(secs, 1e-9),
+            "versions": [s["version"] for s in per_round]}

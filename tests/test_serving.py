@@ -1,0 +1,441 @@
+"""Continuous-operation subsystem: ShardStream/DriftSchedule determinism
+and invariants, ModelBank publication/staleness, ServeLoop hot-swap, and
+the ensemble serving path (core.ensemble was previously untested)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoLearnConfig
+from repro.core import api
+from repro.core.colearn import CoLearner
+from repro.core.ensemble import ensemble_accuracy, ensemble_logits
+from repro.checkpoint.io import (restore_pytree, restore_round_state,
+                                 save_pytree, save_round_state)
+from repro.data.pipeline import ParticipantData
+from repro.data import partition as part_mod
+from repro.data.stream import (AbruptDrift, CovariateDrift, DriftSchedule,
+                               LabelShift, NoDrift, ShardStream, get_drift)
+from repro.serving import ModelBank, ServeLoop
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def lin_params(key=0, d=4, C=3):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (d, C)), "b": jnp.zeros((C,))}
+
+
+def lin_apply(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def lin_loss(params, batch):
+    x, y = batch
+    logits = lin_apply(params, x)
+    one_hot = jax.nn.one_hot(y, logits.shape[-1])
+    loss = -jnp.mean(jnp.sum(one_hot * jax.nn.log_softmax(logits), -1))
+    return loss, {"loss": loss}
+
+
+def cls_data(n=48, d=4, C=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.integers(0, C, size=n).astype(np.int64)
+    return x, y
+
+
+def stacked(params_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tiny_lm():
+    from repro.configs import get_smoke_config
+    return get_smoke_config("internlm2-1.8b").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab_size=64, segments=((("gqa:dense",), 1),))
+
+
+# ---------------------------------------------------------------------------
+# core/ensemble (paper Table 2 baseline) — previously untested
+# ---------------------------------------------------------------------------
+def test_ensemble_logits_prob_averaging():
+    K, d, C = 3, 4, 5
+    params = stacked([lin_params(k, d, C) for k in range(K)])
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(7, d)),
+                    jnp.float32)
+    out = ensemble_logits(lin_apply, params, x)
+    # reference: average the per-member softmax PROBABILITIES, then log
+    probs = np.stack([jax.nn.softmax(
+        lin_apply(jax.tree.map(lambda t: t[k], params), x), -1)
+        for k in range(K)])
+    ref = np.log(np.maximum(probs.mean(0), 1e-9))
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-6)
+    # prob-averaging is NOT logit-averaging: the naive mean differs
+    naive = np.stack([np.asarray(lin_apply(
+        jax.tree.map(lambda t: t[k], params), x)) for k in range(K)]).mean(0)
+    assert not np.allclose(np.argsort(ref[0]), np.argsort(naive[0])) or \
+        not np.allclose(ref, naive, atol=1e-3)
+
+
+def test_ensemble_k1_reduces_to_single_model():
+    params = stacked([lin_params(0)])
+    x, y = cls_data(n=16)
+    out = ensemble_logits(lin_apply, params, jnp.asarray(x))
+    single = jax.nn.log_softmax(
+        lin_apply(jax.tree.map(lambda t: t[0], params), jnp.asarray(x)), -1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(single),
+                               atol=1e-6)
+    acc = ensemble_accuracy(lin_apply, params, jnp.asarray(x),
+                            jnp.asarray(y))
+    pred = np.argmax(np.asarray(single), -1)
+    assert float(acc) == pytest.approx((pred == y).mean())
+
+
+# ---------------------------------------------------------------------------
+# drift schedules: determinism + invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("drift", [
+    CovariateDrift(rate=0.2), LabelShift(rate=0.25),
+    AbruptDrift(at_round=2, severity=1.0)])
+def test_drift_deterministic_in_seed_round(drift):
+    x, y = cls_data(n=60)
+    for r in (0, 1, 3):
+        a = drift.transform(x, y, r, seed=5)
+        b = drift.transform(x, y, r, seed=5)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        if drift.reassigns:
+            ia = drift.assign(y, (30, 30), 2, r, seed=5)
+            ib = drift.assign(y, (30, 30), 2, r, seed=5)
+            assert all(np.array_equal(p, q) for p, q in zip(ia, ib))
+
+
+def test_drift_actually_drifts():
+    x, y = cls_data(n=60)
+    cx, _ = CovariateDrift(rate=0.2).transform(x, y, 3, seed=0)
+    assert not np.array_equal(cx, x)
+    # int tokens drift by vocab-pair swap, preserving dtype
+    xi = np.random.default_rng(0).integers(0, 32, (40, 8)).astype(np.int32)
+    ci, _ = CovariateDrift(rate=0.5).transform(xi, y[:40], 4, seed=0)
+    assert ci.dtype == xi.dtype and not np.array_equal(ci, xi)
+    # abrupt: identity before at_round, full-cycle relabel after
+    ad = AbruptDrift(at_round=2, severity=1.0)
+    _, y0 = ad.transform(x, y, 1, seed=0)
+    assert np.array_equal(y0, y)
+    _, y2 = ad.transform(x, y, 2, seed=0)
+    assert not np.any(y2 == y)          # a full cycle moves every label
+    assert set(np.unique(y2)) == set(np.unique(y))
+    # label shift: round 1 re-deal differs from the round-0 assignment
+    ls = LabelShift(rate=0.25)
+    i1 = ls.assign(y, (30, 30), 2, 1, seed=0)
+    i0 = ls.assign(y, (30, 30), 2, 0, seed=0)
+    assert not all(np.array_equal(a, b) for a, b in zip(i0, i1))
+
+
+def test_get_drift_registry():
+    assert isinstance(get_drift(None), NoDrift)
+    assert isinstance(get_drift("covariate", rate=0.3), CovariateDrift)
+    d = AbruptDrift(at_round=1)
+    assert get_drift(d) is d
+    with pytest.raises(ValueError):
+        get_drift("nope")
+    with pytest.raises(ValueError):
+        get_drift(d, rate=0.5)
+
+
+@pytest.mark.parametrize("drift", [
+    NoDrift(), CovariateDrift(rate=0.2), LabelShift(rate=0.25),
+    AbruptDrift(at_round=2)])
+def test_stream_invariants_every_round(drift):
+    x, y = cls_data(n=50)                # ragged: 50 over K=2, B=8
+    stream = ShardStream([x, y], 2, 8, seed=3, drift=drift)
+    mask0 = np.asarray(stream.batch_mask)
+    for r in range(5):
+        pd = stream.snapshot(r)
+        # shapes are a round-0 invariant: sizes, batch counts, mask
+        assert pd.sizes == stream.sizes
+        assert pd.batch_counts == stream.batch_counts
+        assert np.array_equal(np.asarray(pd.batch_mask), mask0)
+        # exact coverage: the shards hold the whole (drifted) corpus
+        dx, dy = drift.transform(x, y, r, stream.seed)
+        got = np.sort(np.concatenate(
+            [np.asarray(pd.full(k)[1]) for k in range(2)]))
+        assert np.array_equal(got, np.sort(dy))
+        assert sum(pd.sizes) == len(x)
+
+
+def test_stream_shape_guard_raises():
+    class BadDrift(DriftSchedule):
+        name = "bad"
+        reassigns = True
+
+        def assign(self, labels, sizes, K, round_i, seed):
+            # legal cover, WRONG per-shard sizes from round 1 on
+            n = len(labels)
+            cut = sizes[0] + (0 if round_i == 0 else 4)
+            return [np.arange(cut), np.arange(cut, n)]
+
+    x, y = cls_data(n=48)
+    stream = ShardStream([x, y], 2, 8, drift=BadDrift())
+    stream.snapshot(0)
+    with pytest.raises(ValueError, match="changed shard shapes"):
+        stream.snapshot(1)
+
+
+def test_nodrift_bit_identical_to_static_pipeline():
+    x, y = cls_data(n=48)
+    stream = ShardStream([x, y], 2, 8, seed=1)
+    idx = part_mod.scenario_indices(len(x), 2, 1, scenario="iid", labels=y,
+                                    min_size=8)
+    static = ParticipantData(part_mod.shard_by_indices([x, y], idx), 8, 1)
+    assert stream.snapshot(0) is stream.snapshot(3)   # ONE snapshot, cached
+    for r, e in [(0, 0), (1, 0), (2, 1)]:
+        sb = stream.epoch_batches(r, e)
+        pb = static.epoch_batches(r, e)
+        assert all(np.array_equal(a, b) for a, b in zip(sb, pb))
+
+
+@pytest.mark.parametrize("engine", ["python", "fused"])
+def test_nodrift_training_bit_identical_both_engines(engine):
+    """The all-static reduction: a NoDrift stream trains bit-for-bit like
+    the frozen stack on both engines (the subsystem costs nothing)."""
+    x, y = cls_data(n=48)
+    cfg = CoLearnConfig(n_participants=2, T0=2, eta0=0.05, epsilon=0.02,
+                        max_rounds=3)
+    outs = []
+    for data in (ShardStream([x, y], 2, 8, seed=1),
+                 ParticipantData(part_mod.shard_by_indices(
+                     [x, y], part_mod.scenario_indices(
+                         len(x), 2, 1, scenario="iid", labels=y,
+                         min_size=8)), 8, 1)):
+        learner = CoLearner(cfg, lin_loss, round_engine=engine)
+        state = learner.init(lin_params())
+        for _ in range(3):
+            state = learner.run_round(
+                state, lambda i, j, d=data: tuple(
+                    map(jnp.asarray, d.epoch_batches(i, j))))
+        outs.append(state["params"])
+    assert trees_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# ModelBank
+# ---------------------------------------------------------------------------
+class _FakeLearner:
+    """learner stand-in for publish_from: shared model = slot 0."""
+
+    def shared_model(self, state):
+        return jax.tree.map(lambda t: t[0], state["params"])
+
+
+class _Log:
+    def __init__(self, synced):
+        self.synced = synced
+
+
+def _state(params_stack, round_i, synced):
+    return {"params": params_stack, "round": round_i,
+            "global_epoch": 2 * round_i, "log": [_Log(synced)]}
+
+
+def test_bank_versioning_and_quiet_round_staleness():
+    stack = stacked([lin_params(0), lin_params(1)])
+    learner = _FakeLearner()
+    bank = ModelBank(publish_on="synced")
+    assert bank.version == 0 and bank.current() is None
+    assert bank.staleness(3) >= 10 ** 6            # nothing published yet
+    assert bank.publish_from(learner, _state(stack, 1, True)) is not None
+    assert bank.version == 1 and bank.current().round == 1
+    # quiet round: NO publish, the bank keeps the stale shared version
+    assert bank.publish_from(learner, _state(stack, 2, False)) is None
+    assert bank.version == 1
+    assert bank.staleness(2) == 1 and bank.staleness(4) == 3
+    assert bank.publish_from(learner, _state(stack, 3, True)).version == 2
+    assert bank.staleness(3) == 0
+
+    always = ModelBank(publish_on="always")
+    assert always.publish_from(learner, _state(stack, 1, False)) is not None
+    assert always.version == 1 and always.current().synced is False
+
+
+def test_bank_swap_equals_offline_eval(tmp_path):
+    """A mid-run hot-swap serves EXACTLY what an offline eval of the same
+    persisted checkpoint computes."""
+    p = lin_params(3)
+    x, _ = cls_data(n=16)
+    bank = ModelBank(dir=str(tmp_path))
+    bank.publish(p, round_i=5, global_epoch=10)
+    served = bank.predict_logits(lin_apply, jnp.asarray(x))
+    # offline: restore the persisted npz and eval it directly
+    restored = restore_pytree(os.path.join(str(tmp_path), "v1.npz"), p)
+    offline = jax.nn.log_softmax(
+        lin_apply(restored, jnp.asarray(x)).astype("float32"), -1)
+    np.testing.assert_array_equal(np.asarray(served), np.asarray(offline))
+    # and a fresh bank restored from disk serves the same thing
+    bank2 = ModelBank.load(str(tmp_path), like=p)
+    assert bank2.version == 1 and bank2.current().round == 5
+    served2 = bank2.predict_logits(lin_apply, jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(served), np.asarray(served2))
+
+
+def test_bank_ensemble_publication_mode():
+    """The Table 2 ensemble baseline runs from the serving path."""
+    stack = stacked([lin_params(k) for k in range(3)])
+    x, y = cls_data(n=32)
+    bank = ModelBank(mode="ensemble", publish_on="always")
+    bank.publish(stack, round_i=1)
+    lp = bank.predict_logits(lin_apply, jnp.asarray(x))
+    ref = ensemble_logits(lin_apply, stack, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ref), atol=1e-6)
+    acc = bank.accuracy(lin_apply, jnp.asarray(x), jnp.asarray(y))
+    ref_acc = ensemble_accuracy(lin_apply, stack, jnp.asarray(x),
+                                jnp.asarray(y))
+    assert float(acc) == pytest.approx(float(ref_acc))
+
+
+def test_bank_rejects_bad_modes():
+    with pytest.raises(ValueError):
+        ModelBank(mode="nope")
+    with pytest.raises(ValueError):
+        ModelBank(publish_on="sometimes")
+    with pytest.raises(RuntimeError):
+        ModelBank().predict_logits(lin_apply, jnp.zeros((1, 4)))
+
+
+# ---------------------------------------------------------------------------
+# ServeLoop: hot swap without recompiles, prefill through the jitted step
+# ---------------------------------------------------------------------------
+def test_serveloop_swap_no_recompile_and_prefill_correct():
+    from repro.models import transformer as tr
+    cfg = tiny_lm()
+    p0 = tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    p1 = tr.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+    loop = ServeLoop(cfg, p0, batch=2, max_seq=12)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 4)), jnp.int32)
+    gen0, _ = loop.generate(prompts, 4)
+    assert loop.compile_count() == 1
+
+    # eager reference: token-by-token decode_step (the old serve.py path)
+    def eager_generate(params):
+        cache = tr.init_cache(cfg, 2, 12, jnp.float32)
+        logits = None
+        for t in range(prompts.shape[1]):
+            logits, cache = tr.decode_step(params, cfg, cache,
+                                           prompts[:, t:t + 1], jnp.int32(t))
+        out, tok = [], jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(4):
+            out.append(tok)
+            logits, cache = tr.decode_step(params, cfg, cache, tok,
+                                           jnp.int32(prompts.shape[1] + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    np.testing.assert_array_equal(np.asarray(gen0), eager_generate(p0))
+
+    # hot swap: same shapes => no recompile, output = the new model's
+    bank = ModelBank()
+    bank.publish(p1, round_i=1)
+    assert loop.poll(bank) is True and loop.version == 1
+    gen1, stats = loop.generate(prompts, 4)
+    assert loop.compile_count() == 1          # the swap reused the step
+    assert stats["version"] == 1
+    np.testing.assert_array_equal(np.asarray(gen1), eager_generate(p1))
+
+    # a mismatched tree is rejected before it can poison the cache
+    bad = dict(p1, extra=jnp.zeros((3,)))
+    with pytest.raises(ValueError, match="treedef/shapes"):
+        loop.swap(bad, 9)
+    # an overlong decode is rejected before indexing past the cache
+    with pytest.raises(ValueError, match="overruns"):
+        loop.generate(prompts, 9)
+    with pytest.raises(ValueError, match="batch"):
+        loop.generate(jnp.zeros((3, 4), jnp.int32), 2)
+
+
+def test_serve_cli_validates_max_seq():
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as ei:
+        serve.main(["--batch", "1", "--prompt-len", "16",
+                    "--new-tokens", "16", "--max-seq", "24"])
+    assert ei.value.code == 2                 # argparse parse-time error
+
+
+def test_continuous_cli_validates_flags():
+    from repro.launch import continuous
+    with pytest.raises(SystemExit):
+        continuous.main(["--max-seq", "8", "--prompt-len", "8",
+                         "--new-tokens", "8"])
+    with pytest.raises(SystemExit):
+        continuous.main(["--drift", "none", "--drift-rate", "0.5"])
+
+
+# ---------------------------------------------------------------------------
+# resume under drift: the stream replays from (seed, round) purity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("drift", [CovariateDrift(rate=0.3),
+                                   LabelShift(rate=0.25)])
+def test_resume_from_checkpoint_under_drift(tmp_path, drift):
+    x, y = cls_data(n=48)
+    cfg = CoLearnConfig(n_participants=2, T0=2, eta0=0.05, epsilon=0.02,
+                        max_rounds=4)
+
+    def run(learner, state, stream, start, stop):
+        for _ in range(start, stop):
+            state = learner.run_round(
+                state, lambda i, j: tuple(
+                    map(jnp.asarray, stream.epoch_batches(i, j))))
+        return state
+
+    # uninterrupted: 4 rounds straight through
+    stream = ShardStream([x, y], 2, 8, seed=2, drift=drift)
+    learner = CoLearner(cfg, lin_loss, round_engine="fused")
+    ref = run(learner, learner.init(lin_params()), stream, 0, 4)
+
+    # interrupted: checkpoint after round 2, restore into a FRESH learner
+    # and a FRESH stream built from the same arguments
+    stream_a = ShardStream([x, y], 2, 8, seed=2, drift=drift)
+    learner_a = CoLearner(cfg, lin_loss, round_engine="fused")
+    state_a = run(learner_a, learner_a.init(lin_params()), stream_a, 0, 2)
+    save_round_state(str(tmp_path / "ck"), state_a)
+
+    stream_b = ShardStream([x, y], 2, 8, seed=2, drift=drift)
+    learner_b = CoLearner(cfg, lin_loss, round_engine="fused")
+    state_b = restore_round_state(str(tmp_path / "ck"),
+                                  learner_b.init(lin_params()))
+    state_b = run(learner_b, state_b, stream_b, 2, 4)
+    assert trees_equal(ref["params"], state_b["params"])
+    assert ref["round"] == state_b["round"]
+
+
+def test_harness_drift_plumbing():
+    """run_colearn(drift=...) stages the stream and scores the drifted
+    test set; stream= passes a prebuilt one."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.harness import run_colearn
+    x, y = cls_data(n=64)
+    xt, yt = cls_data(n=32, seed=9)
+
+    def init_fn(key):
+        return lin_params()
+
+    r = run_colearn(init_fn, lin_apply, (x, y), (xt, yt), K=2, rounds=2,
+                    T0=1, batch_size=8, engine="fused",
+                    drift=AbruptDrift(at_round=1))
+    assert len(r["acc"]) == 2 and all(np.isfinite(a) for a in r["acc"])
+    stream = ShardStream([x, y], 2, 8, seed=0, drift=CovariateDrift(0.2))
+    r2 = run_colearn(init_fn, lin_apply, (x, y), (xt, yt), K=2, rounds=2,
+                     T0=1, batch_size=8, engine="fused", stream=stream)
+    assert len(r2["acc"]) == 2
+    with pytest.raises(ValueError, match="not both"):
+        run_colearn(init_fn, lin_apply, (x, y), (xt, yt), K=2, rounds=1,
+                    drift=AbruptDrift(), stream=stream)
