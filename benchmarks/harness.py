@@ -139,7 +139,7 @@ def run_colearn(init_fn, apply_fn, train, test, *, K=5, rounds=6, T0=1,
     params = init_fn(jax.random.PRNGKey(seed))
     state = learner.init(params)
     accs, Ts, times = [], [], []
-    for i in range(rounds):
+    for _ in range(rounds):
         t0 = time.time()
 
         def eb(i_, j_):

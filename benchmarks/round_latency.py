@@ -42,6 +42,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import guards
 from repro.configs import get_smoke_config
 from repro.configs.base import CoLearnConfig
 from repro.core import api
@@ -175,10 +176,9 @@ def check_retrace():
                  api.WarmupCLR(eta0=0.02, warmup_rounds=16)):
         learner.set_schedule(spec)
         state = learner.run_round(state, lambda i, j: batches)
-    n_epochs = learner._fused_epochs._cache_size()
-    n_final = learner._fused_finalize._cache_size()
-    assert n_epochs == 1, f"chunk executable retraced: {n_epochs} compiles"
-    assert n_final == 1, f"finalize retraced: {n_final} compiles"
+    guards.assert_compile_count(learner._fused_epochs, 1,
+                                "chunk executable")
+    guards.assert_compile_count(learner._fused_finalize, 1, "finalize")
 
     # 2) single-shot path at fixed T: schedule swaps + a warmup ramping
     #    eta^i per round must reuse the one round executable
@@ -191,8 +191,8 @@ def check_retrace():
         state2 = learner2.run_round(state2, lambda i, j: batches)
     learner2.set_schedule("elr")
     state2 = learner2.run_round(state2, lambda i, j: batches)
-    n_round = learner2._fused_round._cache_size()
-    assert n_round == 1, f"round executable retraced: {n_round} compiles"
+    guards.assert_compile_count(learner2._fused_round, 1,
+                                "round executable")
     # the warmup actually ramped (the traced eta^i changed per round)
     lrs = [l.lr_first for l in state2["log"][:3]]
     assert lrs[0] < lrs[1] < lrs[2], lrs
@@ -216,12 +216,10 @@ def check_retrace():
         state3 = learner3.run_round(state3, lambda i, j: batches3)
     assert [l.T for l in state3["log"]] == [2, 2, 4, 8], \
         [l.T for l in state3["log"]]
-    n_epochs3 = learner3._fused_epochs._cache_size()
-    n_final3 = learner3._fused_finalize._cache_size()
-    assert n_epochs3 == 1, \
-        f"masked chunk executable retraced: {n_epochs3} compiles"
-    assert n_final3 == 1, \
-        f"weighted finalize retraced: {n_final3} compiles"
+    guards.assert_compile_count(learner3._fused_epochs, 1,
+                                "masked chunk executable")
+    guards.assert_compile_count(learner3._fused_finalize, 1,
+                                "weighted finalize")
 
     # 4) elastic membership: the (K,) liveness row is traced data, so
     #    crashes/rejoins flipping the live set EVERY round (plus the live-
@@ -237,9 +235,8 @@ def check_retrace():
     for _ in range(4):
         state4 = learner4.run_round(state4, lambda i, j: batches)
     assert [l.live for l in state4["log"]] == [2, 1, 2, 1]
-    n_round4 = learner4._fused_round._cache_size()
-    assert n_round4 == 1, \
-        f"round executable retraced under churn: {n_round4} compiles"
+    guards.assert_compile_count(learner4._fused_round, 1,
+                                "round executable under churn")
 
     # event rounds HOLD the ILE doubling (a membership change perturbs the
     # rel signal), so interleave quiet rounds to still exercise T growth:
@@ -255,12 +252,10 @@ def check_retrace():
         state5 = learner5.run_round(state5, lambda i, j: batches)
     assert [l.T for l in state5["log"]] == [2, 2, 2, 4, 4, 8], \
         [l.T for l in state5["log"]]
-    n_epochs5 = learner5._fused_epochs._cache_size()
-    n_final5 = learner5._fused_finalize._cache_size()
-    assert n_epochs5 == 1, \
-        f"chunk executable retraced under churn: {n_epochs5} compiles"
-    assert n_final5 == 1, \
-        f"finalize retraced under churn: {n_final5} compiles"
+    guards.assert_compile_count(learner5._fused_epochs, 1,
+                                "chunk executable under churn")
+    guards.assert_compile_count(learner5._fused_finalize, 1,
+                                "finalize under churn")
 
     # 6) error-feedback wire: the residual is traced data threaded through
     #    round/chunk/finalize (ISSUE 7 acceptance) — an ILE doubling on the
@@ -277,12 +272,10 @@ def check_retrace():
     assert [l.T for l in state6["log"]] == [2, 2, 4, 8], \
         [l.T for l in state6["log"]]
     assert state6["residual"] is not None
-    n_epochs6 = learner6._fused_epochs._cache_size()
-    n_final6 = learner6._fused_finalize._cache_size()
-    assert n_epochs6 == 1, \
-        f"EF chunk executable retraced: {n_epochs6} compiles"
-    assert n_final6 == 1, \
-        f"EF stateful finalize retraced: {n_final6} compiles"
+    guards.assert_compile_count(learner6._fused_epochs, 1,
+                                "EF chunk executable")
+    guards.assert_compile_count(learner6._fused_finalize, 1,
+                                "EF stateful finalize")
 
     cfg6b = CoLearnConfig(n_participants=2, T0=2, epsilon=0.0, max_rounds=8,
                           epochs_rule="fle")
@@ -292,9 +285,8 @@ def check_retrace():
         state6b = learner6b.run_round(state6b, lambda i, j: batches)
     learner6b.set_schedule("elr")
     state6b = learner6b.run_round(state6b, lambda i, j: batches)
-    n_round6 = learner6b._fused_round._cache_size()
-    assert n_round6 == 1, \
-        f"EF round executable retraced: {n_round6} compiles"
+    guards.assert_compile_count(learner6b._fused_round, 1,
+                                "EF round executable")
 
     # 7) time-varying topology: the per-round gossip matrix of the one-
     #    peer exponential graph is traced data, so the graph changing
@@ -311,10 +303,9 @@ def check_retrace():
     state7 = learner7.init(params)
     for _ in range(4):                   # period 2: every matrix seen twice
         state7 = learner7.run_round(state7, lambda i, j: batches7)
-    n_round7 = learner7._fused_round._cache_size()
-    assert n_round7 == 1, \
-        f"round executable retraced under time-varying topology: " \
-        f"{n_round7} compiles"
+    guards.assert_compile_count(
+        learner7._fused_round, 1,
+        "round executable under time-varying topology")
 
     cfg7b = CoLearnConfig(n_participants=4, T0=2, epsilon=0.01,
                           epochs_rule="ile", max_rounds=8)
@@ -325,14 +316,12 @@ def check_retrace():
     for _ in range(4):
         state7b = learner7b.run_round(state7b, lambda i, j: batches7)
     assert state7b["residual"] is not None
-    n_epochs7 = learner7b._fused_epochs._cache_size()
-    n_final7 = learner7b._fused_finalize._cache_size()
-    assert n_epochs7 == 1, \
-        f"chunk executable retraced under D2+time-varying topology: " \
-        f"{n_epochs7} compiles"
-    assert n_final7 == 1, \
-        f"stateful finalize retraced under D2+time-varying topology: " \
-        f"{n_final7} compiles"
+    guards.assert_compile_count(
+        learner7b._fused_epochs, 1,
+        "chunk executable under D2+time-varying topology")
+    guards.assert_compile_count(
+        learner7b._fused_finalize, 1,
+        "stateful finalize under D2+time-varying topology")
 
     # 8) streaming drift restage: a ShardStream re-stages DIFFERENT shard
     #    contents every round (covariate rotation re-transforms, label
@@ -361,14 +350,12 @@ def check_retrace():
                                        stream8.epoch_batches(i, j))))
         assert [l.T for l in state8["log"]] == [2, 2, 4, 8], \
             [l.T for l in state8["log"]]
-        n_epochs8 = learner8._fused_epochs._cache_size()
-        n_final8 = learner8._fused_finalize._cache_size()
-        assert n_epochs8 == 1, \
-            f"chunk executable retraced under {drift8.name} drift: " \
-            f"{n_epochs8} compiles"
-        assert n_final8 == 1, \
-            f"finalize retraced under {drift8.name} drift: " \
-            f"{n_final8} compiles"
+        guards.assert_compile_count(
+            learner8._fused_epochs, 1,
+            f"chunk executable under {drift8.name} drift")
+        guards.assert_compile_count(
+            learner8._fused_finalize, 1,
+            f"finalize under {drift8.name} drift")
 
     print("check-retrace OK: chunk/finalize/round executables compiled "
           "once across an ILE doubling, 4 schedule swaps, a warmup "
@@ -380,6 +367,44 @@ def check_retrace():
     return 0
 
 
+def check_transfer(rounds=3):
+    """CI smoke: after the warmup round, the fused round loop holds zero
+    *implicit* host<->device transfers — host-staged numpy batches enter
+    through the engine's one explicit device_put, per-round scalars/packs
+    are staged explicitly, and the only D2H is the aux fetch. Runs both
+    the single-executable path and the chunked (epochs+finalize) path
+    under ``guards.no_transfer()``."""
+    import numpy as np
+
+    from repro.data.pipeline import ParticipantData
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] + params["b"] - y) ** 2), {}
+
+    rng = np.random.default_rng(0)
+    K, n, B, d = 4, 64, 8, 6
+    shards = [[rng.standard_normal((n, d)).astype(np.float32),
+               rng.standard_normal((n, 1)).astype(np.float32)]
+              for _ in range(K)]
+    data = ParticipantData(shards, batch_size=B, seed=0)
+    params = {"w": jnp.zeros((d, 1)), "b": jnp.zeros((1,))}
+    for chunk, label in ((32, "single-executable"), (1, "chunked")):
+        ccfg = CoLearnConfig(n_participants=K, T0=2, eta0=0.01,
+                             epsilon=0.01, max_rounds=rounds + 2)
+        learner = CoLearner(ccfg, loss_fn,
+                            round_engine=api.FusedEngine(chunk=chunk))
+        state = learner.init(params)
+        state = learner.run_round(state, data.epoch_batches)  # compile
+        with guards.no_transfer():
+            for _ in range(rounds):
+                state = learner.run_round(state, data.epoch_batches)
+        print(f"check-transfer OK ({label}): {rounds} post-warmup rounds "
+              "with host-staged numpy batches held zero implicit "
+              "transfers")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=5)
@@ -388,9 +413,15 @@ def main(argv=None):
                     help="assert fused compile counts stay flat across an "
                          "ILE doubling and schedule swaps (CI smoke, no "
                          "timings)")
+    ap.add_argument("--check-transfer", action="store_true",
+                    help="assert the post-warmup fused round loop is free "
+                         "of implicit host<->device transfers (CI smoke, "
+                         "no timings)")
     args = ap.parse_args(argv)
     if args.check_retrace:
         return check_retrace()
+    if args.check_transfer:
+        return check_transfer()
     rec = run(rounds=args.rounds)
     if args.out:
         with open(args.out, "w") as f:

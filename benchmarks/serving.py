@@ -83,7 +83,7 @@ def closed_loop(rounds=6, K=3, seed=0, quiet=False):
         return (jnp.asarray(bx), jnp.asarray(by))
 
     per_round, swaps = [], 0
-    for i in range(rounds):
+    for _ in range(rounds):
         state = learner.run_round(state, eb, on_round_end=bank.publish_from)
         t0 = time.time()
         swapped = serve.poll(bank)

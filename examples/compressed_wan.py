@@ -62,7 +62,7 @@ for label, codec, aggregator, sync_policy in RUNS:
         loss_fn=lambda p, b: tr.loss_fn(p, cfg, {"tokens": b[0], "labels": b[1]}),
         codec=codec, aggregator=aggregator, sync_policy=sync_policy)
     state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
-    for i in range(3):
+    for _ in range(3):
         state = learner.run_round(
             state, lambda i_, j_: tuple(map(jnp.asarray,
                                             data.epoch_batches(i_, j_))))

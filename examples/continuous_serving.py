@@ -62,7 +62,7 @@ serve.poll(bank)
 prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 6), 0,
                              cfg.vocab_size)
 
-for i in range(ROUNDS):
+for _ in range(ROUNDS):
     state = learner.run_round(
         state,
         lambda i_, j_: tuple(map(jnp.asarray, stream.epoch_batches(i_, j_))),

@@ -49,7 +49,7 @@ learner = CoLearner(
 )
 state = learner.init(tr.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
 
-for i in range(4):
+for _ in range(4):
     state = learner.run_round(
         state, lambda i_, j_: tuple(map(jnp.asarray, data.epoch_batches(i_, j_))))
     log = state["log"][-1]

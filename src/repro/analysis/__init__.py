@@ -1,0 +1,13 @@
+"""Static analysis + runtime sanitizers for the traced-data discipline.
+
+``tracelint`` is the AST pass (``python -m repro.analysis.tracelint
+src/repro``); ``guards`` holds the runtime side — the ``no_retrace``
+compile-count guard and the ``no_transfer`` implicit-transfer guard the
+benchmarks, tests and ``ServeLoop`` share. See
+``docs/traced_data_discipline.md`` for what each rule enforces and why.
+"""
+from repro.analysis.guards import (RetraceError, assert_compile_count,
+                                   compile_count, no_retrace, no_transfer)
+
+__all__ = ["RetraceError", "assert_compile_count", "compile_count",
+           "no_retrace", "no_transfer"]

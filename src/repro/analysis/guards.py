@@ -1,0 +1,116 @@
+"""Runtime sanitizers for the traced-data discipline.
+
+The repo's core invariant (ROADMAP "Static analysis") is that per-round
+quantities ride into long-lived donated executables as *traced data*:
+nothing recompiles per round and no implicit host<->device traffic lands
+on the round critical path. ``tracelint`` enforces the static half; this
+module is the runtime half:
+
+* :func:`compile_count` / :func:`assert_compile_count` — the ONE place
+  the repo reads a jitted callable's compile cache. ``ServeLoop``,
+  ``round_latency.py --check-retrace`` and the engine tests all count
+  through it, so "what counts as a recompile" cannot drift between the
+  three stories.
+* :class:`no_retrace` — wraps a jitted callable and raises
+  :class:`RetraceError` the moment it holds more compiled variants than
+  promised. A retrace is otherwise *silent* (just 10x latency / 2x
+  memory); the wrapper turns it into a loud failure at the offending
+  call.
+* :func:`no_transfer` — pins a code region free of *implicit* transfers
+  via ``jax.transfer_guard("disallow")``. Explicit ``jax.device_put`` /
+  ``jax.device_get`` (the engine's staging and the one per-round aux
+  fetch) stay legal; a numpy array or python scalar sneaking into a
+  jitted call, or a ``float()`` on a device value, raises.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+class RetraceError(AssertionError):
+    """A guarded executable compiled more variants than promised."""
+
+
+def compile_count(fn) -> int:
+    """Distinct compiled executables behind ``fn``.
+
+    ``fn`` is a jitted callable (``jax.jit`` result) or a
+    :class:`no_retrace` wrapper. Zero until the first call.
+    """
+    if isinstance(fn, no_retrace):
+        return fn.compile_count()
+    return fn._cache_size()
+
+
+def assert_compile_count(fn, expected: int, what: str = "jitted function"):
+    """Assert ``fn`` compiled exactly ``expected`` variants.
+
+    The after-the-fact form of :class:`no_retrace` for executables built
+    elsewhere (the engine's fused round/epochs/finalize): run the
+    scenario, then pin the cache size it must have ended at.
+    """
+    n = compile_count(fn)
+    if n != expected:
+        raise RetraceError(
+            f"{what}: compile count {n} != expected {expected} — a "
+            "per-round quantity leaked into the trace (closure capture, "
+            "python branching on data, or shape/dtype drift across calls)")
+    return n
+
+
+class no_retrace:
+    """Wrap a jitted callable so every call enforces a compile budget.
+
+    >>> step = no_retrace(jax.jit(f), limit=1, what="decode step")
+    >>> step(x)          # compiles once: count 1 <= limit, fine
+    >>> step(x.astype(jnp.float64))   # RetraceError at the call site
+
+    ``limit`` is the number of compiled variants the wrapper tolerates
+    (1 for the single-signature executables this repo builds).
+    ``compile_count()`` exposes the underlying cache size — this is what
+    ``ServeLoop.compile_count`` now reports.
+    """
+
+    def __init__(self, jitted, *, limit: int = 1,
+                 what: str = "jitted function"):
+        self._jitted = jitted
+        self.limit = int(limit)
+        self.what = what
+
+    def __call__(self, *args, **kwargs):
+        out = self._jitted(*args, **kwargs)
+        self.check()
+        return out
+
+    def compile_count(self) -> int:
+        return self._jitted._cache_size()
+
+    def check(self, limit: int | None = None) -> int:
+        """Raise :class:`RetraceError` if the budget is exceeded."""
+        n = self.compile_count()
+        lim = self.limit if limit is None else int(limit)
+        if n > lim:
+            raise RetraceError(
+                f"{self.what}: {n} compiled variants exceed the "
+                f"no_retrace limit of {lim} — an argument changed "
+                "shape/dtype or a per-call quantity was baked into the "
+                "trace instead of riding in as data")
+        return n
+
+
+@contextlib.contextmanager
+def no_transfer():
+    """Disallow implicit host<->device transfers inside the block.
+
+    Explicit staging stays legal: ``jax.device_put`` (and
+    ``jnp.asarray`` over a numpy array, which routes through it),
+    ``jax.device_get`` / ``np.asarray`` on a device array. What raises:
+    numpy arrays or python scalars passed straight into a jitted call,
+    ``jnp.stack`` over numpy inputs, ``float()``/``int()``/``.item()``
+    on device values. Those are exactly the accidental per-round
+    transfers the engine's staging discipline exists to prevent.
+    """
+    with jax.transfer_guard("disallow"):
+        yield

@@ -1,0 +1,720 @@
+"""tracelint — static analysis for the repo's traced-data discipline.
+
+Run as a module (CI job) or from pytest (self-run in
+``tests/test_analysis.py``)::
+
+    python -m repro.analysis.tracelint src/repro
+    run_paths(["src/repro"]) == []
+
+Rules (see ``docs/traced_data_discipline.md`` for the rationale):
+
+== =========================== =============================================
+ID name                        what it flags
+== =========================== =============================================
+TL001 jit-in-loop              ``jax.jit`` / ``pl.pallas_call`` / engine
+                               ``make_fused_*`` builders constructed inside
+                               a loop body — one compile cache per
+                               iteration, the per-round recompile disaster.
+TL002 host-sync-in-traced      ``.item()`` / ``jax.device_get`` /
+                               ``np.asarray`` / ``float()``/``int()`` in a
+                               function reachable from traced code — a
+                               blocking sync (or concretization error) on
+                               the round critical path.
+TL003 traced-closure-leak      a traced function defined inside a host
+                               loop closing over loop-carried data instead
+                               of taking it as an argument — the value is
+                               baked into the trace, so every iteration
+                               retraces.
+TL004 missing-donate           a round/epochs/finalize-shaped executable
+                               jitted without ``donate_argnums`` — the old
+                               params stay alive across the donating call,
+                               doubling peak memory.
+TL005 registry-conformance     a registered codec/aggregator/engine/
+                               schedule/policy/topology/drift/churn object
+                               missing part of its protocol surface,
+                               including the stateful/live/weighted/events
+                               optional hooks (the rule that would have
+                               caught the PR 6/7/8 plumbing gaps).
+TL006 state-key-consistency    a ``state["…"]`` key the engines thread
+                               that ``checkpoint/io.py`` does not persist
+                               or ``restart_participant`` / the runners'
+                               ``select_live`` plumbing do not handle.
+== =========================== =============================================
+
+Suppression: append ``# tracelint: disable=TL002 -- reason`` to the
+flagged line (or put it on a comment line directly above). The committed
+baseline (``tracelint_baseline.txt``) is empty and must stay empty —
+fix the hazard or justify it inline.
+
+TL001–TL004 are pure AST passes over the given paths. TL005/TL006
+import ``repro`` and reflect over the live registries / module sources;
+they run whenever ``repro`` is importable (disable with
+``--no-project-rules`` when linting fixtures).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass
+
+# -- findings, suppressions, baseline ----------------------------------------
+
+RULES = {
+    "TL001": "jit-in-loop",
+    "TL002": "host-sync-in-traced",
+    "TL003": "traced-closure-leak",
+    "TL004": "missing-donate",
+    "TL005": "registry-conformance",
+    "TL006": "state-key-consistency",
+}
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "tracelint_baseline.txt")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} ({RULES[self.rule]}) {self.message}"
+
+    def key(self) -> str:
+        """Baseline key: stable under message rewording, not line drift
+        (the baseline is meant to stay empty, not to age gracefully)."""
+        return f"{self.rule} {self.path}:{self.line}"
+
+
+_SUPPRESS_RE = re.compile(r"#\s*tracelint:\s*disable=((?:TL\d{3}[,\s]*)+)")
+
+
+def _suppressions(source: str) -> dict:
+    """line number -> set of rule ids suppressed on that line."""
+    out = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m:
+            out[i] = set(re.findall(r"TL\d{3}", m.group(1)))
+    return out
+
+
+def _apply_suppressions(findings, sup):
+    """A finding is suppressed by a directive on its own line or on the
+    comment line directly above it."""
+    kept = []
+    for f in findings:
+        rules = sup.get(f.line, set()) | sup.get(f.line - 1, set())
+        if f.rule not in rules:
+            kept.append(f)
+    return kept
+
+
+def load_baseline(path: str) -> set:
+    if not os.path.exists(path):
+        return set()
+    with open(path) as fh:
+        return {line.strip() for line in fh
+                if line.strip() and not line.startswith("#")}
+
+
+# -- AST helpers -------------------------------------------------------------
+
+def _dotted(node):
+    """'jax.lax.scan' for an Attribute chain, 'jit' for a Name, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _tail(dotted):
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+def _annotate_parents(tree):
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._tl_parent = node
+
+
+def _ancestors(node):
+    node = getattr(node, "_tl_parent", None)
+    while node is not None:
+        yield node
+        node = getattr(node, "_tl_parent", None)
+
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_COMPS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+#: executable builders that own a compile cache — building one per loop
+#: iteration is the per-round recompile disaster TL001 exists for
+JIT_BUILDERS = {"jax.jit", "jit", "pjit", "jax.pmap", "pmap",
+                "pl.pallas_call", "pallas_call"}
+_JIT_BUILDER_TAIL_RE = re.compile(r"^make_fused_\w+$")
+
+#: calls whose function-valued arguments get traced (roots for TL002/3)
+TRACER_ENTRIES = JIT_BUILDERS | {
+    "jax.vmap", "vmap", "jax.grad", "jax.value_and_grad", "jax.checkpoint",
+    "jax.remat", "shard_map", "jax.lax.scan", "lax.scan", "jax.lax.cond",
+    "lax.cond", "jax.lax.switch", "lax.switch", "jax.lax.while_loop",
+    "lax.while_loop", "jax.lax.fori_loop", "lax.fori_loop", "jax.lax.map",
+    "lax.map",
+}
+
+#: host-sync calls flagged by TL002 inside traced-reachable functions
+HOST_SYNC_CALLS = {"jax.device_get", "device_get", "np.asarray", "np.array",
+                   "numpy.asarray", "numpy.array", "onp.asarray"}
+HOST_SYNC_METHODS = {"item", "tolist", "to_py"}
+HOST_SYNC_BUILTINS = {"float", "int", "bool"}
+
+#: jax.jit first-arg names that mark a donating-signature executable —
+#: the round/epochs/finalize family the engine builds (TL004)
+_DONATING_RE = re.compile(r"\b(round_fn|epochs_fn|finalize|fused)\w*")
+
+
+def _is_jit_builder(call: ast.Call) -> bool:
+    d = _dotted(call.func)
+    if d in JIT_BUILDERS:
+        return True
+    t = _tail(d)
+    return bool(t and _JIT_BUILDER_TAIL_RE.match(t))
+
+
+def _assigned_names(node, *, skip=None):
+    """All names bound anywhere under ``node`` (assignments, loop targets,
+    with-targets, comprehension targets), excluding the ``skip`` subtree."""
+    names = set()
+    for n in ast.walk(node):
+        if skip is not None and n is skip:
+            continue
+        if _in_subtree(n, skip):
+            continue
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,)):
+            names.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(n.name)
+    return names
+
+
+def _in_subtree(node, root):
+    if root is None:
+        return False
+    while node is not None:
+        if node is root:
+            return True
+        node = getattr(node, "_tl_parent", None)
+    return False
+
+
+def _func_params(fn):
+    args = fn.args
+    names = [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return set(names)
+
+
+def _walk_body(fn):
+    """Walk a function's *body* only — default-value expressions and
+    decorators evaluate at definition time in the enclosing scope (the
+    ``def f(x, _w=w)`` rebind is the sanctioned fix for TL003, not a
+    closure)."""
+    for stmt in (fn.body if isinstance(fn.body, list) else [fn.body]):
+        yield from ast.walk(stmt)
+
+
+def _free_names(fn):
+    """Names loaded in ``fn``'s body that ``fn`` does not bind itself."""
+    bound = set(_func_params(fn))
+    loaded = set()
+    for n in _walk_body(fn):
+        if isinstance(n, ast.Name):
+            if isinstance(n.ctx, ast.Store):
+                bound.add(n.id)
+            elif isinstance(n.ctx, ast.Load):
+                loaded.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(n.name)
+    return loaded - bound
+
+
+# -- per-module linter (TL001-TL004) -----------------------------------------
+
+class ModuleLinter:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        _annotate_parents(self.tree)
+        self.findings = []
+
+    def run(self):
+        self._collect_traced()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._tl001(node)
+                self._tl004(node)
+        self._tl002()
+        self._tl003()
+        return _apply_suppressions(self.findings, _suppressions(self.source))
+
+    def _flag(self, rule, node, message):
+        self.findings.append(
+            Finding(rule, self.path, getattr(node, "lineno", 1), message))
+
+    # -- TL001: jit built inside a loop body -------------------------------
+    def _tl001(self, call):
+        if not _is_jit_builder(call):
+            return
+        for anc in _ancestors(call):
+            if isinstance(anc, _FUNCS + (ast.ClassDef,)):
+                return  # enclosing def owns the call; loops above are lexical only
+            if isinstance(anc, _LOOPS + _COMPS):
+                self._flag("TL001", call,
+                           f"`{ast.unparse(call.func)}` constructed inside "
+                           "a loop body: a fresh compile cache per "
+                           "iteration. Build the executable once outside "
+                           "and pass per-iteration values as arguments.")
+                return
+
+    # -- traced-function discovery (shared by TL002/TL003) ------------------
+    def _collect_traced(self):
+        self.functions = [n for n in ast.walk(self.tree)
+                          if isinstance(n, _FUNCS)]
+        by_name = {}
+        for fn in self.functions:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(fn.name, []).append(fn)
+        traced = set()
+
+        def mark_name(name):
+            for fn in by_name.get(name, ()):
+                traced.add(fn)
+
+        # roots: jit-ish decorators, and function-valued args of tracer
+        # entries (by name, or a lambda in place)
+        for fn in self.functions:
+            for dec in getattr(fn, "decorator_list", ()):
+                d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+                if d in JIT_BUILDERS or (
+                        isinstance(dec, ast.Call) and _tail(d) == "partial"
+                        and dec.args
+                        and _dotted(dec.args[0]) in JIT_BUILDERS):
+                    traced.add(fn)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _dotted(node.func) not in TRACER_ENTRIES:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    traced.add(arg)
+                elif isinstance(arg, ast.Name):
+                    mark_name(arg.id)
+
+        # close over nesting and intra-module calls (self.foo() / foo())
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.functions:
+                if fn in traced:
+                    continue
+                if any(a in traced for a in _ancestors(fn)
+                       if isinstance(a, _FUNCS)):
+                    traced.add(fn)
+                    changed = True
+            for fn in list(traced):
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = None
+                    if isinstance(node.func, ast.Name):
+                        callee = node.func.id
+                    elif (isinstance(node.func, ast.Attribute)
+                          and isinstance(node.func.value, ast.Name)
+                          and node.func.value.id in ("self", "cls")):
+                        callee = node.func.attr
+                    for target in by_name.get(callee, ()):
+                        if target not in traced:
+                            traced.add(target)
+                            changed = True
+        self.traced = traced
+
+    # -- TL002: host syncs reachable from traced code ------------------------
+    def _tl002(self):
+        seen = set()
+        for fn in self.traced:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call) or node.lineno in seen:
+                    continue
+                d = _dotted(node.func)
+                hit = None
+                if d in HOST_SYNC_CALLS:
+                    hit = d
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in HOST_SYNC_METHODS):
+                    hit = f".{node.func.attr}()"
+                elif (d in HOST_SYNC_BUILTINS and node.args
+                      and not isinstance(node.args[0], ast.Constant)):
+                    hit = f"{d}()"
+                if hit:
+                    seen.add(node.lineno)
+                    self._flag("TL002", node,
+                               f"host sync `{hit}` inside a function "
+                               "reachable from traced code: a blocking "
+                               "device round-trip (or concretization "
+                               "error) on the round critical path. Return "
+                               "device values and sync once, outside.")
+
+    # -- TL003: traced fn closing over loop-carried data ---------------------
+    def _tl003(self):
+        for fn in self.traced:
+            # nested-in-traced functions are static unrolling inside one
+            # trace — only root traced fns can leak host-loop data
+            if any(a in self.traced for a in _ancestors(fn)
+                   if isinstance(a, _FUNCS)):
+                continue
+            free = _free_names(fn)
+            if not free:
+                continue
+            for anc in _ancestors(fn):
+                if isinstance(anc, _LOOPS):
+                    loop_names = _assigned_names(anc, skip=fn)
+                    if isinstance(anc, (ast.For, ast.AsyncFor)):
+                        loop_names |= {n.id for n in ast.walk(anc.target)
+                                       if isinstance(n, ast.Name)}
+                    leaked = sorted(free & loop_names)
+                    if leaked:
+                        self._flag(
+                            "TL003", fn,
+                            f"traced function closes over loop-carried "
+                            f"{', '.join(leaked)}: the value is baked "
+                            "into the trace, so every iteration "
+                            "retraces. Pass it as an argument instead.")
+                        break
+
+    # -- TL004: donating-signature executables without donate_argnums --------
+    def _tl004(self, call):
+        if _dotted(call.func) not in ("jax.jit", "jit"):
+            return
+        if not call.args:
+            return
+        target = ast.unparse(call.args[0])
+        if not _DONATING_RE.search(target):
+            return
+        kwargs = {kw.arg for kw in call.keywords}
+        if not kwargs & {"donate_argnums", "donate_argnames"}:
+            self._flag("TL004", call,
+                       f"`jax.jit({target}, ...)` looks like a round/"
+                       "epochs/finalize executable but passes no "
+                       "donate_argnums: the consumed input buffers stay "
+                       "alive across the call, doubling peak memory.")
+
+
+def lint_source(source: str, path: str = "<fixture>"):
+    """AST rules (TL001-TL004) over one source string — the test hook."""
+    return ModuleLinter(path, source).run()
+
+
+def lint_file(path: str):
+    with open(path) as fh:
+        return lint_source(fh.read(), path)
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+# -- TL005: registry conformance (runtime reflection) ------------------------
+
+def _accepts(fn, kwarg):
+    import inspect
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return True
+    return kwarg in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+def _locate(cls):
+    import inspect
+    try:
+        path = inspect.getsourcefile(cls) or "<unknown>"
+        line = inspect.getsourcelines(cls)[1]
+    except (OSError, TypeError):
+        path, line = "<unknown>", 1
+    return path, line
+
+
+def check_registries():
+    """Every registered object implements its full protocol surface,
+    including the optional hooks later PRs rely on (``live=`` liveness
+    rows, ``events=`` membership events, ``delta=`` gate overrides,
+    ``weighted=``/``stateful=`` fused-mean variants). A registered object
+    missing one of these degrades *silently* — the engine falls back to
+    the legacy call shape — which is exactly how the PR 6/7/8 plumbing
+    gaps shipped."""
+    from repro.core import api, membership, topology
+    from repro.data import stream
+
+    findings = []
+
+    def require(obj, registry, name, cond, what):
+        if not cond:
+            path, line = _locate(type(obj))
+            findings.append(Finding(
+                "TL005", path, line,
+                f"{registry}[{name!r}] ({type(obj).__name__}) {what}"))
+
+    def methods(obj, registry, name, *names):
+        for m in names:
+            require(obj, registry, name, callable(getattr(obj, m, None)),
+                    f"missing protocol method `{m}`")
+
+    def kw(obj, registry, name, method, kwarg):
+        fn = getattr(obj, method, None)
+        require(obj, registry, name, fn is None or _accepts(fn, kwarg),
+                f"`{method}` does not accept the `{kwarg}=` hook")
+
+    for name, factory in api.CODECS.items():
+        c = factory()
+        methods(c, "CODECS", name, "encode", "decode", "roundtrip",
+                "wire_bytes", "init_state", "make_fused_mean")
+        require(c, "CODECS", name, hasattr(c, "stateful"),
+                "missing `stateful` attribute")
+        for hook in ("weighted", "stateful"):
+            kw(c, "CODECS", name, "make_fused_mean", hook)
+        if getattr(c, "stateful", False):
+            require(c, "CODECS", name,
+                    type(c).roundtrip_ef is not api.WireCodec.roundtrip_ef,
+                    "is stateful but does not override `roundtrip_ef` "
+                    "(error feedback would silently no-op)")
+
+    for name, factory in api.AGGREGATORS.items():
+        a = factory()
+        methods(a, "AGGREGATORS", name, "mixing_matrix",
+                "make_aggregate_fn", "comm_bytes", "init_round_state")
+        for attr in ("stateful", "uses_weights", "static_comm"):
+            require(a, "AGGREGATORS", name, hasattr(a, attr),
+                    f"missing `{attr}` attribute")
+        kw(a, "AGGREGATORS", name, "mixing_matrix", "live")
+        kw(a, "AGGREGATORS", name, "comm_bytes", "live")
+        kw(a, "AGGREGATORS", name, "make_aggregate_fn", "dynamic")
+
+    for name, factory in api.ENGINES.items():
+        methods(factory(), "ENGINES", name, "bind")
+
+    for name, factory in api.SCHEDULES.items():
+        s = factory()
+        methods(s, "SCHEDULES", name, "lr", "round_params",
+                "device_round_params")
+        require(s, "SCHEDULES", name,
+                callable(getattr(s, "traced_lr", None)),
+                "missing the traced `traced_lr` body the fused engine "
+                "embeds")
+
+    for name, factory in api.SYNC_POLICIES.items():
+        p = factory()
+        methods(p, "SYNC_POLICIES", name, "init_state", "update",
+                "should_sync", "round_delta", "epochs_budget")
+        require(p, "SYNC_POLICIES", name, hasattr(p, "divergence_gated"),
+                "missing `divergence_gated` attribute")
+        require(p, "SYNC_POLICIES", name,
+                callable(getattr(p, "traced_should_sync", None)),
+                "missing the traced `traced_should_sync` gate")
+        kw(p, "SYNC_POLICIES", name, "update", "events")
+        kw(p, "SYNC_POLICIES", name, "should_sync", "delta")
+        kw(p, "SYNC_POLICIES", name, "round_delta", "events")
+
+    for name, factory in topology.TOPOLOGIES.items():
+        t = factory()
+        methods(t, "TOPOLOGIES", name, "adjacency", "mixing_matrix",
+                "edge_perms", "spectral_gap", "validate", "period")
+        require(t, "TOPOLOGIES", name, hasattr(t, "time_varying"),
+                "missing `time_varying` attribute")
+        kw(t, "TOPOLOGIES", name, "mixing_matrix", "live")
+
+    for name, cls in stream.DRIFTS.items():
+        d = cls()
+        methods(d, "DRIFTS", name, "transform")
+        require(d, "DRIFTS", name, hasattr(d, "is_static"),
+                "missing `is_static` attribute")
+        for arg in ("x", "y", "round_i", "seed"):
+            kw(d, "DRIFTS", name, "transform", arg)
+
+    for name, factory in membership.CHURN_SCHEDULES.items():
+        c = factory()
+        methods(c, "CHURN_SCHEDULES", name, "live_mask")
+        require(c, "CHURN_SCHEDULES", name, hasattr(c, "is_static"),
+                "missing `is_static` attribute")
+
+    return findings
+
+
+# -- TL006: state-key consistency --------------------------------------------
+
+#: state keys that are legitimately in-memory only: the round log is
+#: re-derived (checkpoint meta persists the controller history; the
+#: benchmarks serialize their own records)
+EPHEMERAL_KEYS = frozenset({"log"})
+#: per-participant (K, ...) slots that crash handling must reset and the
+#: liveness freeze must carry per-row
+PER_SLOT_KEYS = frozenset({"params", "opt", "residual"})
+
+
+def _state_keys(tree):
+    """String keys accessed as state["…"] / state.get("…")."""
+    keys = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "state"
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            keys.add(node.slice.value)
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "get"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "state"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            keys.add(node.args[0].value)
+    return keys
+
+
+def _function_source_keys(tree, fn_name):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == fn_name:
+            return _state_keys(node)
+    return None
+
+
+def _class_state_keys(tree, class_names):
+    """Keys accessed on the LEARNER state inside the named classes only —
+    other ``state`` locals (e.g. an aggregator's round-state sub-dict)
+    are a different namespace."""
+    keys = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name in class_names:
+            keys |= _state_keys(node)
+    return keys
+
+
+def check_state_keys(threaded, io_keys, restart_keys, runner_keys,
+                     io_path="src/repro/checkpoint/io.py",
+                     colearn_path="src/repro/core/colearn.py"):
+    """Pure core of TL006 (unit-tested on fabricated key sets).
+
+    ``threaded``: keys the engines read/write on ``state``; ``io_keys``:
+    keys checkpoint save/restore handles; ``restart_keys``: keys
+    ``restart_participant`` resets; ``runner_keys``: keys the runners'
+    select-live / finish-round plumbing touches.
+    """
+    findings = []
+    for key in sorted(threaded - io_keys - EPHEMERAL_KEYS):
+        findings.append(Finding(
+            "TL006", io_path, 1,
+            f"engines thread state[{key!r}] but checkpoint save/restore "
+            "never handles it: a resumed run silently drops it. Persist "
+            "it (or add it to tracelint's EPHEMERAL_KEYS with a reason)."))
+    for key in sorted((threaded & PER_SLOT_KEYS) - restart_keys):
+        findings.append(Finding(
+            "TL006", colearn_path, 1,
+            f"per-participant state[{key!r}] is threaded but "
+            "`restart_participant` does not reset it: a restarted slot "
+            "would resume with stale per-slot memory."))
+    for key in sorted((threaded & PER_SLOT_KEYS) - runner_keys):
+        findings.append(Finding(
+            "TL006", colearn_path, 1,
+            f"per-participant state[{key!r}] is threaded but the round "
+            "runners' select-live plumbing never touches it: dead slots "
+            "would not carry it through a sync."))
+    return findings
+
+
+def check_project_state_keys():
+    import inspect
+
+    from repro.checkpoint import io as ckpt_io
+    from repro.core import api, colearn
+
+    def tree_of(mod):
+        path = inspect.getsourcefile(mod)
+        with open(path) as fh:
+            t = ast.parse(fh.read(), filename=path)
+        return path, t
+
+    colearn_path, colearn_tree = tree_of(colearn)
+    api_path, api_tree = tree_of(api)
+    io_path, io_tree = tree_of(ckpt_io)
+
+    runner_keys = _class_state_keys(api_tree,
+                                    {"_PythonRunner", "_FusedRunner"})
+    threaded = _state_keys(colearn_tree) | runner_keys
+    io_keys = (_function_source_keys(io_tree, "save_round_state") or set()) \
+        | (_function_source_keys(io_tree, "restore_round_state") or set())
+    restart_keys = _function_source_keys(
+        colearn_tree, "restart_participant") or set()
+    return check_state_keys(threaded, io_keys, restart_keys, runner_keys,
+                            io_path=io_path, colearn_path=colearn_path)
+
+
+# -- driver ------------------------------------------------------------------
+
+def run_paths(paths, baseline: str = DEFAULT_BASELINE,
+              project_rules: bool = True):
+    """All unsuppressed findings not covered by the baseline."""
+    findings = []
+    for path in iter_py_files(paths):
+        findings.extend(lint_file(path))
+    if project_rules:
+        findings.extend(check_registries())
+        findings.extend(check_project_state_keys())
+    known = load_baseline(baseline) if baseline else set()
+    return [f for f in findings if f.key() not in known]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tracelint",
+        description="static analysis for the traced-data discipline")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--no-project-rules", action="store_true",
+                    help="skip the import-based rules (TL005/TL006)")
+    args = ap.parse_args(argv)
+    findings = run_paths(args.paths, baseline=args.baseline,
+                         project_rules=not args.no_project_rules)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"tracelint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"tracelint: clean ({', '.join(sorted(RULES))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

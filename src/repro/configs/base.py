@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Tuple
 
 # A layer pattern entry is "<mixer>:<ffn>" where
 #   mixer ∈ {gqa, mla, mamba, slstm, mlstm}
 #   ffn   ∈ {dense, moe, moe_dense, -}   (moe_dense = MoE in parallel with a
 #                                         dense FFN residual, as in Arctic)
-Segment = Tuple[Tuple[str, ...], int]  # (pattern, repeats)
+Segment = tuple[tuple[str, ...], int]  # (pattern, repeats)
 
 
 @dataclass(frozen=True)
@@ -27,7 +26,7 @@ class ModelConfig:
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    segments: Tuple[Segment, ...] = ()   # derived: default all gqa:dense
+    segments: tuple[Segment, ...] = ()   # derived: default all gqa:dense
     head_dim: int = 0                    # 0 => d_model // n_heads
     qkv_bias: bool = False
     norm_eps: float = 1e-5

@@ -80,7 +80,8 @@ import abc
 import dataclasses
 import inspect
 import math
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -630,7 +631,7 @@ class FullAverage(Aggregator):
     psums the weight-scaled local rows.
     """
 
-    weights: Optional[tuple] = None
+    weights: tuple | None = None
     name = "full"
 
     @property
@@ -736,7 +737,7 @@ class PartialParticipation(Aggregator):
     """
 
     m: int = 2
-    weights: Optional[tuple] = None
+    weights: tuple | None = None
     seed: int = 0
     name = "partial"
 
@@ -1229,10 +1230,12 @@ class LRSchedule(abc.ABC):
         """Host hook: ``(kind, (p0, p1, p2, p3))`` for ``switch_lr``."""
 
     def device_round_params(self, round_i):
-        """``round_params`` as the traced argument pack the engine takes."""
+        """``round_params`` as the traced argument pack the engine takes
+        (staged explicitly — it lands on the no_transfer round path)."""
         kind, p = self.round_params(round_i)
         p = tuple(p) + (0.0,) * (N_SCHED_PARAMS - len(p))
-        return {"kind": jnp.int32(kind), "p": jnp.asarray(p, jnp.float32)}
+        return {"kind": engine_mod.stage(kind, np.int32),
+                "p": engine_mod.stage(p, np.float32)}
 
 
 def traced_body(schedule: LRSchedule):
@@ -1455,7 +1458,7 @@ class DivergenceTrigger(SyncPolicy):
     """
 
     delta: float = 0.05
-    epsilon: Optional[float] = None
+    epsilon: float | None = None
     name = "divtrigger"
     divergence_gated = True
 
@@ -1568,7 +1571,7 @@ class _PythonRunner:
         # as traced data (None on the static path — bit-identical)
         live_np = learner._live_np(state)
         live_row = (None if live_np is None
-                    else jnp.asarray(live_np, jnp.float32))
+                    else engine_mod.stage(live_np, np.float32))
         lrs, losses = [], []
         for j in range(T_i):
             lr = float(learner.schedule.lr(i, j, T_i, ge0 + j, total))
@@ -1691,13 +1694,18 @@ class _FusedRunner:
         gated = self._gated
         i = state["round"]
         T_i = state["ctrl"].T
-        ge0 = jnp.int32(state["global_epoch"])
+        # per-round host quantities are staged EXPLICITLY (device_put via
+        # engine_mod.stage): an implicit transfer here — jnp.int32 on a
+        # python scalar, numpy riding into the donated call — is exactly
+        # what guards.no_transfer() pins the round loop against
+        ge0 = engine_mod.stage(state["global_epoch"], np.int32)
         sched = learner.schedule.device_round_params(i)
-        total = jnp.int32(learner.epochs_budget(state))
+        total = engine_mod.stage(learner.epochs_budget(state), np.int32)
         agg_w = learner.round_weights(i, state)
         if gated:
             sync_ref = learner._sync_ref(state)
-            delta = jnp.float32(learner._round_delta(state))
+            delta = engine_mod.stage(learner._round_delta(state),
+                                     np.float32)
         div_dev, sync_dev = None, True
         # the ragged-shard validity mask rides in traced right after the
         # staged batches (absent entirely on the unmasked executables);
@@ -1705,7 +1713,7 @@ class _FusedRunner:
         mask_args = (learner.batch_mask,) if self._masked else ()
         live_np = learner._live_np(state)
         if self._live:
-            live_row = jnp.asarray(live_np, jnp.float32)
+            live_row = engine_mod.stage(live_np, np.float32)
             mask_args = mask_args + (live_row,)
         # state["params"]/["opt"] are reassigned immediately after every
         # donating call below, so an exception mid-round (e.g. from
@@ -1753,7 +1761,8 @@ class _FusedRunner:
                     [epoch_batches_fn(i, j) for j in range(j0, j0 + C)])
                 params, opt_st, l, r = self._epochs(
                     state["params"], state["opt"], batches, *mask_args,
-                    jnp.int32(j0), jnp.int32(T_i), ge0, sched, total)
+                    engine_mod.stage(j0, np.int32),
+                    engine_mod.stage(T_i, np.int32), ge0, sched, total)
                 state["params"], state["opt"] = params, opt_st
                 lparts.append(l)
                 rparts.append(r)

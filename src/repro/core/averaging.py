@@ -29,8 +29,27 @@ def stack_participants(params, K: int):
     return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (K, *t.shape)), params)
 
 
-def unstack_participant(stacked, k: int):
+@jax.jit
+def _gather_slot(stacked, k):
     return jax.tree.map(lambda t: t[k], stacked)
+
+
+def unstack_participant(stacked, k: int):
+    """Slot k of a stacked (K, ...) pytree.
+
+    Inside a trace the python int stays a static slice. Eager calls go
+    through a jitted gather with the index staged explicitly: an eager
+    python-int slice dispatches dynamic_slice with implicitly-transferred
+    start scalars, which trips ``guards.no_transfer()`` on the round loop.
+    The index is traced, so the gather compiles once per params geometry.
+    """
+    leaves = jax.tree.leaves(stacked)
+    if leaves and isinstance(leaves[0], jax.core.Tracer):
+        return jax.tree.map(lambda t: t[k], stacked)
+    if not isinstance(k, jax.Array):
+        import numpy as np
+        k = jax.device_put(np.int32(k))
+    return _gather_slot(stacked, k)
 
 
 def average_pjit(stacked):

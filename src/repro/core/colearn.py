@@ -46,7 +46,8 @@ tests/test_api.py, and tests/test_policies.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -179,13 +180,28 @@ class CoLearner:
         self._aggregate_fn = self.aggregator.make_aggregate_fn(
             self.codec, dynamic=self._churn_active and self.liveness_aware)
         self._comm_cache = None
+
+        # crash/join handling as ONE jitted row write (traced slot index:
+        # one executable per params geometry, zero per-slot recompiles).
+        # Eager .at[k].set dispatches scatters whose index scalars are
+        # implicit H2D — restarts fire mid-round-loop, inside no_transfer.
+        def _restart_row(stacked, opt_state, shared, k):
+            new_p = jax.tree.map(lambda t, s: t.at[k].set(s),
+                                 stacked, shared)
+            fresh = self.opt.init(shared)
+            new_o = jax.tree.map(lambda o, f: o.at[k].set(f),
+                                 opt_state, fresh)
+            return new_p, new_o
+        self._jit_restart = jax.jit(_restart_row)
+        self._jit_zero_row = jax.jit(
+            lambda tree, k: jax.tree.map(lambda e: e.at[k].set(0.0), tree))
         self._runner = self.round_engine.bind(self)
 
     @classmethod
     def from_flags(cls, cfg, loss_fn, *, optimizer_name: str = "sgd",
-                   compress_fn: Optional[Callable] = None,
+                   compress_fn: Callable | None = None,
                    engine: str = "python", fused_chunk: int = 32,
-                   compress: Optional[str] = None, compress_block: int = 256,
+                   compress: str | None = None, compress_block: int = 256,
                    compress_impl: str = "ref", aggregator=None):
         """The pre-PR-3 flag surface, mapped onto strategy objects.
 
@@ -302,13 +318,13 @@ class CoLearner:
         if self._churn_active and self.liveness_aware:
             live = (state["membership"].live_mask() if state is not None
                     else None)
-            return jnp.asarray(self.aggregator.mixing_matrix(
+            return engine_mod.stage(self.aggregator.mixing_matrix(
                 round_index, self.cfg.n_participants, live=live),
-                jnp.float32)
+                np.float32)
         if not self.aggregator.uses_weights:
             return None
-        return jnp.asarray(self.aggregator.mixing_matrix(
-            round_index, self.cfg.n_participants), jnp.float32)
+        return engine_mod.stage(self.aggregator.mixing_matrix(
+            round_index, self.cfg.n_participants), np.float32)
 
     def _live_np(self, state):
         """The round's bool (K,) liveness row (None on the static path —
@@ -472,15 +488,12 @@ class CoLearner:
         trajectory instead of the shared model the contract promises.
         """
         shared = self._sync_ref(state)
-        state["params"] = jax.tree.map(
-            lambda t, s: t.at[k].set(s), state["params"], shared)
-        fresh = self.opt.init(shared)
-        state["opt"] = jax.tree.map(
-            lambda o, f: o.at[k].set(f), state["opt"], fresh)
+        k_dev = engine_mod.stage(k, np.int32)
+        state["params"], state["opt"] = self._jit_restart(
+            state["params"], state["opt"], shared, k_dev)
         if self._round_stateful and state.get("residual") is not None:
             # restart also forgets the round-state memory (quantization
             # error residual and/or D² correction): it tracked a
             # trajectory that no longer exists
-            state["residual"] = jax.tree.map(
-                lambda e: e.at[k].set(0.0), state["residual"])
+            state["residual"] = self._jit_zero_row(state["residual"], k_dev)
         return state

@@ -98,6 +98,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import averaging, flatbuf
@@ -107,10 +108,30 @@ from repro.kernels import ops as kops
 from repro.optim.optimizers import apply_updates
 
 
+def stage(value, dtype=None):
+    """Explicitly stage a host value (python scalar / numpy array) onto
+    device — the one kind of H2D ``analysis.guards.no_transfer`` allows.
+    Device arrays pass through untouched, so staging is idempotent."""
+    if isinstance(value, jax.Array):
+        return value
+    return jax.device_put(np.asarray(value, dtype))
+
+
 def stack_epoch_batches(per_epoch):
     """Stack a list of per-epoch (K, n_batches, ...) pytrees along a new
-    leading epoch axis — the shape the fused epoch scan consumes."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_epoch)
+    leading epoch axis — the shape the fused epoch scan consumes.
+
+    Host (numpy) leaves are stacked host-side and staged with ONE
+    explicit ``jax.device_put`` per leaf — the round's designated staging
+    transfer, legal under ``analysis.guards.no_transfer()``. A
+    device-resident stack (``jnp.stack`` over numpy inputs) would instead
+    issue an *implicit* transfer per epoch per leaf. Device-resident
+    inputs stack on device untouched."""
+    def stack(*xs):
+        if all(isinstance(x, np.ndarray) for x in xs):
+            return jax.device_put(np.stack(xs))
+        return jnp.stack(xs)
+    return jax.tree.map(stack, *per_epoch)
 
 
 def select_live(live_row, new, old):

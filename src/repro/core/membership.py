@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -190,7 +189,7 @@ class ScriptedChurn(ChurnSchedule):
 
     events: tuple = ()
     flaky: tuple = ()
-    initial_live: Optional[int] = None
+    initial_live: int | None = None
     name = "scripted"
 
     def __post_init__(self):
@@ -246,7 +245,7 @@ class RandomChurn(ChurnSchedule):
     p_fail: float = 0.2
     p_join: float = 0.5
     seed: int = 0
-    initial_live: Optional[int] = None
+    initial_live: int | None = None
     name = "random"
 
     def __post_init__(self):

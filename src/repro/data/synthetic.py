@@ -14,7 +14,7 @@ def _teacher_warp(rng, x, width=64, depth=2):
     """Fixed random MLP warp so classes are not linearly separable."""
     d = x.shape[-1]
     h = x
-    for i in range(depth):
+    for _ in range(depth):
         w = rng.normal(size=(h.shape[-1], width)) / np.sqrt(h.shape[-1])
         h = np.tanh(h @ w)
     w = rng.normal(size=(width, d)) / np.sqrt(width)

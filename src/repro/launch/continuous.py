@@ -127,7 +127,7 @@ def main(argv=None):
           f"drift={drift.name} sync={learner.sync_policy.name} "
           f"publish_on={args.publish_on} engine={args.engine}", flush=True)
 
-    for i in range(args.rounds):
+    for _ in range(args.rounds):
         t0 = time.time()
 
         def epoch_batches(round_i, epoch_j):

@@ -360,7 +360,7 @@ def main(argv=None):
           f"aggregator={learner.aggregator.name} "
           f"partition={args.partition}{shard_s}", flush=True)
 
-    for i in range(args.rounds):
+    for _ in range(args.rounds):
         t0 = time.time()
 
         def epoch_batches(round_i, epoch_j):

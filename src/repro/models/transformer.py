@@ -234,7 +234,8 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
         for j, kind in enumerate(pattern):
             one = layer_cache_init(kind, cfg, batch, seq_len, dtype)
             seg[f"p{j}"] = jax.tree.map(
-                lambda t: jnp.broadcast_to(t[None], (repeats, *t.shape)), one)
+                lambda t, _r=repeats: jnp.broadcast_to(t[None], (_r, *t.shape)),
+                one)
         caches.append(seg)
     return caches
 

@@ -30,7 +30,7 @@ import glob
 import json
 import os
 import time
-from typing import Any, Optional
+from typing import Any
 
 import jax
 
@@ -60,7 +60,7 @@ class ModelBank:
     """Monotonic-versioned model publication with atomic swap."""
 
     def __init__(self, mode: str = "shared", publish_on: str = "synced",
-                 dir: Optional[str] = None):
+                 dir: str | None = None):
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; want one of {MODES}")
         if publish_on not in ("synced", "always"):
@@ -69,7 +69,7 @@ class ModelBank:
         self.mode = mode
         self.publish_on = publish_on
         self.dir = dir
-        self._current: Optional[ModelSnapshot] = None
+        self._current: ModelSnapshot | None = None
 
     # -- write side ---------------------------------------------------------
     def publish(self, params, *, round_i: int, global_epoch: int = 0,
@@ -85,7 +85,7 @@ class ModelBank:
         self._current = snap
         return snap
 
-    def publish_from(self, learner, state) -> Optional[ModelSnapshot]:
+    def publish_from(self, learner, state) -> ModelSnapshot | None:
         """The ``CoLearner.run_round(on_round_end=...)`` hook: snapshot
         the learner's round-``state`` into the bank.
 
@@ -103,7 +103,7 @@ class ModelBank:
                             synced=synced)
 
     # -- read side ----------------------------------------------------------
-    def current(self) -> Optional[ModelSnapshot]:
+    def current(self) -> ModelSnapshot | None:
         return self._current
 
     @property

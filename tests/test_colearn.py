@@ -71,8 +71,8 @@ def test_k1_colearn_equals_plain_sgd():
     for j in range(2):
         lr = clr_lr(0.05, 0.25, j, 2)
         for b in range(3):
-            g = jax.grad(lambda q: tiny_loss(
-                q, (batches[0][0, b], batches[1][0, b]))[0])(p)
+            g = jax.grad(lambda q, _b=b: tiny_loss(
+                q, (batches[0][0, _b], batches[1][0, _b]))[0])(p)
             p = jax.tree.map(lambda a, d: a - lr * d, p, g)
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(p)):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

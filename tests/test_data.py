@@ -251,13 +251,13 @@ def test_masked_step_is_identity_carry(engine):
         p = tiny_params()
         m = jax.tree.map(lambda t: jnp.zeros_like(t), p)
         for s in range(n_valid):
-            g = jax.grad(lambda q: tiny_loss(
-                q, (b[0][k, s], b[1][k, s]))[0])(p)
+            g = jax.grad(lambda q, _k=k, _s=s: tiny_loss(
+                q, (b[0][_k, _s], b[1][_k, _s]))[0])(p)
             m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
             p = jax.tree.map(lambda a, mm: a - lr * mm, p, m)
-        got = jax.tree.map(lambda t: t[k], stacked)
+        got = jax.tree.map(lambda t, _k=k: t[_k], stacked)
         assert max_abs_diff(got, p) <= 1e-5, k
-        got_m = jax.tree.map(lambda t: t[k], opt)
+        got_m = jax.tree.map(lambda t, _k=k: t[_k], opt)
         assert max_abs_diff(got_m, m) <= 1e-5, k
 
 

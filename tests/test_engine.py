@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import guards
 from repro.configs.base import CoLearnConfig
 from repro.core import engine as engine_mod
 from repro.core.colearn import CoLearner
@@ -251,7 +252,8 @@ def test_fused_chunk_executable_reused_across_T_doubling():
         state = learner.run_round(state, lambda i, j: b)
     # T trajectory 2,2,4,8: rounds 3-4 use the chunked path with C=2 only
     assert [l.T for l in state["log"]] == [2, 2, 4, 8]
-    assert learner._fused_epochs._cache_size() == 1
+    guards.assert_compile_count(learner._fused_epochs, 1,
+                                "chunk executable")
 
 
 def test_fused_single_round_recompiles_only_on_T_change():
@@ -264,5 +266,6 @@ def test_fused_single_round_recompiles_only_on_T_change():
     b = tiny_batches(2, 2, 4)
     for _ in range(3):
         state = learner.run_round(state, lambda i, j: b)
-    sizes = learner._fused_round._cache_size()
-    assert sizes == 1, sizes  # T never doubled (epsilon=0) => one executable
+    # T never doubled (epsilon=0) => one executable
+    guards.assert_compile_count(learner._fused_round, 1,
+                                "round executable")

@@ -54,7 +54,7 @@ def test_testbed_models_forward_and_grad(models, data):
         assert logits.shape[0] == 4 and bool(jnp.isfinite(logits).all()), name
         # params must be a pure array pytree (strings break stacking)
         assert all(hasattr(t, "dtype") for t in jax.tree.leaves(p)), name
-        g = jax.grad(lambda q: apply_fn(q, xb).sum())(p)
+        g = jax.grad(lambda q, _f=apply_fn: _f(q, xb).sum())(p)
         assert all(bool(jnp.isfinite(t).all()) for t in jax.tree.leaves(g)), name
 
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import guards
 from repro.configs.base import CoLearnConfig
 from repro.core import api
 from repro.core.colearn import CoLearner
@@ -398,7 +399,8 @@ def test_set_schedule_hot_swaps_without_retrace():
     state = learner.run_round(state, lambda i, j: b)
     learner.set_schedule(api.ELR(eta0=0.02))
     state = learner.run_round(state, lambda i, j: b)
-    assert learner._fused_round._cache_size() == 1
+    guards.assert_compile_count(learner._fused_round, 1,
+                                "round executable")
     # the swaps took effect: cosine ends above CLR's r^((T-1)/T) tail, ELR
     # starts below eta0 (mid-anneal)
     lrs = [(l.lr_first, l.lr_last) for l in state["log"]]
